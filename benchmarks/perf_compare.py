@@ -1,0 +1,50 @@
+"""Render the §Perf before/after comparison: baseline (frozen) vs the
+optimized dry-run cache, per cell, with deltas.
+
+PYTHONPATH=src python -m benchmarks.perf_compare
+"""
+from __future__ import annotations
+
+import json
+import os
+
+HERE = os.path.join(os.path.dirname(__file__), "..", "experiments")
+
+
+def _rows(path, mesh="pod1_16x16"):
+    with open(path) as f:
+        cache = json.load(f)
+    out = {}
+    for row in cache.values():
+        if row.get("mesh") == mesh and row.get("status") == "ok":
+            out[(row["arch"], row["shape"])] = row
+    return out
+
+
+def run():
+    base = _rows(os.path.join(HERE, "dryrun_baseline.json"))
+    opt = _rows(os.path.join(HERE, "dryrun_cache.json"))
+    rows = []
+    print(f"{'cell':34s} {'t_mem b->o':>18s} {'t_coll b->o':>18s} "
+          f"{'GiB b->o':>14s} {'roofl b->o':>14s}")
+    for key in sorted(base):
+        b = base[key]
+        o = opt.get(key)
+        if o is None:
+            continue
+        cell = f"{key[0]} x {key[1]}"
+        same = abs(o.get("t_memory_s", 0) - b.get("t_memory_s", 0)) < 1e-12
+        mark = "" if not same else "  (=baseline)"
+        print(f"{cell:34s} "
+              f"{b['t_memory_s']:8.2e}->{o['t_memory_s']:8.2e} "
+              f"{b['t_collective_s']:8.2e}->{o['t_collective_s']:8.2e} "
+              f"{b['bytes_per_device_gib']:6.1f}->"
+              f"{o['bytes_per_device_gib']:6.1f} "
+              f"{b['roofline_frac']:6.3f}->{o['roofline_frac']:6.3f}"
+              + mark)
+        rows.append({"cell": cell, "base": b, "opt": o})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,80 @@
+"""Render the §Roofline table (EXPERIMENTS.md) from the dry-run cache.
+
+PYTHONPATH=src python -m benchmarks.roofline_table [--mesh pod1_16x16]
+[--markdown]
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+
+CACHE = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                     "dryrun_cache.json")
+
+COLS = ["arch", "shape", "t_compute_s", "t_memory_s", "t_collective_s",
+        "dominant", "useful_flop_frac", "roofline_frac",
+        "bytes_per_device_gib", "fits_hbm", "collectives"]
+
+
+def load_rows(mesh: str = "pod1_16x16", policy: str | None = None):
+    with open(CACHE) as f:
+        cache = json.load(f)
+    rows = []
+    for key, row in cache.items():
+        if row.get("mesh") != mesh or row.get("status") != "ok":
+            continue
+        if policy is not None and f"|{policy}" not in key:
+            continue
+        rows.append(row)
+    rows.sort(key=lambda r: (r["arch"], r["shape"]))
+    return rows
+
+
+def render(rows, markdown: bool = False) -> str:
+    out = []
+    if markdown:
+        hdr = ("| arch | shape | t_comp | t_mem | t_coll | dominant | "
+               "useful | roofline | GiB/dev | fits |")
+        out.append(hdr)
+        out.append("|" + "---|" * 10)
+        for r in rows:
+            out.append(
+                f"| {r['arch']} | {r['shape']} | {r['t_compute_s']:.2e} | "
+                f"{r['t_memory_s']:.2e} | {r['t_collective_s']:.2e} | "
+                f"{r['dominant']} | {r['useful_flop_frac']:.2f} | "
+                f"{r['roofline_frac']:.3f} | "
+                f"{r['bytes_per_device_gib']:.2f} | "
+                f"{'y' if r.get('fits_hbm') else 'N'} |")
+    else:
+        out.append(f"{'arch':20s} {'shape':12s} {'t_comp':>9s} {'t_mem':>9s}"
+                   f" {'t_coll':>9s} {'dom':>6s} {'useful':>7s}"
+                   f" {'roofl':>6s} {'GiB/dev':>8s} fits")
+        for r in rows:
+            out.append(
+                f"{r['arch']:20s} {r['shape']:12s} "
+                f"{r['t_compute_s']:9.2e} {r['t_memory_s']:9.2e} "
+                f"{r['t_collective_s']:9.2e} {r['dominant'][:6]:>6s} "
+                f"{r['useful_flop_frac']:7.2f} {r['roofline_frac']:6.3f} "
+                f"{r['bytes_per_device_gib']:8.2f} "
+                f"{'y' if r.get('fits_hbm') else 'N'}")
+    return "\n".join(out)
+
+
+def run():
+    rows = load_rows()
+    print(render(rows))
+    return rows
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--mesh", default="pod1_16x16")
+    ap.add_argument("--markdown", action="store_true")
+    args = ap.parse_args()
+    rows = load_rows(args.mesh)
+    print(render(rows, markdown=args.markdown))
+
+
+if __name__ == "__main__":
+    main()

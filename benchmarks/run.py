@@ -1,0 +1,72 @@
+"""Benchmark orchestrator — one suite per paper table/figure.
+
+PYTHONPATH=src python -m benchmarks.run [--only fig8,table5] [--skip table4]
+
+Each suite prints its own comparison against the paper's reported numbers
+and returns row dicts; a summary lands at the end. The dry-run roofline
+table (EXPERIMENTS.md §Roofline) is built separately by
+benchmarks.roofline_table from the cached dry-run sweep.
+"""
+from __future__ import annotations
+
+import argparse
+import importlib
+import time
+import traceback
+
+SUITES = [
+    ("table4", "benchmarks.table4_accuracy",
+     "Table IV  — accuracy ladder FP32/Q8/Q8+SC"),
+    ("table5", "benchmarks.table5_calibration",
+     "Table V   — per-component calibration accuracy"),
+    ("fig2", "benchmarks.fig2_breakdown",
+     "Fig 2     — conventional-PIM time breakdown"),
+    ("fig7", "benchmarks.fig7_momcap",
+     "Fig 7     — MOMCAP accumulation linearity"),
+    ("fig8", "benchmarks.fig8_dataflow",
+     "Fig 8     — dataflow x pipelining sensitivity"),
+    ("fig9_11", "benchmarks.fig9_11_comparison",
+     "Figs 9-11 — platform comparison (published anchors)"),
+    ("fig12", "benchmarks.fig12_scalability",
+     "Fig 12    — sequence-length scalability"),
+    ("kernels", "benchmarks.kernel_micro",
+     "Kernels   — Pallas vs oracle + ladder accuracy"),
+    ("collectives", "benchmarks.collective_bytes",
+     "Beyond    — token vs layer dataflow in lowered HLO"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--only", default=None,
+                    help="comma-separated suite names")
+    ap.add_argument("--skip", default=None)
+    args = ap.parse_args()
+    only = set(args.only.split(",")) if args.only else None
+    skip = set(args.skip.split(",")) if args.skip else set()
+
+    results = {}
+    for name, module, desc in SUITES:
+        if only is not None and name not in only:
+            continue
+        if name in skip:
+            continue
+        print(f"\n{'='*72}\n{desc}\n{'='*72}")
+        t0 = time.time()
+        try:
+            mod = importlib.import_module(module)
+            rows = mod.run()
+            results[name] = ("ok", len(rows or []), time.time() - t0)
+        except Exception as e:
+            traceback.print_exc()
+            results[name] = ("FAIL: " + str(e)[:80], 0, time.time() - t0)
+
+    print(f"\n{'='*72}\nSUMMARY\n{'='*72}")
+    for name, (status, n, dt) in results.items():
+        print(f"  {name:12s} {status:12s} {n:4d} rows {dt:7.1f}s")
+    if any(v[0].startswith("FAIL") for v in results.values()):
+        raise SystemExit(1)
+
+
+if __name__ == "__main__":
+    main()

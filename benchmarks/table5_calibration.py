@@ -1,0 +1,119 @@
+"""Table V reproduction: per-component calibration accuracy.
+
+For each approximate block (stochastic MUL, analog ACC, A_to_B, softmax)
+we measure MAE / max error normalized to the block's full scale, plus the
+paper's "calibration accuracy" metric. Reverse-engineering Table V shows
+calibration accuracy == -log2(MAE) exactly (2^-4.68 = 0.039,
+2^-6.88 = 0.0085, 2^-11.38 = 0.00037), so we report that.
+
+Our deterministic implementation gives the IDEAL-DIGITAL error floor; the
+paper's values are SPICE-measured and include analog non-idealities. The
+`sigma_analog` knob reproduces the paper's ACC row when set to
+MAE_paper / sqrt(2/pi) (Gaussian readout noise); the MUL gap (ours 10x
+lower) is the analog AND margin we deliberately do not model — recorded
+in EXPERIMENTS.md §Table V.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (
+    MomcapConfig, artemis_softmax, readout_quantize, sc_multiply,
+)
+
+
+def _calib(mae: float) -> float:
+    return -math.log2(max(mae, 1e-12))
+
+
+def mul_errors() -> dict:
+    """Stochastic MUL over the full 128x128 operand square (exact sweep)."""
+    a = jnp.arange(128)
+    b = jnp.arange(128)
+    prod_exact = (a[:, None] * b[None, :]).astype(jnp.float32) / 128.0
+    prod_sc = sc_multiply(a[:, None], b[None, :]).astype(jnp.float32)
+    err = jnp.abs(prod_sc - prod_exact) / 127.0   # normalize to full scale
+    mae = float(jnp.mean(err))
+    return {"mae": mae, "max": float(jnp.max(err)), "calib_bits": _calib(mae)}
+
+
+def acc_errors(n_trials: int = 4096, sigma: float = 0.0) -> dict:
+    """Analog ACC: group-of-20 accumulation + 8-bit quantizing readout,
+    optional Gaussian analog noise (the paper's measured non-ideality)."""
+    cfg = MomcapConfig(acc_depth=20, readout_bits=8, sigma_analog=sigma)
+    key = jax.random.PRNGKey(0)
+    prods = jax.random.randint(key, (n_trials, 20), 0, 128)
+    exact = jnp.sum(prods, axis=-1).astype(jnp.float32)
+    ro = readout_quantize(exact, cfg,
+                          jax.random.PRNGKey(1) if sigma > 0 else None)
+    err = jnp.abs(ro - exact) / cfg.full_scale
+    mae = float(jnp.mean(err))
+    return {"mae": mae, "max": float(jnp.max(err)), "calib_bits": _calib(mae)}
+
+
+def a_to_b_errors() -> dict:
+    """A_to_B ladder: comparator-ladder quantization of one analog value
+    (the conversion path alone, fine input grid)."""
+    cfg = MomcapConfig(acc_depth=20, readout_bits=8)
+    xs = jnp.linspace(0.0, cfg.full_scale, 100001)
+    ro = readout_quantize(xs, cfg)
+    err = jnp.abs(ro - xs) / cfg.full_scale
+    mae = float(jnp.mean(err))
+    return {"mae": mae, "max": float(jnp.max(err)), "calib_bits": _calib(mae)}
+
+
+def softmax_errors(n_trials: int = 64) -> dict:
+    key = jax.random.PRNGKey(1)
+    y = jax.random.normal(key, (n_trials, 64)) * 4.0
+    ref = jax.nn.softmax(y, axis=-1)
+    lut = artemis_softmax(y, axis=-1, n_in=256, out_bits=8)
+    err = jnp.abs(lut - ref)                      # prob units = full scale
+    mae = float(jnp.mean(err))
+    return {"mae": mae, "max": float(jnp.max(err)), "calib_bits": _calib(mae)}
+
+
+PAPER = {
+    "Stochastic MUL": (0.039, 0.123, 4.68),
+    "Analog ACC": (0.0085, 0.0729, 6.88),
+    "A_to_B": (0.00037, 0.00062, 11.38),
+    "Softmax": (0.0020, 0.0078, 8.20),
+}
+
+# Gaussian sigma that reproduces the paper's measured ACC MAE:
+# E|N(0, s)| = s*sqrt(2/pi) -> s = 0.0085 / 0.7979
+ACC_SIGMA_CALIBRATED = 0.0085 / math.sqrt(2.0 / math.pi)
+
+
+def run() -> list[dict]:
+    ours = {
+        "Stochastic MUL": mul_errors(),
+        "Analog ACC": acc_errors(),
+        "A_to_B": a_to_b_errors(),
+        "Softmax": softmax_errors(),
+    }
+    acc_cal = acc_errors(sigma=ACC_SIGMA_CALIBRATED)
+    rows = []
+    print(f"{'Block':18s} {'MAE':>9s} {'paper':>9s} {'Max':>9s} "
+          f"{'paper':>9s} {'Calib':>6s} {'paper':>6s}")
+    for name, o in ours.items():
+        p = PAPER[name]
+        print(f"{name:18s} {o['mae']:9.5f} {p[0]:9.5f} {o['max']:9.5f} "
+              f"{p[1]:9.5f} {o['calib_bits']:6.2f} {p[2]:6.2f}")
+        rows.append({"block": name, **o, "paper_mae": p[0],
+                     "paper_max": p[1], "paper_calib": p[2]})
+    print(f"{'ACC (noise-cal.)':18s} {acc_cal['mae']:9.5f} "
+          f"{PAPER['Analog ACC'][0]:9.5f} {acc_cal['max']:9.5f} "
+          f"{PAPER['Analog ACC'][1]:9.5f} {acc_cal['calib_bits']:6.2f} "
+          f"{PAPER['Analog ACC'][2]:6.2f}")
+    rows.append({"block": "Analog ACC (noise-calibrated)", **acc_cal,
+                 "paper_mae": PAPER["Analog ACC"][0],
+                 "paper_max": PAPER["Analog ACC"][1],
+                 "paper_calib": PAPER["Analog ACC"][2]})
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,43 @@
+"""Train a ~10M-param LM for a few hundred steps (end-to-end driver).
+
+Demonstrates: deterministic data pipeline, AdamW + cosine schedule,
+checkpoint/save/restore mid-run (the job literally restarts itself), and
+loss decreasing under both exact and ARTEMIS arithmetic.
+
+Run: PYTHONPATH=src python examples/train_tiny_lm.py [--steps 300]
+"""
+import argparse
+import shutil
+import tempfile
+
+from repro.launch.train import train
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3_8b")
+    ap.add_argument("--steps", type=int, default=300)
+    ap.add_argument("--policy", default="exact")
+    args = ap.parse_args()
+
+    ckpt = tempfile.mkdtemp(prefix="repro_ckpt_")
+    try:
+        half = args.steps // 2
+        print(f"=== phase 1: steps 0..{half} (then simulated preemption)")
+        out1 = train(arch=args.arch, smoke=True, steps=half,
+                     policy_mode=args.policy, ckpt_dir=ckpt,
+                     save_every=max(half // 2, 10))
+        print(f"\n=== phase 2: auto-resume -> step {args.steps}")
+        out2 = train(arch=args.arch, smoke=True, steps=args.steps,
+                     policy_mode=args.policy, ckpt_dir=ckpt,
+                     save_every=max(half // 2, 10))
+        print(f"\nloss: {out1['first_loss']:.3f} -> {out2['final_loss']:.3f}"
+              f" (policy={args.policy})")
+        assert out2["final_loss"] < out1["first_loss"], "loss did not drop"
+        print("OK — trained through a checkpoint/restart boundary")
+    finally:
+        shutil.rmtree(ckpt, ignore_errors=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+"""MOMCAP analog temporal accumulation — paper §III.A.2, §III.B, Fig 7.
+
+Each DRAM tile dumps the popcount of a stochastic product row as charge on a
+metal-on-metal capacitor.  Up to `acc_depth = 20` consecutive products
+accumulate per MOMCAP (an operational tile borrows its idle neighbour's cap,
+so a tile covers 40 MACs) before the analog value must be read out through
+the A_to_U comparator ladder + U_to_B priority encoder (31 ns).
+
+Numerically this is:
+  * exact integer sums of floor-products inside a group of `acc_depth`,
+  * a quantizing readout (`readout_bits` levels over the group full scale)
+    with optional zero-mean Gaussian analog noise (`sigma_analog`, expressed
+    as a fraction of full scale; paper Table V measures MAE 0.0085),
+  * signs handled by accumulating all-positive and all-negative products in
+    separate passes and subtracting in the NSC adder/subtractor (§III.C.1).
+
+The module also carries the device-level RC charge model used to reproduce
+Fig 7 (voltage staircase vs capacitance, max linear accumulations).
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import SC_LEVELS
+
+
+@dataclasses.dataclass(frozen=True)
+class MomcapConfig:
+    acc_depth: int = 20          # consecutive accumulations per MOMCAP
+    readout_bits: int | None = 8  # None -> ideal (no readout quantization)
+    sigma_analog: float = 0.0    # noise stddev, fraction of group full scale
+
+    @property
+    def full_scale(self) -> int:
+        """Group full scale in product units (each product <= 127)."""
+        return self.acc_depth * (SC_LEVELS - 1)
+
+
+def readout_quantize(
+    x: jax.Array, cfg: MomcapConfig, key: jax.Array | None = None
+) -> jax.Array:
+    """A_to_B conversion of an accumulated analog value (paper §III.B).
+
+    x: non-negative accumulated product sums, in product units (<= full_scale).
+    """
+    x = x.astype(jnp.float32)
+    if cfg.sigma_analog > 0.0:
+        if key is None:
+            raise ValueError("sigma_analog > 0 requires a PRNG key")
+        x = x + cfg.sigma_analog * cfg.full_scale * jax.random.normal(
+            key, x.shape, dtype=jnp.float32
+        )
+    if cfg.readout_bits is None:
+        return x
+    levels = 2**cfg.readout_bits - 1
+    delta = cfg.full_scale / levels
+    return jnp.clip(jnp.round(x / delta), 0, levels) * delta
+
+
+def grouped_signed_accumulate(
+    products: jax.Array,
+    signs: jax.Array,
+    cfg: MomcapConfig,
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Accumulate signed floor-products along the LAST axis, ARTEMIS-style.
+
+    products: int32/float magnitudes of SC products, shape (..., K).
+    signs:    {-1, 0, +1}, same shape.
+    Returns float32 (...,) — the NSC-reduced signed sum after per-group
+    MOMCAP readouts.
+    """
+    g = cfg.acc_depth
+    k = products.shape[-1]
+    pad = (-k) % g
+    if pad:
+        products = jnp.pad(products, [(0, 0)] * (products.ndim - 1) + [(0, pad)])
+        signs = jnp.pad(signs, [(0, 0)] * (signs.ndim - 1) + [(0, pad)])
+    ngroups = products.shape[-1] // g
+    p = products.reshape(products.shape[:-1] + (ngroups, g)).astype(jnp.float32)
+    s = signs.reshape(signs.shape[:-1] + (ngroups, g))
+
+    pos = jnp.sum(jnp.where(s > 0, p, 0.0), axis=-1)
+    neg = jnp.sum(jnp.where(s < 0, p, 0.0), axis=-1)
+    if cfg.sigma_analog > 0.0:
+        kp, kn = jax.random.split(key)
+    else:
+        kp = kn = None
+    pos_r = readout_quantize(pos, cfg, kp)
+    neg_r = readout_quantize(neg, cfg, kn)
+    # NSC binary reduction of per-group readouts (exact digital adds).
+    return jnp.sum(pos_r - neg_r, axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Device-level RC model (Fig 7 reproduction).
+# ---------------------------------------------------------------------------
+
+V_SAT = 1.1          # volts — bit-line/core supply rail
+# Charge per accumulation event, calibrated so the paper's chosen 8 pF
+# MOMCAP (tile-area-matched, 338 um^2) supports exactly 20 linear
+# accumulations (paper §IV.B).
+Q_STEP_FC = 22.0     # femto-coulombs per full 128-bit accumulation event
+LINEARITY = 0.95     # a step counts as "linear" while dv >= 95% of dv0
+
+
+def momcap_voltage_trace(c_pf: float, n_events: int) -> jnp.ndarray:
+    """Voltage staircase for n accumulation events on a c_pf MOMCAP.
+
+    Each event nominally adds dv0 = Q/C; as the cap charges toward the rail
+    the increment compresses by (1 - v/V_SAT) — the saturation visible in
+    paper Fig 7.
+    """
+    dv0 = (Q_STEP_FC * 1e-15) / (c_pf * 1e-12)
+
+    def step(v, _):
+        v_next = v + dv0 * (1.0 - v / V_SAT)
+        return v_next, v_next
+
+    _, trace = jax.lax.scan(step, 0.0, None, length=n_events)
+    return trace
+
+
+def max_linear_accumulations(c_pf: float) -> int:
+    """Number of accumulation steps before the increment falls below
+    LINEARITY * dv0 (closed form of the geometric compression)."""
+    dv0 = (Q_STEP_FC * 1e-15) / (c_pf * 1e-12)
+    x = dv0 / V_SAT
+    return int(math.floor(math.log(LINEARITY) / math.log(1.0 - x)))

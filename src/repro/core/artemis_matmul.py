@@ -1,0 +1,177 @@
+"""The ARTEMIS matmul emulation ladder — the paper's MAC pipeline end-to-end.
+
+For one output element, ARTEMIS computes (paper §III.A, §III.C.1):
+
+  1. quantize operands to signed 8-bit; magnitudes go to 128-level TCU
+     streams, signs to the per-row sign column;
+  2. multiply each operand pair with the deterministic TCU AND
+     -> floor(m_a * m_b / 128);
+  3. accumulate products on MOMCAPs in groups of `acc_depth` (=20),
+     positives and negatives in separate passes;
+  4. read each group out through the quantizing A_to_B ladder;
+  5. reduce group readouts (pos - neg) exactly in the NSC adders;
+  6. dequantize: result = signed_sum * 128 * s_a * s_b.
+
+Four modes (ArithmeticPolicy.mode):
+  exact        a @ b in float
+  int8         quantize, exact int32 dot, dequantize
+  artemis      the full pipeline above (scan over K-groups, VPU-style)
+  artemis_mxu  beyond-paper MXU fast path (see below)
+
+The MXU fast path.  Writing m_a*m_b = 128*floor(m_a*m_b/128) + r with
+r = (m_a*m_b mod 128) in [0,127]:
+
+  sum_k sign_k * floor(...) = ( sum_k qa_k*qb_k - sum_k sign_k * r_k ) / 128
+
+The first term is a plain int8 MXU matmul of the *signed* operands.  The
+correction term is approximated by rbar * (sign(a) @ sign(b)) — a second
+int8 matmul of the sign matrices with the calibrated constant
+rbar = E[(m_a*m_b) mod 128] (~63.5 for weakly-dependent operands).  Two MXU
+matmuls replace O(M*K*N) VPU element work; the residual error (zero-mean,
+O(sqrt(K)) scale) and the unmodeled readout quantization are measured in
+benchmarks/table5_calibration.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as q
+from repro.core.analog import MomcapConfig, readout_quantize
+from repro.core.policy import ArithmeticPolicy
+from repro.core.quantization import SC_LEVELS
+from repro.core.stochastic import sc_multiply
+
+
+def _quantize_pair(a, b, policy: ArithmeticPolicy):
+    """Per-tensor (activations) / per-column (weights) symmetric int8."""
+    sa = q.quant_scale(a, 8, policy.act_quant_axis)
+    sb = q.quant_scale(b, 8, policy.weight_quant_axis)
+    return q.quantize(a, sa), q.quantize(b, sb), sa, sb
+
+
+def _int8_matmul(a, b, policy: ArithmeticPolicy):
+    aq, bq, sa, sb = _quantize_pair(a, b, policy)
+    acc = jnp.matmul(
+        aq.astype(jnp.int32), bq.astype(jnp.int32)
+    ).astype(jnp.float32)
+    return acc * sa * sb
+
+
+def _artemis_emulated(a, b, policy: ArithmeticPolicy, key):
+    """Bit-faithful pipeline. a: (..., M, K), b: (K, N)."""
+    aq, bq, sa, sb = _quantize_pair(a, b, policy)
+    ma, sga = q.magnitude_sign(aq)           # (..., M, K)
+    mb, sgb = q.magnitude_sign(bq)           # (K, N)
+
+    g = policy.acc_depth
+    k = ma.shape[-1]
+    pad = (-k) % g
+    if pad:
+        ma = jnp.pad(ma, [(0, 0)] * (ma.ndim - 1) + [(0, pad)])
+        sga = jnp.pad(sga, [(0, 0)] * (sga.ndim - 1) + [(0, pad)])
+        mb = jnp.pad(mb, [(0, pad), (0, 0)])
+        sgb = jnp.pad(sgb, [(0, pad), (0, 0)])
+    kp = ma.shape[-1]
+    ngroups = kp // g
+
+    # (..., M, ngroups, g) / (ngroups, g, N)
+    ma_g = ma.reshape(ma.shape[:-1] + (ngroups, g))
+    sga_g = sga.reshape(sga.shape[:-1] + (ngroups, g))
+    mb_g = mb.reshape(ngroups, g, -1)
+    sgb_g = sgb.reshape(ngroups, g, -1)
+
+    cfg = MomcapConfig(
+        acc_depth=g,
+        readout_bits=policy.readout_bits,
+        sigma_analog=policy.sigma_analog,
+    )
+    out_shape = ma.shape[:-1] + (mb.shape[-1],)
+
+    noisy = policy.sigma_analog > 0.0
+    if noisy and key is None:
+        raise ValueError("artemis mode with sigma_analog > 0 needs a key")
+    key0 = key if noisy else jax.random.PRNGKey(0)
+
+    def body(carry, xs):
+        acc, kcur = carry
+        ma_i, sga_i, mb_i, sgb_i = xs
+        # one MOMCAP group: (..., M, g, N) SC products
+        p = sc_multiply(ma_i[..., :, :, None], mb_i[None, :, :]).astype(
+            jnp.float32
+        )
+        s = sga_i[..., :, :, None] * sgb_i[None, :, :]
+        pos = jnp.sum(jnp.where(s > 0, p, 0.0), axis=-2)
+        neg = jnp.sum(jnp.where(s < 0, p, 0.0), axis=-2)
+        if noisy:
+            kcur, kp_, kn_ = jax.random.split(kcur, 3)
+        else:
+            kp_ = kn_ = None
+        acc = acc + readout_quantize(pos, cfg, kp_) - readout_quantize(
+            neg, cfg, kn_
+        )
+        return (acc, kcur), None
+
+    acc0 = jnp.zeros(out_shape, jnp.float32)
+    (acc, _), _ = jax.lax.scan(
+        body,
+        (acc0, key0),
+        (
+            jnp.moveaxis(ma_g, -2, 0),
+            jnp.moveaxis(sga_g, -2, 0),
+            mb_g,
+            sgb_g,
+        ),
+    )
+    return acc * SC_LEVELS * sa * sb
+
+
+def _artemis_mxu(a, b, policy: ArithmeticPolicy):
+    aq, bq, sa, sb = _quantize_pair(a, b, policy)
+    value_dot = jnp.matmul(aq.astype(jnp.int32), bq.astype(jnp.int32))
+    sign_dot = jnp.matmul(
+        jnp.sign(aq).astype(jnp.int32), jnp.sign(bq).astype(jnp.int32)
+    )
+    acc = (value_dot.astype(jnp.float32)
+           - policy.rbar * sign_dot.astype(jnp.float32)) / SC_LEVELS
+    return acc * SC_LEVELS * sa * sb
+
+
+def artemis_matmul(
+    a: jax.Array,
+    b: jax.Array,
+    policy: ArithmeticPolicy = ArithmeticPolicy(),
+    key: jax.Array | None = None,
+) -> jax.Array:
+    """Matmul through the ARTEMIS arithmetic ladder.
+
+    a: (..., M, K) float; b: (K, N) float.  Returns float32 (..., M, N).
+    With policy.ste the backward pass uses the exact matmul gradient
+    (straight-through), making every mode trainable.
+    """
+    a = a.astype(jnp.float32)
+    b = b.astype(jnp.float32)
+    if policy.mode == "exact":
+        return jnp.matmul(a, b)
+    if policy.mode == "int8":
+        out = _int8_matmul(a, b, policy)
+    elif policy.mode == "artemis":
+        out = _artemis_emulated(a, b, policy, key)
+    elif policy.mode == "artemis_mxu":
+        out = _artemis_mxu(a, b, policy)
+    else:  # pragma: no cover
+        raise ValueError(policy.mode)
+    if policy.ste:
+        exact = jnp.matmul(a, b)
+        out = exact + jax.lax.stop_gradient(out - exact)
+    return out
+
+
+def calibrate_rbar(a: jax.Array, b: jax.Array, policy: ArithmeticPolicy) -> float:
+    """Exact E[(m_a*m_b) mod 128] over the operands' actual distribution —
+    refines the MXU correction constant per layer (benchmark utility)."""
+    aq, bq, _, _ = _quantize_pair(a, b, policy)
+    ma, _ = q.magnitude_sign(aq)
+    mb, _ = q.magnitude_sign(bq)
+    r = (ma[..., :, :, None] * mb[None, :, :]) % SC_LEVELS
+    return float(jnp.mean(r.astype(jnp.float32)))

@@ -1,0 +1,111 @@
+"""NSC reprogrammable-LUT nonlinearities — paper §III.C.2.
+
+Each NSC unit evaluates nonlinear functions (exp, ln for softmax; ReLU,
+GELU, SiLU for FFNs) through 8-bit look-up tables.  We emulate a real
+n-entry table:
+
+  * the table's input grid covers [lo, hi] (linear bins) or is log-spaced
+    (`log_bins=True` — hardware-realizable with the priority encoder the
+    NSC already has for U_to_B conversion, i.e. an MSB/exponent index);
+  * stored outputs are optionally quantized to `out_bits` levels over the
+    table's own output range (min/max over stored entries);
+  * a lookup snaps the input to the nearest grid point and returns the
+    stored (quantized) output.
+
+Under jit the input range may be traced (per-tensor calibration); the table
+is then *constructed* on the traced grid, which is bit-identical to
+indexing a materialized LUT.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def binned_apply(
+    fn,
+    x: jax.Array,
+    lo: jax.Array,
+    hi: jax.Array,
+    n_in: int = 256,
+    out_bits: int | None = 8,
+    log_bins: bool = False,
+) -> jax.Array:
+    """Emulate an n_in-entry LUT of `fn` over [lo, hi] applied to x."""
+    lo = jnp.asarray(lo, jnp.float32)
+    hi = jnp.asarray(hi, jnp.float32)
+    grid = jnp.arange(n_in, dtype=jnp.float32) / (n_in - 1)
+    if log_bins:
+        # log-spaced grid over [lo, hi], lo > 0 (exponent-indexed table)
+        ratio = jnp.maximum(hi / jnp.maximum(lo, 1e-8), 1.0 + 1e-6)
+        xs_table = lo * ratio**grid
+        xq = jnp.clip(x, lo, hi)
+        idx = jnp.clip(
+            jnp.round(jnp.log(xq / lo) / jnp.log(ratio) * (n_in - 1)),
+            0, n_in - 1,
+        ).astype(jnp.int32)
+    else:
+        span = jnp.maximum(hi - lo, 1e-8)
+        xs_table = lo + grid * span
+        idx = jnp.clip(
+            jnp.round((x - lo) / span * (n_in - 1)), 0, n_in - 1
+        ).astype(jnp.int32)
+
+    ys_table = fn(xs_table)
+    if out_bits is not None:
+        # stored-output quantization over the table's own output range
+        y_lo = jnp.min(ys_table)
+        y_hi = jnp.max(ys_table)
+        y_span = jnp.maximum(y_hi - y_lo, 1e-8)
+        levels = 2**out_bits - 1
+        yq = jnp.round((ys_table - y_lo) / y_span * levels)
+        ys_table = y_lo + yq / levels * y_span
+    return jnp.take(ys_table, idx, axis=0)
+
+
+def _dynamic_range(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    m = jax.lax.stop_gradient(jnp.max(jnp.abs(x)))
+    m = jnp.maximum(m, 1e-6)
+    return -m, m
+
+
+def lut_activation(
+    x: jax.Array,
+    kind: str,
+    n_in: int = 256,
+    out_bits: int | None = 8,
+) -> jax.Array:
+    """LUT-emulated activation with per-tensor dynamic range calibration."""
+    fns = {
+        "relu": jax.nn.relu,
+        "gelu": jax.nn.gelu,
+        "silu": jax.nn.silu,
+        "gelu_tanh": lambda v: jax.nn.gelu(v, approximate=True),
+    }
+    fn = fns[kind]
+    lo, hi = _dynamic_range(x)
+    return binned_apply(fn, x, lo, hi, n_in=n_in, out_bits=out_bits)
+
+
+# exp inputs below this contribute < 6e-6 to a softmax — clamping the LUT
+# range here keeps the bins fine where exp actually resolves.
+EXP_LUT_FLOOR = -12.0
+
+
+def lut_exp(x: jax.Array, lo: jax.Array, n_in: int = 256,
+            out_bits: int | None = 8) -> jax.Array:
+    """exp LUT over [max(lo, FLOOR), 0] — softmax inputs are <= 0 after the
+    y_max shift; anything below the floor quantizes to ~0 anyway."""
+    lo = jnp.maximum(jnp.asarray(lo, jnp.float32), EXP_LUT_FLOOR)
+    return binned_apply(jnp.exp, x, lo, 0.0, n_in=n_in, out_bits=out_bits)
+
+
+def lut_ln(x: jax.Array, hi: jax.Array, n_in: int = 256,
+           out_bits: int | None = 8) -> jax.Array:
+    """ln LUT over [1, hi] with log-spaced (exponent-indexed) bins.
+
+    Log spacing bounds the ln error by ln(hi)/(2*(n_in-1)) uniformly —
+    linear bins would be catastrophically coarse near x=1.
+    """
+    return binned_apply(jnp.log, x, 1.0, hi, n_in=n_in, out_bits=out_bits,
+                        log_bins=True)

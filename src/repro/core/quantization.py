@@ -1,0 +1,55 @@
+"""Symmetric integer quantization — the front door of the ARTEMIS ladder.
+
+ARTEMIS (paper §IV.A) quantizes transformer weights/activations to signed
+8-bit and represents each magnitude as a 128-level unary (TCU) stream plus a
+sign bit.  Everything downstream (stochastic multiply, MOMCAP accumulation)
+operates on the integer magnitudes produced here.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# 8-bit signed -> 128-bit unary magnitude + 1 sign bit  (paper §III.A.1)
+SC_LEVELS = 128
+
+
+def _absmax(x: jax.Array, axis, keepdims: bool = True) -> jax.Array:
+    m = jnp.max(jnp.abs(x), axis=axis, keepdims=keepdims)
+    return jnp.maximum(m, 1e-8)
+
+
+def quant_scale(x: jax.Array, bits: int = 8, axis=None) -> jax.Array:
+    """Symmetric scale so that round(x/scale) fits in `bits` signed bits.
+
+    axis=None -> per-tensor; axis=int/tuple -> per-channel over that axis.
+    """
+    qmax = 2 ** (bits - 1) - 1
+    return _absmax(x, axis) / qmax
+
+
+def quantize(x: jax.Array, scale: jax.Array, bits: int = 8) -> jax.Array:
+    qmax = 2 ** (bits - 1) - 1
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax)
+    return q.astype(jnp.int8 if bits <= 8 else jnp.int32)
+
+
+def dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def fake_quant(x: jax.Array, bits: int = 8, axis=None) -> jax.Array:
+    """Quantize-dequantize (the Q(8-bit) column of paper Table IV)."""
+    s = quant_scale(x, bits, axis)
+    return dequantize(quantize(x, s, bits), s)
+
+
+def magnitude_sign(q: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Split a signed int8 tensor into (magnitude in [0,127], sign in {-1,0,+1}).
+
+    ARTEMIS stores the sign in a dedicated bit-line column and keeps all-
+    positive / all-negative rows (paper §III.A.1); computationally the split
+    is per-element.
+    """
+    q32 = q.astype(jnp.int32)
+    return jnp.abs(q32), jnp.sign(q32)

@@ -1,0 +1,73 @@
+"""Log-sum-exp softmax — paper Eq. (5) and §III.C.2 / §III.D.3.
+
+ARTEMIS avoids in-DRAM division and numerical overflow by computing
+
+  softmax(y)_i = exp(y_i - y_max - ln(sum_j exp(y_j - y_max)))
+
+with three hardware tricks we mirror exactly:
+  1. y_max is tracked *online* by a comparator as the QK^T MatMul streams
+     out (the flash-attention online-max — see kernels/flash_attention);
+  2. exp and ln are 8-bit NSC LUTs;
+  3. the form is division-free.
+
+The LSE decomposition is associative across shards, which is what makes the
+token dataflow's distributed softmax (split-KV decode, ring attention)
+exact — see repro.parallel.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import lut
+
+
+def lse_softmax(y: jax.Array, axis: int = -1) -> jax.Array:
+    """Exact division-free log-sum-exp softmax (Eq. 5)."""
+    y_max = jnp.max(y, axis=axis, keepdims=True)
+    shifted = y - y_max
+    lse = jnp.log(jnp.sum(jnp.exp(shifted), axis=axis, keepdims=True))
+    return jnp.exp(shifted - lse)
+
+
+def artemis_softmax(
+    y: jax.Array,
+    axis: int = -1,
+    n_in: int = 256,
+    out_bits: int | None = 8,
+) -> jax.Array:
+    """Eq. 5 with the exp/ln steps routed through NSC LUT emulation."""
+    y = y.astype(jnp.float32)
+    y_max = jnp.max(y, axis=axis, keepdims=True)
+    shifted = y - y_max                                   # <= 0
+    lo = jax.lax.stop_gradient(jnp.minimum(jnp.min(shifted), -1.0))
+    n = y.shape[axis]
+    e = lut.lut_exp(shifted, lo, n_in=n_in, out_bits=out_bits)
+    s = jnp.sum(e, axis=axis, keepdims=True)
+    l = lut.lut_ln(jnp.maximum(s, 1.0), float(n), n_in=n_in, out_bits=out_bits)
+    out = lut.lut_exp(shifted - l, lo - jnp.log(float(n)),
+                      n_in=n_in, out_bits=out_bits)
+    return out
+
+
+def online_max_sum(y_blocks: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Streaming (max, sum-exp) over blocks along axis 0 — the comparator
+    pipeline of §III.D.3, used as the reference for the flash kernel and the
+    ring-attention merge rule.
+
+    y_blocks: (n_blocks, ..., block) — returns (max, sumexp) over all blocks.
+    """
+
+    def step(carry, blk):
+        m, s = carry
+        m_new = jnp.maximum(m, jnp.max(blk, axis=-1))
+        s_new = s * jnp.exp(m - m_new) + jnp.sum(
+            jnp.exp(blk - m_new[..., None]), axis=-1
+        )
+        return (m_new, s_new), None
+
+    first = y_blocks[0]
+    m0 = jnp.full(first.shape[:-1], -jnp.inf, dtype=jnp.float32)
+    s0 = jnp.zeros(first.shape[:-1], dtype=jnp.float32)
+    (m, s), _ = jax.lax.scan(step, (m0, s0), y_blocks)
+    return m, s

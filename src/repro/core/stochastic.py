@@ -1,0 +1,71 @@
+"""Deterministic stochastic (TCU) multiplication — paper §III.A.1.
+
+ARTEMIS multiplies 8-bit magnitudes by AND-ing two 128-bit streams in the
+DRAM bit-line logic:
+
+  * operand 1 goes through a B_to_TCU decoder: transition-coded unary, all
+    1s grouped at the trailing end -> bit i is set iff i < a;
+  * operand 2 goes through B_to_TCU + a *bit-position correlation encoder*
+    that spreads its 1s evenly across the 128 positions (so the conditional
+    probability of operand-1 bits given operand-2 bits matches the marginal
+    — the deterministic low-discrepancy construction of [15], [31]);
+  * the product popcount is then popcount(tcu(a) & spread(b)).
+
+The even spreading is the Bresenham construction: bit i of spread(b) is set
+iff floor((i+1)*b/128) > floor(i*b/128).  AND-ing with the first `a`
+positions counts exactly floor(a*b/128) set bits, which gives the closed
+form used throughout the framework:
+
+  sc_multiply(a, b) == floor(a * b / 128)   for a, b in [0, 127].
+
+`tests/test_core_arithmetic.py` pins the bitstream emulation against the
+closed form exhaustively over the full 128x128 operand square.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.quantization import SC_LEVELS
+
+SC_BITS = SC_LEVELS  # 128-bit streams
+
+
+def tcu_encode(m: jax.Array) -> jax.Array:
+    """B_to_TCU decoder: magnitude m in [0,128] -> (..., 128) bool stream."""
+    positions = jnp.arange(SC_BITS, dtype=jnp.int32)
+    return positions < m[..., None]
+
+
+def spread_encode(m: jax.Array) -> jax.Array:
+    """Bit-position correlation encoder: evenly spread m ones over 128 bits."""
+    i = jnp.arange(SC_BITS, dtype=jnp.int32)
+    m = m[..., None].astype(jnp.int32)
+    return ((i + 1) * m) // SC_BITS - (i * m) // SC_BITS > 0
+
+
+def sc_multiply_bitstream(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Bit-level emulation: popcount(tcu(a) & spread(b)). For validation."""
+    anded = jnp.logical_and(tcu_encode(a), spread_encode(b))
+    return jnp.sum(anded.astype(jnp.int32), axis=-1)
+
+
+def sc_multiply(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Closed form of the deterministic TCU multiply: floor(a*b/128).
+
+    a, b: integer magnitudes in [0, 127] (any broadcastable shapes).
+    """
+    return (a.astype(jnp.int32) * b.astype(jnp.int32)) // SC_BITS
+
+
+def sc_multiply_float(a: jax.Array, b: jax.Array) -> jax.Array:
+    """float32 variant of the closed form (used inside Pallas kernel bodies,
+    where float VPU math is preferred)."""
+    return jnp.floor(a * b * (1.0 / SC_BITS))
+
+
+def sc_truncation_error(a: jax.Array, b: jax.Array) -> jax.Array:
+    """Exact truncation error of one SC multiply, in product units (1/128):
+    (a*b mod 128)/128 in [0, 1). Used by the Table V calibration bench."""
+    prod = a.astype(jnp.int32) * b.astype(jnp.int32)
+    return (prod % SC_BITS).astype(jnp.float32) / SC_BITS

@@ -1,0 +1,108 @@
+"""Deterministic synthetic data pipeline.
+
+Design constraints (DESIGN.md §5, fault tolerance):
+  * stateless-deterministic: batch t is a pure function of (seed, t) — a
+    restarted job regenerates the identical stream with no reader state to
+    checkpoint; elastic rescaling re-shards the same stream.
+  * per-host sharding: each data-parallel host slices its rows from the
+    global batch by fold_in(host_id), so no two hosts read the same rows.
+
+Two generators:
+  * `make_batch` — language-model-shaped random tokens with a Zipf-ish
+    marginal (realistic embedding-gather patterns for benches).
+  * `synthetic_task_batch` — *learnable* tasks for the accuracy ladder
+    (Table IV reproduction): copy / reverse / sort / modular addition.
+    These give a real accuracy axis against which exact / int8 / artemis
+    arithmetic is compared.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import frontend
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class DataConfig:
+    seed: int = 0
+    seq_len: int = 1024
+    global_batch: int = 8
+    task: str = "lm"            # lm | copy | reverse | sort | modadd
+    host_id: int = 0
+    n_hosts: int = 1
+
+
+def _zipf_tokens(key, shape, vocab: int) -> jax.Array:
+    """Zipf-ish marginal over the vocab (heavy head, long tail)."""
+    u = jax.random.uniform(key, shape, jnp.float32, 1e-6, 1.0)
+    # inverse-CDF of p(k) ~ 1/(k+10): k = exp(u * log(V)) - like skew
+    r = jnp.exp(u * jnp.log(float(vocab))) - 1.0
+    return jnp.clip(r.astype(jnp.int32), 0, vocab - 1)
+
+
+def make_batch(cfg: ModelConfig, dcfg: DataConfig, step: int) -> dict:
+    """Batch t as a pure function of (seed, step, host)."""
+    key = jax.random.fold_in(
+        jax.random.fold_in(jax.random.PRNGKey(dcfg.seed), step),
+        dcfg.host_id)
+    rows = dcfg.global_batch // dcfg.n_hosts
+    kt, kp = jax.random.split(key)
+    shape = frontend.token_shape(cfg, rows, dcfg.seq_len)
+    tokens = _zipf_tokens(kt, shape, cfg.vocab_size)
+    batch = {"tokens": tokens, "labels": _shift_labels(tokens)}
+    if cfg.modality == "vlm":
+        batch["prefix_embeds"] = frontend.synth_prefix_embeds(kp, cfg, rows)
+    return batch
+
+
+def _shift_labels(tokens: jax.Array) -> jax.Array:
+    """Next-token labels (last position predicts a pad 0)."""
+    return jnp.concatenate(
+        [tokens[:, 1:], jnp.zeros_like(tokens[:, :1])], axis=1)
+
+
+# ---------------------------------------------------------------------------
+# learnable tasks for the accuracy ladder (benchmarks/table4_accuracy.py)
+# ---------------------------------------------------------------------------
+
+SEP = 1  # separator token id; 0 is pad
+
+
+def synthetic_task_batch(key, task: str, batch: int, n: int,
+                         vocab: int) -> tuple[jax.Array, jax.Array]:
+    """Returns (tokens (B, S), loss_mask (B, S)) for sequence tasks.
+
+    Layout: [src tokens, SEP, tgt tokens]; loss is masked to the tgt span.
+    Payload tokens are drawn from [2, vocab).
+    """
+    src = jax.random.randint(key, (batch, n), 2, vocab, dtype=jnp.int32)
+    if task == "copy":
+        tgt = src
+    elif task == "reverse":
+        tgt = src[:, ::-1]
+    elif task == "sort":
+        tgt = jnp.sort(src, axis=1)
+    elif task == "modadd":
+        # tgt_i = (src_i + src_{i-1}) mod (vocab-2) + 2
+        prev = jnp.roll(src, 1, axis=1).at[:, 0].set(0)
+        tgt = (src - 2 + prev - 2) % (vocab - 2) + 2
+    else:
+        raise ValueError(task)
+    sep = jnp.full((batch, 1), SEP, jnp.int32)
+    tokens = jnp.concatenate([src, sep, tgt], axis=1)
+    mask = jnp.concatenate(
+        [jnp.zeros((batch, n + 1), jnp.float32),
+         jnp.ones((batch, n), jnp.float32)], axis=1)
+    return tokens, mask
+
+
+def batch_iterator(cfg: ModelConfig, dcfg: DataConfig, start_step: int = 0):
+    """Infinite deterministic batch stream, resumable at any step."""
+    step = start_step
+    while True:
+        yield step, make_batch(cfg, dcfg, step)
+        step += 1

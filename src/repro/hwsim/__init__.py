@@ -1,0 +1,26 @@
+"""repro.hwsim — the paper's evaluation methodology, reimplemented.
+
+ARTEMIS §IV: "We developed a comprehensive simulator in Python to estimate
+the performance and energy costs of our proposed accelerator by accurately
+modeling all hardware components and in-DRAM operations." This package IS
+that simulator: device constants from Tables I/III, the DRAM geometry,
+per-operation latency/energy models, the layer/token dataflow × pipelining
+execution model, and published baseline anchors for Figs 9-11.
+"""
+from repro.hwsim.constants import (
+    ArtemisConfig,
+    DEFAULT,
+    DRISA_CONFIG,
+)
+from repro.hwsim.dram import DramGeometry
+from repro.hwsim.dataflow import (
+    DataflowConfig,
+    simulate_model,
+    simulate_breakdown,
+)
+from repro.hwsim.workloads import paper_models
+from repro.hwsim.baselines import BASELINES
+
+__all__ = ["ArtemisConfig", "DEFAULT", "DRISA_CONFIG", "DramGeometry",
+           "DataflowConfig", "simulate_model", "simulate_breakdown",
+           "paper_models", "BASELINES"]

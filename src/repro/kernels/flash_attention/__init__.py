@@ -1,0 +1,7 @@
+from repro.kernels.flash_attention.flash_attention import (
+    flash_attention_kernel,
+)
+from repro.kernels.flash_attention.ops import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+
+__all__ = ["flash_attention", "flash_attention_kernel", "attention_ref"]

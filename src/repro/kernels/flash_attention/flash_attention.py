@@ -1,0 +1,136 @@
+"""Pallas TPU flash-attention kernel with the ARTEMIS LSE softmax.
+
+Paper §III.C.2 + §III.D.3: ARTEMIS computes softmax in the division-free
+log-sum-exp form (Eq. 5) and tracks y_max *online* with a comparator while
+the QK^T MatMul streams out of the subarrays, overlapping softmax with the
+S*V MatMul.  On TPU the idiomatic realization of exactly that dataflow is a
+fused attention kernel with an online-softmax K/V stream — this kernel.
+
+Features: causal masking, GQA/MQA (q-head -> kv-head folding via the
+BlockSpec index map), and an LSE output per query — the LSE is what makes
+the token-dataflow distributed merges (ring attention, split-KV decode)
+exact, because Eq. 5 is associative across shards.
+
+Grid: (batch, q_heads, Sq/bq, Sk/bk), K innermost; the output and the
+(m, l) running statistics are revisited blocks accumulated across the K
+axis.  m/l are carried in f32 output refs of shape (..., bq) — lane-dim
+aligned.  Finalization (o /= l, lse = m + log l) happens at the last K step.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, *,
+                  scale: float, causal: bool, nk: int, bq: int, bk: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    def _update():
+        q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
+        k = k_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        v = v_ref[0, 0].astype(jnp.float32)          # (bk, d)
+        s = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                     # (bq, bk)
+        if causal:
+            rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+            cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+            s = jnp.where(rows >= cols, s, NEG_INF)
+
+        m_prev = m_ref[0, 0]                          # (bq,)
+        l_prev = l_ref[0, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(s - m_new[:, None])
+        l_ref[0, 0] = l_prev * alpha + jnp.sum(p, axis=-1)
+        m_ref[0, 0] = m_new
+        o_ref[0, 0] = (o_ref[0, 0] * alpha[:, None]
+                       + jax.lax.dot_general(
+                           p, v, (((1,), (0,)), ((), ())),
+                           preferred_element_type=jnp.float32))
+
+    if causal:
+        # skip fully-masked K blocks (the block is strictly above the
+        # diagonal) — the TPU grid still visits them, but no FLOPs issue
+        pl.when(ki * bk <= qi * bq + bq - 1)(_update)
+    else:
+        _update()
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[0, 0], 1e-30)
+        o_ref[0, 0] = o_ref[0, 0] / l[:, None]
+        lse_ref[0, 0] = m_ref[0, 0] + jnp.log(l)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "scale", "bq", "bk", "interpret"),
+)
+def flash_attention_kernel(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    scale: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool = True,
+) -> tuple[jax.Array, jax.Array]:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D), Hq % Hkv == 0.
+
+    Returns (o: (B, Hq, Sq, D) f32, lse: (B, Hq, Sq) f32).
+    Sq/Sk must be multiples of bq/bk (ops.py pads).
+    """
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    assert hq % hkv == 0, (hq, hkv)
+    group = hq // hkv
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    nq, nk = sq // bq, sk // bk
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, nk=nk, bq=bq, bk=bk,
+    )
+    o, lse, _, _ = pl.pallas_call(
+        kernel,
+        grid=(b, hq, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+            pl.BlockSpec((1, 1, bk, d),
+                         lambda bi, hi, qi, ki: (bi, hi // group, ki, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, 1, bq, d), lambda bi, hi, qi, ki: (bi, hi, qi, 0)),
+            pl.BlockSpec((1, 1, bq), lambda bi, hi, qi, ki: (bi, hi, qi)),
+            pl.BlockSpec((1, 1, bq), lambda bi, hi, qi, ki: (bi, hi, qi)),
+            pl.BlockSpec((1, 1, bq), lambda bi, hi, qi, ki: (bi, hi, qi)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, hq, sq, d), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
+            jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),  # m (scratch-ish)
+            jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),  # l (scratch-ish)
+        ],
+        interpret=interpret,
+    )(q, k, v)
+    return o, lse

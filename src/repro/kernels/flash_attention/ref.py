@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the flash-attention kernel (GQA + causal + LSE)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal=True, scale=None):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D). Returns (o, lse)."""
+    b, hq, sq, d = q.shape
+    _, hkv, sk, _ = k.shape
+    group = hq // hkv
+    if scale is None:
+        scale = 1.0 / (d**0.5)
+    kf = jnp.repeat(k, group, axis=1).astype(jnp.float32)
+    vf = jnp.repeat(v, group, axis=1).astype(jnp.float32)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf) * scale
+    if causal:
+        mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        s = jnp.where(mask, s, -1e30)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    o = jnp.einsum("bhqk,bhkd->bhqd", p / l, vf)
+    lse = (m + jnp.log(l))[..., 0]
+    return o, lse

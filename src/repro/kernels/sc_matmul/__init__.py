@@ -1,0 +1,5 @@
+from repro.kernels.sc_matmul.ops import sc_matmul
+from repro.kernels.sc_matmul.ref import sc_matmul_ref
+from repro.kernels.sc_matmul.sc_matmul import sc_matmul_quantized
+
+__all__ = ["sc_matmul", "sc_matmul_ref", "sc_matmul_quantized"]

@@ -1,0 +1,55 @@
+"""Pure-jnp oracle for the sc_matmul kernel.
+
+Reuses the independently-tested repro.core primitives (closed-form TCU
+multiply, MOMCAP readout), so the kernel and the oracle share no code path
+beyond those pinned-by-exhaustive-test scalars.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.analog import MomcapConfig, readout_quantize
+from repro.core.quantization import SC_LEVELS, magnitude_sign
+from repro.core.stochastic import sc_multiply
+
+ACC_DEPTH = 20
+
+
+def sc_matmul_ref(
+    aq: jax.Array,
+    bq: jax.Array,
+    *,
+    mode: str = "artemis",
+    readout_bits: int | None = 8,
+    rbar: float = 63.5,
+) -> jax.Array:
+    """Oracle over pre-quantized int8 operands; same output units as the
+    kernel (int32 dot units for int8 mode, SC product units otherwise)."""
+    a = aq.astype(jnp.int32)
+    b = bq.astype(jnp.int32)
+    if mode == "int8":
+        return jnp.matmul(a, b)
+    if mode == "artemis_mxu":
+        value = jnp.matmul(a, b).astype(jnp.float32)
+        signs = jnp.matmul(jnp.sign(a), jnp.sign(b)).astype(jnp.float32)
+        return (value - rbar * signs) / SC_LEVELS
+    assert mode == "artemis", mode
+
+    ma, sa = magnitude_sign(aq)
+    mb, sb = magnitude_sign(bq)
+    k = ma.shape[-1]
+    assert k % ACC_DEPTH == 0
+    ngroups = k // ACC_DEPTH
+    cfg = MomcapConfig(acc_depth=ACC_DEPTH, readout_bits=readout_bits)
+
+    # (M, ngroups, g, N) products — small shapes only (it's an oracle)
+    p = sc_multiply(ma[:, :, None], mb[None, :, :]).astype(jnp.float32)
+    s = (sa[:, :, None] * sb[None, :, :]).astype(jnp.float32)
+    p = p.reshape(ma.shape[0], ngroups, ACC_DEPTH, mb.shape[1])
+    s = s.reshape(ma.shape[0], ngroups, ACC_DEPTH, mb.shape[1])
+    pos = jnp.sum(jnp.where(s > 0, p, 0.0), axis=2)
+    neg = jnp.sum(jnp.where(s < 0, p, 0.0), axis=2)
+    return jnp.sum(
+        readout_quantize(pos, cfg) - readout_quantize(neg, cfg), axis=1
+    )

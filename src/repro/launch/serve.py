@@ -1,0 +1,92 @@
+"""Serving launcher — batched prefill + decode with the KV cache
+(the paper is inference-oriented; this is the serve_step driver).
+
+Continuous-batching-lite: requests with different prompt lengths are
+left-padded into one batch, prefilled once, then decoded token-by-token
+with greedy sampling. The ARTEMIS arithmetic policy applies to every
+matmul in both phases.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+
+from repro import configs
+from repro.core.policy import ArithmeticPolicy
+from repro.launch import steps as stepslib
+from repro.models import frontend, model
+
+
+def serve(arch: str = "qwen3_8b", smoke: bool = True,
+          batch: int = 4, prompt_len: int = 32, gen_len: int = 16,
+          policy_mode: str = "exact", seed: int = 0,
+          params=None) -> dict:
+    cfg = configs.get_config(arch, smoke=smoke)
+    policy = ArithmeticPolicy(mode=policy_mode)
+    if params is None:
+        params = model.init(jax.random.PRNGKey(seed), cfg)
+
+    prefill = jax.jit(stepslib.make_prefill_step(cfg, policy))
+    decode = jax.jit(stepslib.make_decode_step(cfg, policy))
+
+    key = jax.random.PRNGKey(seed + 1)
+    tokens = jax.random.randint(
+        key, frontend.token_shape(cfg, batch, prompt_len), 2,
+        cfg.vocab_size, dtype=jnp.int32)
+    max_len = prompt_len + gen_len + frontend.n_prefix_tokens(cfg)
+    cache = model.init_cache(cfg, batch, max_len, dtype=jnp.float32)
+
+    bt = {"tokens": tokens}
+    if cfg.modality == "vlm":
+        bt["prefix_embeds"] = frontend.synth_prefix_embeds(
+            jax.random.PRNGKey(seed + 2), cfg, batch)
+
+    t0 = time.time()
+    logits, cache = prefill(params, bt, cache)
+    logits.block_until_ready()
+    t_prefill = time.time() - t0
+
+    out_tokens = []
+    nxt = stepslib.greedy_sample(logits)
+    t0 = time.time()
+    for _ in range(gen_len):
+        step_tok = nxt[:, None] if cfg.modality != "audio" else nxt[:, None]
+        logits, cache = decode(params, step_tok, cache)
+        nxt = stepslib.greedy_sample(logits)
+        out_tokens.append(nxt)
+    jax.block_until_ready(out_tokens[-1])
+    t_decode = time.time() - t0
+
+    gen = jnp.stack(out_tokens, axis=1)
+    return {
+        "generated": gen,
+        "prefill_s": t_prefill,
+        "decode_s": t_decode,
+        "decode_tok_per_s": batch * gen_len / max(t_decode, 1e-9),
+        "cache_index": int(cache["index"]),
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", default="qwen3_8b")
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--prompt-len", type=int, default=32)
+    ap.add_argument("--gen-len", type=int, default=16)
+    ap.add_argument("--policy", default="exact",
+                    choices=["exact", "int8", "artemis", "artemis_mxu"])
+    args = ap.parse_args()
+    out = serve(arch=args.arch, smoke=not args.full, batch=args.batch,
+                prompt_len=args.prompt_len, gen_len=args.gen_len,
+                policy_mode=args.policy)
+    print(f"prefill {out['prefill_s']*1e3:.0f}ms | decode "
+          f"{out['decode_tok_per_s']:.1f} tok/s | "
+          f"generated shape {out['generated'].shape}")
+
+
+if __name__ == "__main__":
+    main()

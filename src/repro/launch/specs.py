@@ -1,0 +1,84 @@
+"""input_specs() — ShapeDtypeStruct stand-ins for every model input
+(weak-type-correct, shardable, no device allocation). The dry-run lowers
+against these; nothing is ever materialized.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import ShapeCell
+from repro.models import frontend, model
+from repro.models.config import ModelConfig
+from repro.optim import adamw_init
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, jnp.dtype(dtype))
+
+
+def param_shapes(cfg: ModelConfig, dtype=None):
+    """dtype: override float-leaf dtype (serving casts params to bf16 at
+    load; decode/prefill cells lower against the cast shapes — §Perf H3)."""
+    shapes = jax.eval_shape(lambda: model.init(jax.random.PRNGKey(0), cfg))
+    if dtype is None:
+        return shapes
+    def cast(l):
+        if jnp.issubdtype(l.dtype, jnp.floating):
+            return jax.ShapeDtypeStruct(l.shape, jnp.dtype(dtype))
+        return l
+    return jax.tree.map(cast, shapes)
+
+
+def opt_shapes(cfg: ModelConfig):
+    p = param_shapes(cfg)
+    return jax.eval_shape(adamw_init, p)
+
+
+def batch_shapes(cfg: ModelConfig, batch: int, seq: int,
+                 with_labels: bool = True) -> dict:
+    tok = _sds(frontend.token_shape(cfg, batch, seq), jnp.int32)
+    out = {"tokens": tok}
+    if with_labels:
+        out["labels"] = tok
+    if cfg.modality == "vlm":
+        out["prefix_embeds"] = frontend.prefix_embed_spec(cfg, batch)
+    return out
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int,
+                 dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: model.init_cache(cfg, batch, max_len, dtype))
+
+
+def input_specs(cfg: ModelConfig, cell: ShapeCell) -> dict:
+    """All step inputs for one (arch × shape) cell, as ShapeDtypeStructs.
+
+    train:   {params, opt_state, batch{tokens, labels[, prefix_embeds]}}
+    prefill: {params, batch{tokens[, prefix_embeds]}, cache(empty, max_len)}
+    decode:  {params, tokens(B, 1[, C]), cache(populated shape, seq_len)}
+    """
+    b, s = cell.global_batch, cell.seq_len
+    prefix = frontend.n_prefix_tokens(cfg)
+    if cell.kind == "train":
+        return {
+            "params": param_shapes(cfg),
+            "opt_state": opt_shapes(cfg),
+            "batch": batch_shapes(cfg, b, s),
+        }
+    # serving: params are loaded in the compute dtype (bf16) — halves the
+    # per-step weight traffic and kills fp32->bf16 convert copies (H3)
+    params = param_shapes(cfg, dtype=cfg.compute_dtype)
+    if cell.kind == "prefill":
+        return {
+            "params": params,
+            "batch": batch_shapes(cfg, b, s, with_labels=False),
+            "cache": cache_shapes(cfg, b, s + prefix),
+        }
+    assert cell.kind == "decode"
+    return {
+        "params": params,
+        "tokens": _sds(frontend.token_shape(cfg, b, 1), jnp.int32),
+        "cache": cache_shapes(cfg, b, s + prefix),
+    }

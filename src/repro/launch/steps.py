@@ -1,0 +1,104 @@
+"""Step functions: train_step / prefill_step / decode_step builders.
+
+Each builder returns a pure function suitable for jax.jit with explicit
+in/out shardings (launch.dryrun wires those). The ARTEMIS arithmetic
+policy and sharding rules are closed over — policy changes recompile,
+exactly like a production config push.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import ArithmeticPolicy
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.optim import OptimizerConfig, adamw_update
+from repro.parallel.context import use_sharding
+
+
+def make_train_step(cfg: ModelConfig, opt_cfg: OptimizerConfig,
+                    policy: ArithmeticPolicy = ArithmeticPolicy(),
+                    mesh=None, rules=None, remat: bool = True,
+                    unroll: int | bool = 1):
+    """(params, opt_state, batch) -> (params, opt_state, metrics)."""
+
+    def train_step(params, opt_state, batch):
+        def loss_fn(p):
+            inputs = {"tokens": batch["tokens"]}
+            if "prefix_embeds" in batch:
+                inputs["prefix_embeds"] = batch["prefix_embeds"]
+            logits, aux, _ = model.apply(p, cfg, inputs, policy=policy,
+                                         remat=remat, unroll=unroll)
+            if "prefix_embeds" in batch:
+                logits = logits[:, -batch["tokens"].shape[1]:]
+            loss = model.lm_loss(logits, batch["labels"])
+            return loss + aux, (loss, aux)
+
+        def run():
+            (total, (loss, aux)), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params)
+            new_params, new_opt, om = adamw_update(
+                params, grads, opt_state, opt_cfg)
+            metrics = {"loss": loss, "aux_loss": aux, "total_loss": total,
+                       **om}
+            return new_params, new_opt, metrics
+
+        if mesh is not None and rules is not None:
+            with use_sharding(mesh, rules):
+                return run()
+        return run()
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig,
+                      policy: ArithmeticPolicy = ArithmeticPolicy(),
+                      mesh=None, rules=None, unroll: int | bool = 1):
+    """(params, batch, cache) -> (last_logits, cache). Writes the prompt
+    into the cache and returns the next-token logits."""
+
+    def prefill_step(params, batch, cache):
+        inputs = {"tokens": batch["tokens"]}
+        if "prefix_embeds" in batch:
+            inputs["prefix_embeds"] = batch["prefix_embeds"]
+
+        def run():
+            logits, _, new_cache = model.apply(
+                params, cfg, inputs, policy=policy, cache=cache,
+                remat=False, unroll=unroll)
+            return logits[:, -1], new_cache
+
+        if mesh is not None and rules is not None:
+            with use_sharding(mesh, rules):
+                return run()
+        return run()
+
+    return prefill_step
+
+
+def make_decode_step(cfg: ModelConfig,
+                     policy: ArithmeticPolicy = ArithmeticPolicy(),
+                     mesh=None, rules=None, unroll: int | bool = 1):
+    """(params, tokens, cache) -> (logits, cache) — ONE new token against
+    the populated KV cache (the brief's serve_step for decode_* cells)."""
+
+    def decode_step(params, tokens, cache):
+        def run():
+            logits, _, new_cache = model.apply(
+                params, cfg, {"tokens": tokens}, policy=policy,
+                cache=cache, remat=False, unroll=unroll)
+            return logits[:, -1], new_cache
+
+        if mesh is not None and rules is not None:
+            with use_sharding(mesh, rules):
+                return run()
+        return run()
+
+    return decode_step
+
+
+def greedy_sample(logits: jax.Array) -> jax.Array:
+    return jnp.argmax(logits, axis=-1).astype(jnp.int32)

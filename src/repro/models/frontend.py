@@ -1,0 +1,53 @@
+"""Modality frontends — STUBS per the brief.
+
+The assigned [vlm]/[audio] architectures specify the transformer BACKBONE
+only; the modality frontend supplies *precomputed* patch/frame embeddings
+(`input_specs()` hands the model `prefix_embeds` ShapeDtypeStructs, and the
+data pipeline synthesizes deterministic stand-ins).
+
+  vlm   (internvl2-1b): an InternViT-300M vision tower would emit
+        (n_patches, d_vit) features -> pixel-shuffle -> MLP projector to the
+        LM width. We stub the tower+projector output: (B, n_patches, d_model).
+  audio (musicgen-large): EnCodec tokenizes audio into `n_codebooks`
+        parallel streams; the backbone consumes the token streams directly
+        (codebook embeddings are summed *inside* the model — that part is
+        real, in transformer._embed_tokens). Nothing to stub beyond the
+        token layout (B, S, n_codebooks).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+# InternVL2-1B: 448x448 image, 14x14 ViT patches -> 1024 tokens,
+# pixel-shuffle x0.5 -> 256 visual tokens entering the LM.
+VLM_PREFIX_TOKENS = 256
+
+
+def n_prefix_tokens(cfg: ModelConfig) -> int:
+    return VLM_PREFIX_TOKENS if cfg.modality == "vlm" else 0
+
+
+def prefix_embed_spec(cfg: ModelConfig, batch: int) -> jax.ShapeDtypeStruct:
+    """ShapeDtypeStruct for the precomputed visual prefix (dry-run input)."""
+    assert cfg.modality == "vlm"
+    return jax.ShapeDtypeStruct(
+        (batch, VLM_PREFIX_TOKENS, cfg.d_model), jnp.dtype(cfg.compute_dtype)
+    )
+
+
+def synth_prefix_embeds(key, cfg: ModelConfig, batch: int) -> jax.Array:
+    """Deterministic stand-in for ViT features (unit-RMS, like post-LN)."""
+    x = jax.random.normal(
+        key, (batch, VLM_PREFIX_TOKENS, cfg.d_model), jnp.float32
+    )
+    return x.astype(jnp.dtype(cfg.compute_dtype))
+
+
+def token_shape(cfg: ModelConfig, batch: int, seq: int) -> tuple[int, ...]:
+    """Token-input shape for a given modality."""
+    if cfg.modality == "audio":
+        return (batch, seq, cfg.n_codebooks)
+    return (batch, seq)

@@ -1,0 +1,269 @@
+"""Shared neural building blocks (pure JAX, no module framework).
+
+Every parameterized op is a pair of functions:
+  init_*(key, cfg, ...) -> pytree of arrays
+  apply / named forward fn (params, x, ...) -> array
+
+All dense matmuls route through `mm(...)`, the ArithmeticPolicy switch:
+exact mode keeps the compute dtype (bf16 on TPU); quantized modes call
+repro.core.artemis_matmul. Attention score/value contractions go through
+`qmm_nt` / `qmm_nn`, batched int8 variants of the same ladder (the paper
+applies SC to *all* MHA and FFN MatMuls; embeddings and the LM head stay
+exact, as does the MoE router — see ArithmeticPolicy docstring).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as q
+from repro.core.artemis_matmul import artemis_matmul
+from repro.core.policy import ArithmeticPolicy
+from repro.core.quantization import SC_LEVELS
+from repro.parallel.context import attention_heads_constraint
+
+# ---------------------------------------------------------------------------
+# policy-routed matmuls
+# ---------------------------------------------------------------------------
+
+
+def mm(x: jax.Array, w: jax.Array, policy: ArithmeticPolicy) -> jax.Array:
+    """x: (..., K) activations, w: (K, N) weights -> (..., N), x.dtype."""
+    if policy.mode == "exact":
+        return jnp.matmul(x, w.astype(x.dtype))
+    out = artemis_matmul(x, w, policy)
+    return out.astype(x.dtype)
+
+
+def _quant_einsum(spec, a, b, policy):
+    """Batched einsum through the int8 / artemis_mxu ladder."""
+    sa = q.quant_scale(a, 8, policy.act_quant_axis)
+    sb = q.quant_scale(b, 8, policy.act_quant_axis)
+    aq, bq = q.quantize(a, sa), q.quantize(b, sb)
+    dot = jnp.einsum(spec, aq.astype(jnp.int32), bq.astype(jnp.int32),
+                     preferred_element_type=jnp.int32).astype(jnp.float32)
+    if policy.mode == "artemis_mxu":
+        sgn = jnp.einsum(spec, jnp.sign(aq).astype(jnp.int32),
+                         jnp.sign(bq).astype(jnp.int32),
+                         preferred_element_type=jnp.int32)
+        dot = dot - policy.rbar / SC_LEVELS * sgn.astype(jnp.float32)
+    out = dot * sa * sb
+    if policy.ste:
+        exact = jnp.einsum(spec, a.astype(jnp.float32), b.astype(jnp.float32))
+        out = exact + jax.lax.stop_gradient(out - exact)
+    return out
+
+
+def qeinsum(spec: str, a: jax.Array, b: jax.Array,
+            policy: ArithmeticPolicy) -> jax.Array:
+    """Attention-style batched contraction under the policy ladder.
+
+    `artemis` (bit-level) mode is deliberately mapped onto `artemis_mxu`
+    here: per-element stream emulation of a batched attention einsum is a
+    test-bench tool, not a model-scale path (DESIGN.md §4).
+    """
+    if policy.mode == "exact":
+        return jnp.einsum(spec, a, b)
+    return _quant_einsum(spec, a, b, policy).astype(a.dtype)
+
+
+# ---------------------------------------------------------------------------
+# initializers
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    scale = (1.0 / d_in) ** 0.5
+    return (jax.random.normal(key, (d_in, d_out), jnp.float32)
+            * scale).astype(dtype)
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, (vocab, d), jnp.float32)).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm_init(d: int, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * p["scale"].astype(jnp.float32)).astype(dt)
+
+
+def headwise_rmsnorm(scale, x, eps: float = 1e-6):
+    """qk-norm: normalize over head_dim. x: (..., H, Dh), scale: (Dh,)."""
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * scale.astype(jnp.float32)).astype(dt)
+
+
+def groupnorm(x, n_groups: int, eps: float = 1e-5):
+    """GroupNorm over the channel dim (no affine). x: (..., C)."""
+    dt = x.dtype
+    *lead, c = x.shape
+    x = x.astype(jnp.float32).reshape(*lead, n_groups, c // n_groups)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return x.reshape(*lead, c).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# rotary embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32)
+                            / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, Dh); positions: (B, S) int32."""
+    dt = x.dtype
+    freqs = rope_frequencies(x.shape[-1], theta)          # (Dh/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, Dh/2)
+    cos, sin = jnp.cos(ang)[:, :, None, :], jnp.sin(ang)[:, :, None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# attention (GQA/MQA, optional qk-norm, KV cache, sliding window)
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class AttnDims:
+    n_heads: int
+    n_kv_heads: int
+    head_dim: int
+
+
+def attn_init(key, d_model: int, dims: AttnDims, qk_norm: bool,
+              dtype=jnp.float32):
+    ks = jax.random.split(key, 4)
+    h, kv, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    p = {
+        "wq": dense_init(ks[0], d_model, h * hd, dtype),
+        "wk": dense_init(ks[1], d_model, kv * hd, dtype),
+        "wv": dense_init(ks[2], d_model, kv * hd, dtype),
+        "wo": dense_init(ks[3], h * hd, d_model, dtype),
+    }
+    if qk_norm:
+        p["q_norm"] = jnp.ones((hd,), dtype)
+        p["k_norm"] = jnp.ones((hd,), dtype)
+    return p
+
+
+def _causal_mask(q_pos, k_pos, window: int):
+    """q_pos: (B, Sq), k_pos: (B, Sk) -> (B, 1, Sq, Sk) bool (True=keep)."""
+    dq = q_pos[:, None, :, None]
+    dk = k_pos[:, None, None, :]
+    keep = dk <= dq
+    if window:
+        keep = keep & (dk > dq - window)
+    return keep
+
+
+def attention(p, x, dims: AttnDims, *, positions, kv_positions=None,
+              policy=ArithmeticPolicy(), qk_norm=False, rope_theta=1e4,
+              window=0, norm_eps=1e-6, cache=None, cache_index=None):
+    """GQA attention. x: (B, S, D).
+
+    cache: optional dict {"k","v"}: (B, Smax, KV, Dh); cache_index: scalar
+    write offset (decode). Returns (out, new_cache_kv or None).
+    """
+    b, s, _ = x.shape
+    h, kv, hd = dims.n_heads, dims.n_kv_heads, dims.head_dim
+    qh = mm(x, p["wq"], policy).reshape(b, s, h, hd)
+    kh = mm(x, p["wk"], policy).reshape(b, s, kv, hd)
+    vh = mm(x, p["wv"], policy).reshape(b, s, kv, hd)
+    if qk_norm:
+        qh = headwise_rmsnorm(p["q_norm"], qh, norm_eps)
+        kh = headwise_rmsnorm(p["k_norm"], kh, norm_eps)
+    qh = apply_rope(qh, positions, rope_theta)
+    kh = apply_rope(kh, positions, rope_theta)
+    if cache is None:
+        # in-sequence attention: when the q-head count doesn't divide the
+        # TP degree, pin q/k/v to one seq-sharded layout so the score
+        # einsum stays device-local (§Perf H2). Divisible archs keep
+        # GSPMD's own (good) placement; cached decode keeps split-KV.
+        qh = attention_heads_constraint(qh, h)
+        kh = attention_heads_constraint(kh, h)
+        vh = attention_heads_constraint(vh, h)
+
+    new_kv = None
+    if cache is not None:
+        smax = cache["k"].shape[1]
+        if s >= smax:
+            # prefill longer than the cache ring (zamba2 sliding-window
+            # buffers): attend in-sequence — the window mask handles
+            # causality — and store only the LAST smax tokens
+            new_kv = {"k": kh[:, -smax:].astype(cache["k"].dtype),
+                      "v": vh[:, -smax:].astype(cache["v"].dtype)}
+            kv_positions = None
+        else:
+            ck = jax.lax.dynamic_update_slice(
+                cache["k"], kh.astype(cache["k"].dtype),
+                (0, cache_index, 0, 0))
+            cv = jax.lax.dynamic_update_slice(
+                cache["v"], vh.astype(cache["v"].dtype),
+                (0, cache_index, 0, 0))
+            kh, vh = ck.astype(x.dtype), cv.astype(x.dtype)
+            new_kv = {"k": ck, "v": cv}
+            if kv_positions is None:
+                kv_positions = jnp.broadcast_to(
+                    jnp.arange(ck.shape[1], dtype=jnp.int32)[None, :],
+                    (b, ck.shape[1]))
+    if kv_positions is None:
+        kv_positions = positions
+
+    g = h // kv
+    qg = qh.reshape(b, s, kv, g, hd)
+    scores = qeinsum("bskgd,btkd->bkgst", qg, kh, policy)
+    scores = scores.astype(jnp.float32) * (hd ** -0.5)
+    mask = _causal_mask(positions, kv_positions, window)      # (B,1,Sq,Sk)
+    scores = jnp.where(mask[:, :, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = qeinsum("bkgst,btkd->bskgd", probs, vh, policy)
+    ctx = ctx.reshape(b, s, h * hd)
+    return mm(ctx, p["wo"], policy), new_kv
+
+
+# ---------------------------------------------------------------------------
+# FFN
+# ---------------------------------------------------------------------------
+
+_ACTS = {"silu": jax.nn.silu, "gelu": jax.nn.gelu, "relu": jax.nn.relu,
+         "relu2": lambda x: jnp.square(jax.nn.relu(x))}
+
+
+def ffn_init(key, d_model: int, d_ff: int, glu: bool, dtype=jnp.float32):
+    ks = jax.random.split(key, 3)
+    p = {"w_up": dense_init(ks[0], d_model, d_ff, dtype),
+         "w_down": dense_init(ks[1], d_ff, d_model, dtype)}
+    if glu:
+        p["w_gate"] = dense_init(ks[2], d_model, d_ff, dtype)
+    return p
+
+
+def ffn(p, x, act: str, glu: bool, policy=ArithmeticPolicy()):
+    up = mm(x, p["w_up"], policy)
+    if glu:
+        up = _ACTS[act](mm(x, p["w_gate"], policy)) * up
+    else:
+        up = _ACTS[act](up)
+    return mm(up, p["w_down"], policy)

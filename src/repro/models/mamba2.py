@@ -1,0 +1,172 @@
+"""Mamba2 (SSD — state-space duality) layer, chunked-parallel form.
+
+Used as the backbone of the zamba2 hybrid. The chunked algorithm (Dao &
+Gu 2024, Alg. 1) maps onto TPU as dense per-chunk einsums plus a
+lax.scan over chunks carrying the (H, N, P) state — sub-quadratic in
+sequence length and MXU-friendly (the per-chunk (L, L) score matrices are
+plain matmuls).
+
+Per layer:
+  in_proj   d -> [z (di), x (di), B (N), C (N), dt (H)]
+  conv1d    causal depthwise width-4 over (x | B | C)
+  SSD       y_t = C_t . S_t,  S_t = exp(dt_t A) S_{t-1} + B_t (dt_t x_t)^T
+  gate      RMSNorm(y * silu(z)) -> out_proj
+
+`policy.apply_to_state` gates SC arithmetic inside the recurrence; by
+default only in_proj/out_proj go through the ARTEMIS ladder (recurrent
+error accumulation violates the 20-acc independence premise — DESIGN.md
+§Arch-applicability).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import ArithmeticPolicy
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def mamba2_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, di, n, h = cfg.d_model, cfg.d_inner, cfg.ssm_state, cfg.ssm_heads
+    conv_ch = di + 2 * n
+    ks = jax.random.split(key, 4)
+    return {
+        "in_proj": L.dense_init(ks[0], d, 2 * di + 2 * n + h, dtype),
+        "conv_w": (jax.random.normal(ks[1], (cfg.conv_width, conv_ch),
+                                     jnp.float32)
+                   * (1.0 / cfg.conv_width) ** 0.5).astype(dtype),
+        "conv_b": jnp.zeros((conv_ch,), dtype),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, h)).astype(dtype),
+        "dt_bias": jnp.full((h,), -3.0, dtype),   # softplus^-1(~0.05)
+        "D": jnp.ones((h,), dtype),
+        "norm": L.rmsnorm_init(di, dtype),
+        "out_proj": L.dense_init(ks[2], di, d, dtype),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    """Decode carry for ONE layer: SSD state + conv tail."""
+    h, n, p = cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim
+    conv_ch = cfg.d_inner + 2 * n
+    return {
+        "ssd": jnp.zeros((batch, h, n, p), dtype),
+        "conv": jnp.zeros((batch, cfg.conv_width - 1, conv_ch), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked SSD scan
+# ---------------------------------------------------------------------------
+
+
+def _ssd_chunked(xbar, bmat, cmat, log_a, s0, chunk: int):
+    """xbar: (B,S,H,P) = dt*x;  bmat/cmat: (B,S,N);  log_a: (B,S,H) <= 0.
+
+    Returns (y: (B,S,H,P), s_final: (B,H,N,P)). Exact chunked evaluation
+    of  S_t = a_t S_{t-1} + B_t xbar_t^T,  y_t = C_t . S_t.
+    """
+    b, s, h, p = xbar.shape
+    n = bmat.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        xbar = jnp.pad(xbar, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        bmat = jnp.pad(bmat, ((0, 0), (0, pad), (0, 0)))
+        cmat = jnp.pad(cmat, ((0, 0), (0, pad), (0, 0)))
+        log_a = jnp.pad(log_a, ((0, 0), (0, pad), (0, 0)))
+    nc = xbar.shape[1] // chunk
+    xbar = xbar.reshape(b, nc, chunk, h, p)
+    bmat = bmat.reshape(b, nc, chunk, n)
+    cmat = cmat.reshape(b, nc, chunk, n)
+    log_a = log_a.reshape(b, nc, chunk, h)
+
+    cum = jnp.cumsum(log_a, axis=2)                       # inclusive
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool))        # s<=t keep
+
+    def body(state, xs):
+        xb, bm, cm, cu = xs                               # per-chunk
+        # intra-chunk: W[t,m,h] = (C_t.B_m) exp(cu_t - cu_m), m<=t
+        scores = jnp.einsum("bln,bmn->blm", cm, bm)
+        # clamp the exponent to <= 0: upper-triangle (masked) entries would
+        # overflow exp and poison the backward pass with 0 * inf = NaN
+        decay = jnp.exp(jnp.minimum(cu[:, :, None, :] - cu[:, None, :, :],
+                                    0.0))
+        w = scores[..., None] * jnp.where(tri[None, :, :, None], decay, 0.0)
+        y = jnp.einsum("blmh,bmhp->blhp", w, xb)
+        # inter-chunk: y_t += C_t . (exp(cu_t) S0)
+        y = y + jnp.einsum("bln,bhnp,blh->blhp", cm, state, jnp.exp(cu))
+        # state update: S' = exp(cu_L) S0 + sum_m exp(cu_L - cu_m) B_m xb_m
+        dlast = jnp.exp(cu[:, -1, None, :] - cu)          # (B,L,H)
+        snew = state * jnp.exp(cu[:, -1, :])[:, :, None, None] \
+            + jnp.einsum("bmn,bmhp,bmh->bhnp", bm, xb, dlast)
+        return snew, y
+
+    xs = (jnp.moveaxis(xbar, 1, 0), jnp.moveaxis(bmat, 1, 0),
+          jnp.moveaxis(cmat, 1, 0), jnp.moveaxis(cum, 1, 0))
+    s_final, ys = jax.lax.scan(body, s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, nc * chunk, h, p)
+    return y[:, :s], s_final
+
+
+def _causal_conv(x, w, b, tail=None):
+    """Depthwise causal conv. x: (B,S,C); w: (W,C); tail: (B,W-1,C)."""
+    width = w.shape[0]
+    if tail is None:
+        tail = jnp.zeros((x.shape[0], width - 1, x.shape[-1]), x.dtype)
+    xp = jnp.concatenate([tail.astype(x.dtype), x], axis=1)
+    out = sum(xp[:, i:i + x.shape[1]] * w[i][None, None, :]
+              for i in range(width))
+    new_tail = xp[:, -(width - 1):] if width > 1 else tail
+    return jax.nn.silu(out + b[None, None, :]), new_tail
+
+
+# ---------------------------------------------------------------------------
+# layer forward
+# ---------------------------------------------------------------------------
+
+
+def mamba2_layer(p, x, cfg: ModelConfig, policy=ArithmeticPolicy(),
+                 state=None):
+    """x: (B, S, d). state: init_state(...) pytree or None.
+
+    Returns (out (B, S, d), new_state or None). With S == 1 and a state
+    this is the O(1) decode step (chunked path degenerates correctly).
+    """
+    b, s, d = x.shape
+    di, n, h, hp = cfg.d_inner, cfg.ssm_state, cfg.ssm_heads, cfg.ssm_head_dim
+    proj = L.mm(x, p["in_proj"], policy)
+    z, xi, bm, cm, dt = jnp.split(
+        proj, [di, 2 * di, 2 * di + n, 2 * di + 2 * n], axis=-1)
+
+    conv_in = jnp.concatenate([xi, bm, cm], axis=-1)
+    tail = state["conv"] if state is not None else None
+    conv_out, new_tail = _causal_conv(conv_in, p["conv_w"], p["conv_b"], tail)
+    xi, bm, cm = jnp.split(conv_out, [di, di + n], axis=-1)
+
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + p["dt_bias"].astype(jnp.float32))   # (B,S,H)
+    a = -jnp.exp(p["A_log"].astype(jnp.float32))               # (H,)
+    log_decay = dt * a[None, None, :]                          # <= 0
+    xh = xi.reshape(b, s, h, hp).astype(jnp.float32)
+    xbar = xh * dt[..., None]
+    bm32, cm32 = bm.astype(jnp.float32), cm.astype(jnp.float32)
+
+    s0 = (state["ssd"].astype(jnp.float32) if state is not None
+          else jnp.zeros((b, h, n, hp), jnp.float32))
+    y, s_final = _ssd_chunked(xbar, bm32, cm32, log_decay, s0,
+                              min(cfg.chunk_size, max(s, 1)))
+    y = y + xh * p["D"].astype(jnp.float32)[None, None, :, None]
+    y = y.reshape(b, s, di).astype(x.dtype)
+
+    y = L.rmsnorm(p["norm"], y * jax.nn.silu(z), cfg.norm_eps)
+    out = L.mm(y, p["out_proj"], policy)
+
+    new_state = None
+    if state is not None:
+        new_state = {"ssd": s_final.astype(state["ssd"].dtype),
+                     "conv": new_tail.astype(state["conv"].dtype)}
+    return out, new_state

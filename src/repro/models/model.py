@@ -1,0 +1,84 @@
+"""Model factory — one `init`/`apply`/`init_cache` surface over all families.
+
+  init(key, cfg)                      -> params pytree
+  apply(params, cfg, inputs, ...)     -> (logits, aux_loss, new_cache)
+  init_cache(cfg, batch, max_len)     -> decode carry (KV / SSM state)
+  lm_loss(logits, labels, mask)       -> mean token cross-entropy
+
+inputs: {"tokens": (B,S) i32 [audio: (B,S,C)],
+         optional "prefix_embeds" (vlm), optional "positions"}.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import ArithmeticPolicy
+from repro.models import rwkv6, transformer, zamba2
+from repro.models.config import ModelConfig
+
+_FAMILY = {
+    "dense": transformer,
+    "moe": transformer,
+    "rwkv6": rwkv6,
+    "zamba2": zamba2,
+}
+
+
+def _mod(cfg: ModelConfig):
+    return _FAMILY[cfg.family]
+
+
+def init(key, cfg: ModelConfig):
+    return _mod(cfg).init(key, cfg)
+
+
+def apply(params, cfg: ModelConfig, inputs: dict, *,
+          policy: ArithmeticPolicy = ArithmeticPolicy(),
+          cache: dict | None = None, remat: bool = True,
+          unroll: int | bool = 1):
+    return _mod(cfg).apply(params, cfg, inputs, policy=policy, cache=cache,
+                           remat=remat, unroll=unroll)
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    if cfg.family == "rwkv6":
+        return rwkv6.init_cache(cfg, batch, max_len, jnp.float32)
+    if cfg.family == "zamba2":
+        return zamba2.init_cache(cfg, batch, max_len, dtype)
+    return transformer.init_cache(cfg, batch, max_len, dtype)
+
+
+def lm_loss(logits: jax.Array, labels: jax.Array,
+            mask: jax.Array | None = None) -> jax.Array:
+    """Mean next-token cross-entropy, tensor-parallel-safe.
+
+    logits: (B, S, V) [audio: (B, S, C, V)]; labels: same minus V, i32.
+    mask: optional (B, S) weights.
+
+    Written as logsumexp - <logits, one_hot> rather than
+    log_softmax + take_along_axis: reductions and the one-hot contraction
+    both shard cleanly over a vocab-TP'd logits dim, whereas the gather
+    forces GSPMD to replicate the full fp32 (B, S, V) tensor — measured
+    at ~650 GB/device of all-reduce per step on the 151k-vocab archs
+    (EXPERIMENTS.md §Perf H1).
+    """
+    logits = logits.astype(jnp.float32)
+    lse = jax.scipy.special.logsumexp(logits, axis=-1)
+    picked = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = lse - picked
+    if nll.ndim == 3:  # audio: mean over codebooks
+        nll = jnp.mean(nll, axis=-1)
+    if mask is None:
+        return jnp.mean(nll)
+    mask = mask.astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+def param_count(params) -> int:
+    return sum(int(x.size) for x in jax.tree.leaves(params))
+
+
+def param_bytes(params) -> int:
+    return sum(int(x.size) * x.dtype.itemsize for x in jax.tree.leaves(params))

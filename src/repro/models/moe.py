@@ -1,0 +1,170 @@
+"""Mixture-of-Experts layer: top-k routing, grouped two-level dispatch.
+
+Design (DESIGN.md §8 + EXPERIMENTS.md §Perf H4): dispatch must lower to
+static shapes AND emit an all-to-all (not a replicated scatter) under
+pjit at dbrx scale. The GShard one-hot (T, E, C) einsum is out (C·E·T
+blow-up); a single global argsort over (T·k,) serializes and made GSPMD
+reshard token buffers with ~150 GB/step of collective-permute at the
+qwen2-moe train cell. Instead, dispatch is HIERARCHICAL:
+
+  1. tokens are viewed as (G, T/G, d), G = data-parallel group count
+     (from the sharding context; 1 outside any mesh) — each group's
+     tokens already live on its devices;
+  2. router logits (fp32, exact — routing is the most truncation-
+     sensitive op; policy.apply_to_router gates SC here) -> top_k;
+  3. PER-GROUP stable sort by expert id + capacity C_g = C/G slots;
+     drops are per-group (GShard-style local capacity — the standard
+     large-scale behavior);
+  4. scatter into the group's (E, C_g, d) buffer — all indices are
+     group-local so the scatter itself never crosses devices;
+  5. one sharding constraint flips (G, E, C_g, d): P(dp,...) ->
+     (E, G, C_g, d): P(ep,...) — THE all-to-all, sized exactly
+     T·k·d (the information-theoretic minimum);
+  6. batched expert FFN over (E, G·C_g, d), E sharded on the expert
+     axis; 7. inverse all-to-all; 8. combine with gate weights
+     (+ shared experts, always-on).
+
+Aux load-balance loss (Switch-style) is returned alongside.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core.policy import ArithmeticPolicy
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.parallel.context import sharding_ctx
+from repro.parallel.sharding import batch_axes
+
+
+def moe_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    e = cfg.padded_experts
+    ks = jax.random.split(key, 3)
+    expert_keys = jax.random.split(ks[0], e)
+    experts = jax.vmap(
+        lambda k: L.ffn_init(k, cfg.d_model, cfg.d_ff_expert, cfg.glu, dtype)
+    )(expert_keys)
+    p = {"router": L.dense_init(ks[1], cfg.d_model, e, dtype),
+         "experts": experts}
+    if cfg.n_shared_experts:
+        shared_keys = jax.random.split(ks[2], cfg.n_shared_experts)
+        p["shared"] = jax.vmap(
+            lambda k: L.ffn_init(k, cfg.d_model, cfg.d_ff_expert, cfg.glu,
+                                 dtype)
+        )(shared_keys)
+    return p
+
+
+def _expert_ffn(expert_params, xs, cfg: ModelConfig, policy):
+    """xs: (E, C, d); expert_params leaves lead with E."""
+    def one(p, x):
+        return L.ffn(p, x, cfg.act, cfg.glu, policy)
+    return jax.vmap(one)(expert_params, xs)
+
+
+def _mesh_groups():
+    """(n_groups, mesh, dp_axes, ep_axis) from the sharding context."""
+    ctx = sharding_ctx()
+    if ctx is None:
+        return 1, None, None, None
+    mesh, rules = ctx
+    bax = batch_axes(mesh)
+    g = 1
+    axes = bax if isinstance(bax, tuple) else ((bax,) if bax else ())
+    for a in axes:
+        g *= mesh.shape[a]
+    return g, mesh, axes, rules.expert_axis
+
+
+def _constrain(x, mesh, spec):
+    if mesh is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def moe_ffn(p, x, cfg: ModelConfig, policy=ArithmeticPolicy()):
+    """x: (B, S, d) -> (out (B, S, d), aux_loss scalar)."""
+    b, s, d = x.shape
+    t = b * s
+    e, k = cfg.padded_experts, cfg.top_k
+    g_mesh, mesh, dp_axes, ep_axis = _mesh_groups()
+    # groups must divide tokens; degenerate cells (tiny batches) fall back
+    g = g_mesh if (g_mesh and t % g_mesh == 0 and b % g_mesh == 0) else 1
+    tg = t // g
+    dp_spec = dp_axes if (dp_axes and len(dp_axes) > 1) else (
+        dp_axes[0] if dp_axes else None)
+
+    xt = x.reshape(g, tg, d)
+    xt = _constrain(xt, mesh, P(dp_spec, None, None))
+
+    # --- routing (exact fp32 unless the policy opts the router in) -------
+    rpol = policy if policy.apply_to_router else ArithmeticPolicy(mode="exact")
+    logits = L.mm(xt.astype(jnp.float32), p["router"].astype(jnp.float32),
+                  rpol)                                   # (G, Tg, E)
+    if cfg.padded_experts != cfg.n_experts:               # mask pad experts
+        pad_mask = jnp.arange(e) < cfg.n_experts
+        logits = jnp.where(pad_mask[None, None, :], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, ids = jax.lax.top_k(probs, k)                   # (G, Tg, k)
+    gate = gate / jnp.sum(gate, axis=-1, keepdims=True)
+
+    # --- aux load-balance loss (Switch eq. 4) ----------------------------
+    density = jnp.mean(jax.nn.one_hot(ids[..., 0], e, dtype=jnp.float32),
+                       axis=(0, 1))
+    mean_probs = jnp.mean(probs, axis=(0, 1))
+    aux = cfg.router_aux_weight * e * jnp.sum(density * mean_probs)
+
+    # --- per-group sort-based dispatch (device-local) ---------------------
+    cap = max(int(cfg.capacity_factor * tg * k / e), 1)
+    flat_ids = ids.reshape(g, tg * k)
+    order = jnp.argsort(flat_ids, axis=-1, stable=True)    # (G, Tg*k)
+    sorted_ids = jnp.take_along_axis(flat_ids, order, axis=-1)
+    seg_start = jax.vmap(
+        lambda sid: jnp.searchsorted(sid, jnp.arange(e), side="left")
+    )(sorted_ids)                                          # (G, E)
+    slot = jnp.arange(tg * k)[None, :] \
+        - jnp.take_along_axis(seg_start, sorted_ids, axis=-1)
+    keep = slot < cap
+    dest = jnp.where(keep, sorted_ids * cap + slot, e * cap)
+
+    src_token = order // k                                 # (G, Tg*k)
+    buf = jnp.zeros((g, e * cap, d), x.dtype)
+    buf = jax.vmap(lambda bb, dd, ss, xx: bb.at[dd].set(xx[ss],
+                                                        mode="drop"))(
+        buf, dest, src_token, xt)
+    buf = buf.reshape(g, e, cap, d)
+    buf = _constrain(buf, mesh, P(dp_spec, None, None, None))
+
+    # --- THE all-to-all: (G, E, C, d) dp-sharded -> (E, G, C, d) EP ------
+    # E flips dp->ep while G KEEPS its dp sharding: each device then holds
+    # (E/ep, G/dp, C, d) — its own experts x its own token groups
+    bufT = jnp.swapaxes(buf, 0, 1)                        # (E, G, C, d)
+    bufT = _constrain(bufT, mesh, P(ep_axis, dp_spec, None, None))
+
+    out_e = _expert_ffn(p["experts"], bufT.reshape(e, g * cap, d), cfg,
+                        policy)
+    out_e = _constrain(out_e.reshape(e, g, cap, d), mesh,
+                       P(ep_axis, dp_spec, None, None))
+
+    # --- inverse all-to-all + combine --------------------------------------
+    out_g = jnp.swapaxes(out_e, 0, 1).reshape(g, e * cap, d)
+    out_g = _constrain(out_g, mesh, P(dp_spec, None, None))
+    copy_out = jax.vmap(lambda oo, dd: oo.at[dd, :].get(
+        mode="fill", fill_value=0))(out_g, dest)
+    copy_out = jnp.where(keep[..., None], copy_out, 0)
+    w = jnp.take_along_axis(gate.reshape(g, tg * k), order, axis=-1)
+    combined = jax.vmap(lambda st, co, ww: jnp.zeros(
+        (tg, d), x.dtype).at[st].add(co * ww[:, None].astype(x.dtype)))(
+        src_token, copy_out, w)
+    combined = _constrain(combined, mesh, P(dp_spec, None, None))
+
+    # --- shared experts (always active) ------------------------------------
+    if cfg.n_shared_experts:
+        def one(sp):
+            return L.ffn(sp, xt.reshape(t, d), cfg.act, cfg.glu, policy)
+        shared = jax.vmap(one)(p["shared"])               # (Ns, T, d)
+        combined = combined.reshape(t, d) + jnp.sum(shared, axis=0)
+
+    return combined.reshape(b, s, d), aux

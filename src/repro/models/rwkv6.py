@@ -1,0 +1,288 @@
+"""RWKV-6 "Finch" — attention-free, data-dependent per-channel decay.
+
+Chunked-parallel wkv evaluation (exact, not an approximation):
+
+  S_t = diag(w_t) S_{t-1} + k_t v_t^T          (state: (H, N, N))
+  o_t = r_t . S_{t-1} + (r_t . (u * k_t)) v_t   (bonus on the current token)
+
+Within a chunk of length L the pairwise per-channel decay
+exp(lc_{t-1} - lc_m) (<= 1, so fp32-stable) is contracted directly:
+A[t,m] = sum_i r_{t,i} k_{m,i} exp(lc_{t-1,i} - lc_{m,i}) for m < t.
+A lax.scan over chunks carries S. This is the paper's token-dataflow
+degenerate case: sequence sharding needs only a chunk-boundary state
+pass, no ring (DESIGN.md §Arch-applicability).
+
+Time-mix uses the RWKV6 ddlerp (low-rank data-dependent token-shift
+mixing); channel-mix is the relu^2 MLP. Norms are LayerNorm (as in the
+reference implementation).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import ArithmeticPolicy
+from repro.models import layers as L
+from repro.models.config import ModelConfig
+from repro.parallel.context import activation_constraint
+
+LORA_MIX = 32     # ddlerp rank
+LORA_DECAY = 64   # decay lora rank
+
+
+# ---------------------------------------------------------------------------
+# layernorm (RWKV uses LN, not RMSNorm)
+# ---------------------------------------------------------------------------
+
+
+def ln_init(d, dtype=jnp.float32):
+    return {"scale": jnp.ones((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(p, x, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    x = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (x * p["scale"].astype(jnp.float32)
+            + p["bias"].astype(jnp.float32)).astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+
+
+def rwkv6_layer_init(key, cfg: ModelConfig, dtype=jnp.float32):
+    d, dff = cfg.d_model, cfg.d_ff
+    h = cfg.d_model // cfg.ssm_head_dim
+    n = cfg.ssm_head_dim
+    ks = jax.random.split(key, 12)
+    u = 0.5 * jnp.ones((h, n), jnp.float32)
+    return {
+        "ln1": ln_init(d, dtype), "ln2": ln_init(d, dtype),
+        # time-mix ddlerp
+        "maa_x": jnp.full((d,), 0.5, dtype),
+        "maa_wkvrg": jnp.full((5, d), 0.5, dtype),
+        "maa_w1": (jax.random.normal(ks[0], (d, 5 * LORA_MIX), jnp.float32)
+                   * 1e-2).astype(dtype),
+        "maa_w2": (jax.random.normal(ks[1], (5, LORA_MIX, d), jnp.float32)
+                   * 1e-2).astype(dtype),
+        # data-dependent decay
+        "td_base": jnp.full((d,), -1.0, dtype),   # w ~ exp(-exp(-1)) ~ .69
+        "td_w1": (jax.random.normal(ks[2], (d, LORA_DECAY), jnp.float32)
+                  * 1e-2).astype(dtype),
+        "td_w2": (jax.random.normal(ks[3], (LORA_DECAY, d), jnp.float32)
+                  * 1e-2).astype(dtype),
+        "u": u.astype(dtype),
+        "wr": L.dense_init(ks[4], d, d, dtype),
+        "wk": L.dense_init(ks[5], d, d, dtype),
+        "wv": L.dense_init(ks[6], d, d, dtype),
+        "wg": L.dense_init(ks[7], d, d, dtype),
+        "wo": L.dense_init(ks[8], d, d, dtype),
+        "ln_x": ln_init(d, dtype),
+        # channel-mix
+        "cm_maa_k": jnp.full((d,), 0.5, dtype),
+        "cm_maa_r": jnp.full((d,), 0.5, dtype),
+        "cm_wk": L.dense_init(ks[9], d, dff, dtype),
+        "cm_wv": L.dense_init(ks[10], dff, d, dtype),
+        "cm_wr": L.dense_init(ks[11], d, d, dtype),
+    }
+
+
+def init_state(cfg: ModelConfig, batch: int, dtype=jnp.float32):
+    """Decode carry for ONE layer."""
+    h = cfg.d_model // cfg.ssm_head_dim
+    n = cfg.ssm_head_dim
+    return {
+        "x_tm": jnp.zeros((batch, cfg.d_model), dtype),
+        "x_cm": jnp.zeros((batch, cfg.d_model), dtype),
+        "wkv": jnp.zeros((batch, h, n, n), dtype),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked wkv
+# ---------------------------------------------------------------------------
+
+
+def _wkv_chunked(r, k, v, log_w, u, s0, chunk: int):
+    """r,k,v: (B,S,H,N); log_w: (B,S,H,N) <= 0; u: (H,N); s0: (B,H,N,N).
+
+    Returns (o: (B,S,H,N), s_final)."""
+    b, s, h, n = r.shape
+    pad = (-s) % chunk
+    if pad:
+        z = ((0, 0), (0, pad), (0, 0), (0, 0))
+        r, k, v = jnp.pad(r, z), jnp.pad(k, z), jnp.pad(v, z)
+        log_w = jnp.pad(log_w, z)
+    nc = r.shape[1] // chunk
+    shp = (b, nc, chunk, h, n)
+    r, k, v, log_w = (a.reshape(shp) for a in (r, k, v, log_w))
+    lc = jnp.cumsum(log_w, axis=2)                    # inclusive
+    # exclusive cumsum for the output side (S_{t-1} uses lc_{t-1})
+    lx = lc - log_w
+    strict = jnp.tril(jnp.ones((chunk, chunk), bool), k=-1)
+
+    def body(state, xs):
+        rc, kc, vc, lcc, lxc = xs                     # (B,L,H,N)
+        # intra: A[t,m] = sum_i r_t k_m exp(lx_t - lc_m), m < t
+        dec = jnp.exp(jnp.clip(
+            lxc[:, :, None, :, :] - lcc[:, None, :, :, :], -60.0, 0.0))
+        amat = jnp.einsum("bthn,bmhn,btmhn->bhtm", rc, kc, dec)
+        amat = jnp.where(strict[None, None], amat, 0.0)
+        o = jnp.einsum("bhtm,bmhn->bthn", amat, vc)
+        # bonus (current token)
+        o = o + jnp.einsum("bthn,hn,bthn->bth", rc, u, kc)[..., None] * vc
+        # inter: o_t += (r_t * exp(lx_t)) . S0
+        o = o + jnp.einsum("bthn,bhnj->bthj", rc * jnp.exp(lxc), state)
+        # state: S' = diag(exp(lc_L)) S0 + sum_m exp(lc_L - lc_m) k_m v_m^T
+        dlast = jnp.exp(lcc[:, -1, None, :, :] - lcc)  # (B,L,H,N)
+        snew = state * jnp.exp(lcc[:, -1])[:, :, :, None] \
+            + jnp.einsum("bmhn,bmhj->bhnj", kc * dlast, vc)
+        return snew, o
+
+    xs = tuple(jnp.moveaxis(a, 1, 0) for a in (r, k, v, lc, lx))
+    s_final, os = jax.lax.scan(body, s0, xs)
+    o = jnp.moveaxis(os, 0, 1).reshape(b, nc * chunk, h, n)
+    return o[:, :s], s_final
+
+
+# ---------------------------------------------------------------------------
+# layer forward
+# ---------------------------------------------------------------------------
+
+
+def _shift(x, prev):
+    """Token shift: prev token's activation. x: (B,S,d), prev: (B,d)|None."""
+    if prev is None:
+        prev = jnp.zeros_like(x[:, 0])
+    return jnp.concatenate([prev[:, None], x[:, :-1]], axis=1)
+
+
+def rwkv6_layer(p, x, cfg: ModelConfig, policy=ArithmeticPolicy(),
+                state=None):
+    """x: (B, S, d) -> (out, new_state or None)."""
+    b, s, d = x.shape
+    h = d // cfg.ssm_head_dim
+    n = cfg.ssm_head_dim
+
+    # ---- time mix ---------------------------------------------------------
+    xt = layernorm(p["ln1"], x)
+    prev = state["x_tm"].astype(xt.dtype) if state is not None else None
+    xprev = _shift(xt, prev)
+    dx = xprev - xt
+    xxx = xt + dx * p["maa_x"].astype(xt.dtype)
+    delta = jnp.tanh(jnp.einsum("bsd,dr->bsr", xxx, p["maa_w1"].astype(
+        xt.dtype))).reshape(b, s, 5, LORA_MIX)
+    dyn = jnp.einsum("bsfr,frd->bsfd", delta, p["maa_w2"].astype(xt.dtype))
+    mixes = xt[:, :, None] + dx[:, :, None] * (
+        p["maa_wkvrg"].astype(xt.dtype)[None, None] + dyn)   # (B,S,5,d)
+    mw, mk, mv, mr, mg = (mixes[:, :, i] for i in range(5))
+
+    dd = jnp.tanh(L.mm(mw, p["td_w1"], policy)).astype(jnp.float32)
+    log_w = -jnp.exp(jnp.clip(
+        p["td_base"].astype(jnp.float32)[None, None]
+        + jnp.matmul(dd, p["td_w2"].astype(jnp.float32)), -8.0, 6.0))
+
+    # projections go through the policy ladder; the wkv recurrence itself
+    # stays exact fp32 (DESIGN.md §Arch-applicability)
+    r = L.mm(mr, p["wr"], policy).reshape(b, s, h, n).astype(jnp.float32)
+    k = L.mm(mk, p["wk"], policy).reshape(b, s, h, n).astype(jnp.float32)
+    v = L.mm(mv, p["wv"], policy).reshape(b, s, h, n).astype(jnp.float32)
+    g = jax.nn.silu(L.mm(mg, p["wg"], policy))
+    log_w = log_w.reshape(b, s, h, n)
+
+    s0 = (state["wkv"].astype(jnp.float32) if state is not None
+          else jnp.zeros((b, h, n, n), jnp.float32))
+    o, s_final = _wkv_chunked(r, k, v, log_w, p["u"].astype(jnp.float32),
+                              s0, min(cfg.chunk_size, max(s, 1)))
+    o = o.reshape(b, s, d).astype(x.dtype)
+    o = layernorm(p["ln_x"], o) * g
+    x = x + L.mm(o, p["wo"], policy)
+
+    # ---- channel mix ------------------------------------------------------
+    xc = layernorm(p["ln2"], x)
+    prevc = state["x_cm"].astype(xc.dtype) if state is not None else None
+    xprevc = _shift(xc, prevc)
+    dxc = xprevc - xc
+    xk = xc + dxc * p["cm_maa_k"].astype(xc.dtype)
+    xr = xc + dxc * p["cm_maa_r"].astype(xc.dtype)
+    kk = jnp.square(jax.nn.relu(L.mm(xk, p["cm_wk"], policy)))
+    cm = jax.nn.sigmoid(L.mm(xr, p["cm_wr"], policy)) \
+        * L.mm(kk, p["cm_wv"], policy)
+    x = x + cm
+
+    new_state = None
+    if state is not None:
+        new_state = {
+            "x_tm": xt[:, -1].astype(state["x_tm"].dtype),
+            "x_cm": xc[:, -1].astype(state["x_cm"].dtype),
+            "wkv": s_final.astype(state["wkv"].dtype),
+        }
+    return x, new_state
+
+
+# ---------------------------------------------------------------------------
+# model level (embed -> scan over layers -> head)
+# ---------------------------------------------------------------------------
+
+
+def init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 4)
+    v, d = cfg.padded_vocab, cfg.d_model
+    layer_keys = jax.random.split(ks[1], cfg.n_layers)
+    layers = jax.vmap(lambda k: rwkv6_layer_init(k, cfg, dtype))(layer_keys)
+    params = {"embed": L.embed_init(ks[0], v, d, dtype),
+              "ln0": ln_init(d, dtype),          # RWKV's post-embed LN
+              "layers": layers,
+              "final_norm": ln_init(d, dtype)}
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(ks[2], d, v, dtype)
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int = 0,
+               dtype=jnp.float32):
+    """Decode carry, stacked (L, ...). max_len unused (O(1) state)."""
+    st = init_state(cfg, batch, dtype)
+    return {
+        "layers": jax.tree.map(
+            lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), st),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def apply(params, cfg: ModelConfig, inputs: dict, *,
+          policy: ArithmeticPolicy = ArithmeticPolicy(),
+          cache: dict | None = None, remat: bool = True,
+          unroll: int | bool = 1):
+    """Returns (logits, aux(=0), new_cache)."""
+    from repro.models.transformer import _embed_tokens, _logits
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = _embed_tokens(params, cfg, inputs["tokens"], dtype)
+    x = layernorm(params["ln0"], x)
+
+    def body(carry, xs):
+        x = carry
+        st = xs.get("state")
+        out, new_st = rwkv6_layer(xs["lp"], x, cfg, policy, st)
+        out = activation_constraint(out, "resid")
+        ys = {"state": new_st} if cache is not None else None
+        return out, ys
+
+    scan_body = jax.checkpoint(body) if remat else body
+    xs = {"lp": params["layers"]}
+    if cache is not None:
+        xs["state"] = cache["layers"]
+    x, ys = jax.lax.scan(scan_body, x, xs, unroll=unroll)
+    x = layernorm(params["final_norm"], x)
+    logits = _logits(params, cfg, x)
+    logits = activation_constraint(logits, "logits")
+    new_cache = None
+    if cache is not None:
+        new_cache = {"layers": ys["state"],
+                     "index": cache["index"] + inputs["tokens"].shape[1]}
+    return logits, jnp.zeros((), jnp.float32), new_cache

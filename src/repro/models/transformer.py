@@ -1,0 +1,194 @@
+"""Decoder-only transformer (dense + MoE families), scan-over-layers.
+
+Params layout (all leaves `cfg.param_dtype`):
+  embed       (V, d)            audio: (n_codebooks, V, d)
+  layers      per-layer pytree stacked on a leading L axis (lax.scan)
+  final_norm  rmsnorm
+  head        (d, V)            audio: (n_codebooks, d, V); absent if tied
+
+KV cache layout (decode): {"k"/"v": (L, B, Smax, KV, Dh), "index": i32[]}.
+`apply` is the single forward entry point — training (no cache), prefill
+(cache, index 0) and decode (cache, S==1) all route through it.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import ArithmeticPolicy
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models.config import ModelConfig
+from repro.parallel.context import activation_constraint
+
+
+def _dims(cfg: ModelConfig) -> L.AttnDims:
+    return L.AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim)
+
+
+def _layer_init(key, cfg: ModelConfig, dtype):
+    ks = jax.random.split(key, 4)
+    p = {
+        "ln1": L.rmsnorm_init(cfg.d_model, dtype),
+        "attn": L.attn_init(ks[0], cfg.d_model, _dims(cfg), cfg.qk_norm,
+                            dtype),
+        "ln2": L.rmsnorm_init(cfg.d_model, dtype),
+    }
+    if cfg.family == "moe":
+        p["moe"] = M.moe_init(ks[1], cfg, dtype)
+    else:
+        p["ffn"] = L.ffn_init(ks[1], cfg.d_model, cfg.d_ff, cfg.glu, dtype)
+    return p
+
+
+def init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 3)
+    v, d = cfg.padded_vocab, cfg.d_model
+    if cfg.modality == "audio":
+        embed = jax.vmap(lambda k: L.embed_init(k, v, d, dtype))(
+            jax.random.split(ks[0], cfg.n_codebooks))
+    else:
+        embed = L.embed_init(ks[0], v, d, dtype)
+    layer_keys = jax.random.split(ks[1], cfg.n_layers)
+    layers = jax.vmap(lambda k: _layer_init(k, cfg, dtype))(layer_keys)
+    params = {"embed": embed, "layers": layers,
+              "final_norm": L.rmsnorm_init(d, dtype)}
+    if not cfg.tie_embeddings:
+        if cfg.modality == "audio":
+            params["head"] = jax.vmap(
+                lambda k: L.dense_init(k, d, v, dtype))(
+                jax.random.split(ks[2], cfg.n_codebooks))
+        else:
+            params["head"] = L.dense_init(ks[2], d, v, dtype)
+    return params
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (cfg.n_layers, batch, max_len, kv, hd)
+    return {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype),
+            "index": jnp.zeros((), jnp.int32)}
+
+
+def _embed_tokens(params, cfg: ModelConfig, tokens, dtype):
+    if cfg.modality == "audio":
+        # tokens: (B, S, n_codebooks); sum codebook embeddings
+        x = jnp.sum(jax.vmap(
+            lambda e, t: e[t], in_axes=(0, 2), out_axes=0
+        )(params["embed"], tokens), axis=0)
+    else:
+        x = params["embed"][tokens]
+    x = x.astype(dtype)
+    if cfg.scale_embeddings:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, dtype)
+    return x
+
+
+def _logits(params, cfg: ModelConfig, x):
+    if cfg.tie_embeddings:
+        w = params["embed"]
+        if cfg.modality == "audio":
+            return jnp.einsum("bsd,cvd->bscv", x, w.astype(x.dtype))
+        return jnp.matmul(x, w.astype(x.dtype).T)
+    if cfg.modality == "audio":
+        return jnp.einsum("bsd,cdv->bscv", x, params["head"].astype(x.dtype))
+    return jnp.matmul(x, params["head"].astype(x.dtype))
+
+
+def _block(lp, x, cfg: ModelConfig, policy, positions, kv_positions,
+           cache_kv, cache_index, window):
+    h, new_kv = L.attention(
+        lp["attn"], L.rmsnorm(lp["ln1"], x, cfg.norm_eps), _dims(cfg),
+        positions=positions, kv_positions=kv_positions, policy=policy,
+        qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta, window=window,
+        norm_eps=cfg.norm_eps, cache=cache_kv, cache_index=cache_index)
+    x = x + h
+    aux = jnp.zeros((), jnp.float32)
+    if cfg.family == "moe":
+        f, aux = M.moe_ffn(lp["moe"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps),
+                           cfg, policy)
+    else:
+        f = L.ffn(lp["ffn"], L.rmsnorm(lp["ln2"], x, cfg.norm_eps),
+                  cfg.act, cfg.glu, policy)
+    return x + f, aux, new_kv
+
+
+def apply(params, cfg: ModelConfig, inputs: dict, *,
+          policy: ArithmeticPolicy = ArithmeticPolicy(),
+          cache: dict | None = None, remat: bool = True,
+          unroll: int | bool = 1):
+    """Forward pass.
+
+    inputs: {"tokens": (B,S) i32 [audio: (B,S,C)],
+             optional "prefix_embeds": (B,P,d) (vlm frontend stub),
+             optional "positions": (B,S)}
+    unroll: layer-scan unroll factor (True = full). The dry-run lowers
+    with full unroll so `cost_analysis()` counts every layer (XLA counts
+    a while-loop body ONCE regardless of trip count — verified; see
+    EXPERIMENTS.md §Dry-run methodology).
+    Returns (logits, aux_loss, new_cache).
+    """
+    dtype = jnp.dtype(cfg.compute_dtype)
+    tokens = inputs["tokens"]
+    x = _embed_tokens(params, cfg, tokens, dtype)
+    if "prefix_embeds" in inputs and inputs["prefix_embeds"] is not None:
+        x = jnp.concatenate(
+            [inputs["prefix_embeds"].astype(dtype), x], axis=1)
+    b, s, _ = x.shape
+
+    index = cache["index"] if cache is not None else jnp.zeros((), jnp.int32)
+    positions = inputs.get("positions")
+    if positions is None:
+        positions = index + jnp.arange(s, dtype=jnp.int32)[None, :]
+        positions = jnp.broadcast_to(positions, (b, s))
+    kv_positions = None
+    if cache is not None:
+        smax = cache["k"].shape[2]
+        kv_positions = jnp.broadcast_to(
+            jnp.arange(smax, dtype=jnp.int32)[None, :], (b, smax))
+        # mask out cache slots not yet written
+        kv_positions = jnp.where(kv_positions <= jnp.max(positions),
+                                 kv_positions, jnp.iinfo(jnp.int32).max)
+
+    window = cfg.attn_window
+
+    def body(carry, lp):
+        # the FULL stacked KV cache travels in the carry and is updated
+        # in place per layer (dynamic_update_index) — with donated inputs
+        # XLA aliases the buffer end-to-end, vs ys-stacking which
+        # re-materializes the whole cache every step (§Perf H5)
+        x, aux, ck, cv, li = carry
+        ckv = None
+        if cache is not None:
+            ckv = {"k": jax.lax.dynamic_index_in_dim(ck, li, 0, False),
+                   "v": jax.lax.dynamic_index_in_dim(cv, li, 0, False)}
+        x, a, new_kv = _block(lp, x, cfg, policy, positions, kv_positions,
+                              ckv, index, window)
+        x = activation_constraint(x, "resid")
+        if cache is not None:
+            ck = jax.lax.dynamic_update_index_in_dim(ck, new_kv["k"], li, 0)
+            cv = jax.lax.dynamic_update_index_in_dim(cv, new_kv["v"], li, 0)
+        return (x, aux + a, ck, cv, li + 1), None
+
+    scan_body = jax.checkpoint(body) if remat else body
+    x = activation_constraint(x, "resid")
+    if cache is not None:
+        ck0, cv0 = cache["k"], cache["v"]
+    else:
+        ck0 = cv0 = jnp.zeros((), jnp.bfloat16)  # unused placeholder
+    (x, aux, ck, cv, _), _ = jax.lax.scan(
+        scan_body, (x, jnp.zeros((), jnp.float32), ck0, cv0,
+                    jnp.zeros((), jnp.int32)),
+        params["layers"], unroll=unroll)
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _logits(params, cfg, x)
+    logits = activation_constraint(logits, "logits")
+
+    new_cache = None
+    if cache is not None:
+        new_cache = {"k": ck, "v": cv, "index": index + s}
+    return logits, aux, new_cache

@@ -1,0 +1,207 @@
+"""Zamba2-style hybrid: Mamba2 (SSD) backbone + one SHARED transformer
+block applied every `shared_attn_period` layers (weights reused across
+invocations — the Zamba2 parameter-sharing trick, arXiv:2411.15242).
+
+Simplifications vs. the released checkpoints (recorded in DESIGN.md):
+per-invocation LoRA deltas on the shared block are omitted; the shared
+block consumes the hidden state directly (no concat-with-embedding
+projector). The layer count, widths, SSM state size, and the
+share-every-k structure match the assigned config.
+
+Decode cache:
+  mamba  — per-layer SSD + conv states, stacked (L, ...)
+  attn   — per-invocation KV ring buffers (n_inv, B, Sc, KV, Dh) with a
+           stored absolute-position array (ring => sliding window for the
+           long_500k cell; Sc = attn_window when set, else max_len)
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import ArithmeticPolicy
+from repro.models import layers as L
+from repro.models import mamba2 as M2
+from repro.models.config import ModelConfig
+from repro.models.transformer import _embed_tokens, _logits
+from repro.parallel.context import activation_constraint
+
+INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _dims(cfg: ModelConfig) -> L.AttnDims:
+    return L.AttnDims(cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim)
+
+
+def init(key, cfg: ModelConfig):
+    dtype = jnp.dtype(cfg.param_dtype)
+    ks = jax.random.split(key, 5)
+    v, d = cfg.padded_vocab, cfg.d_model
+    layer_keys = jax.random.split(ks[1], cfg.n_layers)
+    layers = jax.vmap(lambda k: M2.mamba2_init(k, cfg, dtype))(layer_keys)
+    kk = jax.random.split(ks[2], 2)
+    shared = {
+        "ln1": L.rmsnorm_init(d, dtype),
+        "attn": L.attn_init(kk[0], d, _dims(cfg), cfg.qk_norm, dtype),
+        "ln2": L.rmsnorm_init(d, dtype),
+        "ffn": L.ffn_init(kk[1], d, cfg.d_ff, cfg.glu, dtype),
+    }
+    params = {"embed": L.embed_init(ks[0], v, d, dtype),
+              "layers": layers, "shared": shared,
+              "final_norm": L.rmsnorm_init(d, dtype)}
+    if not cfg.tie_embeddings:
+        params["head"] = L.dense_init(ks[3], d, v, dtype)
+    return params
+
+
+def n_invocations(cfg: ModelConfig) -> int:
+    return cfg.n_layers // cfg.shared_attn_period
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16):
+    ninv = n_invocations(cfg)
+    kv, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    sc = min(max_len, cfg.attn_window) if cfg.attn_window else max_len
+    st = M2.init_state(cfg, batch)
+    mamba = jax.tree.map(
+        lambda a: jnp.zeros((cfg.n_layers,) + a.shape, a.dtype), st)
+    return {
+        "mamba": mamba,
+        "attn_k": jnp.zeros((ninv, batch, sc, kv, hd), dtype),
+        "attn_v": jnp.zeros((ninv, batch, sc, kv, hd), dtype),
+        "attn_pos": jnp.full((batch, sc), INT32_MAX, jnp.int32),
+        "index": jnp.zeros((), jnp.int32),
+    }
+
+
+def _shared_block(sp, x, cfg, policy, positions, kv_positions, cache_kv,
+                  slot):
+    h, new_kv = L.attention(
+        sp["attn"], L.rmsnorm(sp["ln1"], x, cfg.norm_eps), _dims(cfg),
+        positions=positions, kv_positions=kv_positions, policy=policy,
+        qk_norm=cfg.qk_norm, rope_theta=cfg.rope_theta,
+        window=cfg.attn_window, norm_eps=cfg.norm_eps,
+        cache=cache_kv, cache_index=slot)
+    x = x + h
+    f = L.ffn(sp["ffn"], L.rmsnorm(sp["ln2"], x, cfg.norm_eps),
+              cfg.act, cfg.glu, policy)
+    return x + f, new_kv
+
+
+def apply(params, cfg: ModelConfig, inputs: dict, *,
+          policy: ArithmeticPolicy = ArithmeticPolicy(),
+          cache: dict | None = None, remat: bool = True,
+          unroll: int | bool = 1):
+    """Returns (logits, aux(=0), new_cache)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = _embed_tokens(params, cfg, inputs["tokens"], dtype)
+    b, s, d = x.shape
+    period = cfg.shared_attn_period
+    ninv = n_invocations(cfg)
+    tail = cfg.n_layers - ninv * period
+
+    index = cache["index"] if cache is not None else jnp.zeros((), jnp.int32)
+    positions = inputs.get("positions")
+    if positions is None:
+        positions = jnp.broadcast_to(
+            index + jnp.arange(s, dtype=jnp.int32)[None, :], (b, s))
+
+    # -- attention cache bookkeeping (ring) ---------------------------------
+    kv_positions = None
+    slot = jnp.zeros((), jnp.int32)
+    new_pos = None
+    if cache is not None:
+        sc = cache["attn_k"].shape[2]
+        if s >= sc:
+            # prefill longer than the window ring: attention runs
+            # in-sequence (L.attention's s >= smax path); the ring ends
+            # up holding the last sc tokens
+            new_pos = positions[:, -sc:]
+            kv_positions = None
+        else:
+            slot = jnp.remainder(index, sc)
+            new_pos = jax.lax.dynamic_update_slice(
+                cache["attn_pos"], positions, (0, slot))
+            kv_positions = new_pos
+
+    # -- scan over invocation groups ---------------------------------------
+    def mamba_body(carry, xs):
+        x = carry["x"]
+        st = None
+        if cache is not None:
+            st = xs["state"]
+        out, new_st = M2.mamba2_layer(xs["lp"], x, cfg, policy, st)
+        ys = {"state": new_st} if cache is not None else None
+        return {"x": x + out}, ys
+
+    mamba_scan = jax.checkpoint(mamba_body) if remat else mamba_body
+
+    def run_layers(x, lps, states):
+        xs = {"lp": lps}
+        if cache is not None:
+            xs["state"] = states
+        carry, ys = jax.lax.scan(mamba_scan, {"x": x}, xs, unroll=unroll)
+        return carry["x"], (ys["state"] if cache is not None else None)
+
+    def take(tree, lo, hi, reshape=None):
+        def f(a):
+            a = a[lo:hi]
+            if reshape is not None:
+                a = a.reshape(reshape + a.shape[1:])
+            return a
+        return jax.tree.map(f, tree)
+
+    grp_lps = take(params["layers"], 0, ninv * period, (ninv, period))
+    grp_states = None
+    if cache is not None:
+        grp_states = take(cache["mamba"], 0, ninv * period, (ninv, period))
+
+    def group_body(carry, xs):
+        x = carry["x"]
+        x, new_states = run_layers(x, xs["lps"],
+                                   xs.get("states"))
+        ckv = None
+        if cache is not None:
+            ckv = {"k": xs["ck"], "v": xs["cv"]}
+        x, new_kv = _shared_block(params["shared"], x, cfg, policy,
+                                  positions, kv_positions, ckv, slot)
+        x = activation_constraint(x, "resid")
+        ys = {}
+        if cache is not None:
+            ys = {"states": new_states,
+                  "ck": new_kv["k"], "cv": new_kv["v"]}
+        return {"x": x}, ys
+
+    xs = {"lps": grp_lps}
+    if cache is not None:
+        xs["states"] = grp_states
+        xs["ck"], xs["cv"] = cache["attn_k"], cache["attn_v"]
+    carry, ys = jax.lax.scan(group_body, {"x": x}, xs, unroll=unroll)
+    x = carry["x"]
+
+    new_tail_states = None
+    if tail:
+        x, new_tail_states = run_layers(
+            x, take(params["layers"], ninv * period, cfg.n_layers),
+            take(cache["mamba"], ninv * period, cfg.n_layers)
+            if cache is not None else None)
+
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = _logits(params, cfg, x)
+    logits = activation_constraint(logits, "logits")
+
+    new_cache = None
+    if cache is not None:
+        grp = jax.tree.map(
+            lambda a: a.reshape((ninv * period,) + a.shape[2:]),
+            ys["states"])
+        if tail:
+            mamba = jax.tree.map(
+                lambda a, t: jnp.concatenate([a, t], axis=0),
+                grp, new_tail_states)
+        else:
+            mamba = grp
+        new_cache = {"mamba": mamba, "attn_k": ys["ck"], "attn_v": ys["cv"],
+                     "attn_pos": new_pos, "index": index + s}
+    return logits, jnp.zeros((), jnp.float32), new_cache

@@ -1,0 +1,26 @@
+from repro.parallel.sharding import (
+    ShardingRules,
+    batch_axes,
+    batch_specs,
+    cache_specs,
+    param_specs,
+)
+from repro.parallel.context import (
+    activation_constraint,
+    sharding_ctx,
+    use_sharding,
+)
+from repro.parallel.ring_attention import ring_attention
+from repro.parallel.split_kv import split_kv_attention
+from repro.parallel.compress import (
+    CompressionState,
+    compressed_psum,
+    init_compression,
+)
+
+__all__ = [
+    "ShardingRules", "param_specs", "batch_specs", "cache_specs",
+    "batch_axes", "activation_constraint", "use_sharding", "sharding_ctx",
+    "ring_attention", "split_kv_attention",
+    "CompressionState", "compressed_psum", "init_compression",
+]

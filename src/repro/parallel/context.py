@@ -1,0 +1,105 @@
+"""Activation-sharding context — constraint hooks without threading a mesh
+through every model function.
+
+The launcher installs (mesh, rules) in a contextvar; model code calls
+`activation_constraint(x, kind)` at block boundaries. Outside any context
+(unit tests, single-device runs) the hooks are identity.
+
+kinds:
+  "resid"   (B, S, d) residual-stream activations between blocks
+            -> P(dp, seq?, None); seq over `model` when rules.seq_parallel
+               (Korthikanti-style sequence parallelism: norms/residual work
+               is sharded over the TP axis between the matmul regions)
+  "logits"  (B, S, V) -> vocab over `model`
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.parallel import sharding as sh
+
+_CTX: contextvars.ContextVar = contextvars.ContextVar(
+    "repro_sharding_ctx", default=None)
+
+
+def sharding_ctx():
+    return _CTX.get()
+
+
+@contextlib.contextmanager
+def use_sharding(mesh: Mesh, rules: sh.ShardingRules):
+    token = _CTX.set((mesh, rules))
+    try:
+        yield
+    finally:
+        _CTX.reset(token)
+
+
+def activation_constraint(x: jax.Array, kind: str = "resid") -> jax.Array:
+    ctx = _CTX.get()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    bax = sh.batch_axes(mesh)
+    if kind == "resid":
+        if x.ndim != 3:
+            return x
+        seq_ax = "model" if rules.seq_parallel else None
+        spec = P(bax, seq_ax, None)
+    elif kind == "logits":
+        spec = P(bax, None, "model")
+    else:
+        return x
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))
+
+
+def _flat_axes(bax) -> tuple:
+    if bax is None:
+        return ()
+    return tuple(bax) if isinstance(bax, tuple) else (bax,)
+
+
+def attention_heads_constraint(x: jax.Array, n_q_heads: int) -> jax.Array:
+    """Place (B, S, H, Dh) attention tensors so score einsums stay local.
+
+    Only intervenes when the Q-HEAD count does not divide the TP degree —
+    the measured pathology (internvl2 14H, qwen3-14b 40H, deepseek 56H on
+    tp=16): GSPMD partially shards head_dim and all-reduces the S²-sized
+    score tensor (34 GB/layer measured). In that case q/k/v are all
+    pinned to the same layout, in priority:
+      1. S % tp == 0      -> query-sequence-sharded attention (S over
+         model; K/V gathers are S·d-sized, the S² block stays local)
+      2. B % (dp*tp) == 0 -> batch-sharded attention
+      3. replicate over model (last resort)
+    When H % tp == 0, GSPMD's own propagation (Megatron head-TP with GQA
+    KV broadcast) is already right — constraining it REGRESSED qwen3-8b
+    3x (kv=8 heads got a different layout than q; §Perf H2 iteration 3).
+    """
+    import os
+    if os.environ.get("REPRO_NO_ATTN_HOOK"):   # compile-time bisection
+        return x
+    ctx = _CTX.get()
+    if ctx is None or x.ndim != 4:
+        return x
+    mesh, rules = ctx
+    tp = mesh.shape.get("model", 1)
+    if tp == 1 or n_q_heads % tp == 0:
+        return x
+    bax = sh.batch_axes(mesh)
+    dp = 1
+    for a in _flat_axes(bax):
+        dp *= mesh.shape[a]
+    b, s, _, _ = x.shape
+    if s % tp == 0:
+        spec = P(bax, "model", None, None)
+    elif b % (dp * tp) == 0:
+        spec = P(_flat_axes(bax) + ("model",), None, None, None)
+    else:
+        spec = P(bax, None, None, None)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec))

@@ -1,0 +1,138 @@
+"""Ring attention — the ARTEMIS token-based dataflow as a shard_map module.
+
+Paper §III.D.1/Fig 5(b): tokens are sharded across banks; each bank
+computes Q_i/K_i/V_i locally, then the K_i (and V_i) shards travel a
+ring+broadcast network while each bank accumulates partial attention
+scores, overlapped with softmax max-tracking and the next MatMul.
+
+TPU-native translation (DESIGN.md §2): banks -> devices along a mesh axis,
+ring network -> `jax.lax.ppermute` on ICI, "keep updating y_max as scores
+stream out" -> the online-softmax merge carried across ring steps. The
+compute of step t overlaps the permute of step t+1 by construction
+(ppermute is async on TPU; XLA schedules the DMA alongside the matmuls).
+
+Exactness: per-chunk partial (o, m, l) statistics merge associatively
+(paper Eq. 5's log-sum-exp decomposition), so the sharded result is
+bit-comparable to full attention up to fp reassociation — pinned in
+tests/test_parallel.py.
+
+Layout: q, k, v are (B, S_local, H, Dh) on each device, S sharded along
+`axis_name`; causal masking uses global positions derived from
+axis_index. Zig-zag (striped) sharding for causal load balance is the
+dataflow's `stripe` option (beyond-paper optimization, §Perf).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _chunk_attn(q, k, v, q_pos, k_pos, scale, causal):
+    """Single-chunk attention partials.
+
+    q: (B,Sq,H,D), k/v: (B,Sk,H,D) -> (o_unnorm (B,Sq,H,D), m, l (B,Sq,H)).
+    """
+    s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
+                   preferred_element_type=jnp.float32) * scale
+    if causal:
+        keep = q_pos[:, None, :, None] >= k_pos[:, None, None, :]
+        s = jnp.where(keep, s, NEG_INF)
+    m = jnp.max(s, axis=-1)                       # (B,H,Sq)
+    # guard fully-masked rows (m == NEG_INF): exp(s - m) would be exp(0)=1
+    m_safe = jnp.maximum(m, -1e29)
+    p = jnp.exp(s - m_safe[..., None])
+    p = jnp.where(s <= NEG_INF / 2, 0.0, p)
+    l = jnp.sum(p, axis=-1)                       # (B,H,Sq)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p, v.astype(jnp.float32))
+    return o, jnp.moveaxis(m_safe, 1, 2), jnp.moveaxis(l, 1, 2)
+
+
+def _merge(o1, m1, l1, o2, m2, l2):
+    """Associative online-softmax merge of two partials ((B,Sq,H,D) etc.)."""
+    m = jnp.maximum(m1, m2)
+    a1 = jnp.exp(m1 - m)
+    a2 = jnp.exp(m2 - m)
+    o = o1 * a1[..., None] + o2 * a2[..., None]
+    l = l1 * a1 + l2 * a2
+    return o, m, l
+
+
+def ring_attention(q, k, v, *, axis_name: str, causal: bool = True,
+                   scale: float | None = None,
+                   q_positions=None, kv_positions=None):
+    """Sequence-sharded attention over `axis_name` (call inside shard_map).
+
+    q, k, v: (B, S_local, H|KV, Dh). GQA is handled by the caller repeating
+    KV heads (or by equal H). Returns (B, S_local, H, Dh) in q.dtype.
+    """
+    n = jax.lax.psum(1, axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    b, s_local, h, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    if q_positions is None:
+        q_positions = idx * s_local + jnp.arange(s_local, dtype=jnp.int32)
+        q_positions = jnp.broadcast_to(q_positions[None], (b, s_local))
+
+    qf = q.astype(jnp.float32)
+
+    def body(carry, step):
+        o, m, l, kc, vc = carry
+        # the K/V chunk currently held arrived from device (idx - step) % n
+        src = jnp.remainder(idx - step, n)
+        if kv_positions is None:
+            k_pos = src * kc.shape[1] + jnp.arange(kc.shape[1],
+                                                   dtype=jnp.int32)
+            k_pos = jnp.broadcast_to(k_pos[None], (b, kc.shape[1]))
+        else:
+            k_pos = kv_positions  # caller-supplied (striped layouts)
+        oc, mc, lc = _chunk_attn(qf, kc.astype(jnp.float32),
+                                 vc.astype(jnp.float32),
+                                 q_positions, k_pos, scale, causal)
+        o, m, l = _merge(o, m, l, oc, mc, lc)
+        # ring step: pass the chunk to the next device (paper Fig 5(b)
+        # Rounds 3-4); ppermute overlaps with the next step's compute
+        perm = [(i, (i + 1) % n) for i in range(n)]
+        kc = jax.lax.ppermute(kc, axis_name, perm)
+        vc = jax.lax.ppermute(vc, axis_name, perm)
+        return (o, m, l, kc, vc), None
+
+    o0 = jnp.zeros((b, s_local, h, d), jnp.float32)
+    m0 = jnp.full((b, s_local, h), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((b, s_local, h), jnp.float32)
+    # mark the constant inits as device-varying over the ring axis (the body
+    # outputs are varying; scan carries must type-match under shard_map vma)
+    o0, m0, l0 = (jax.lax.pvary(a, axis_name) for a in (o0, m0, l0))
+    (o, m, l, _, _), _ = jax.lax.scan(
+        body, (o0, m0, l0, k, v), jnp.arange(n))
+    l = jnp.maximum(l, 1e-30)
+    return (o / l[..., None]).astype(q.dtype)
+
+
+def layer_dataflow_attention(q, k, v, *, axis_name: str,
+                             causal: bool = True,
+                             scale: float | None = None):
+    """The LAYER-BASED dataflow baseline (paper Fig 8 'layer_*'): all-gather
+    the full K/V onto every device, then attend locally. Same math, strictly
+    more ICI bytes — the comparison benchmarks/collective_bytes.py measures.
+    """
+    n = jax.lax.psum(1, axis_name)
+    idx = jax.lax.axis_index(axis_name)
+    b, s_local, h, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    kg = jax.lax.all_gather(k, axis_name, axis=1, tiled=True)
+    vg = jax.lax.all_gather(v, axis_name, axis=1, tiled=True)
+    q_pos = idx * s_local + jnp.arange(s_local, dtype=jnp.int32)
+    q_pos = jnp.broadcast_to(q_pos[None], (b, s_local))
+    k_pos = jnp.broadcast_to(
+        jnp.arange(kg.shape[1], dtype=jnp.int32)[None], (b, kg.shape[1]))
+    o, m, l = _chunk_attn(q.astype(jnp.float32), kg.astype(jnp.float32),
+                          vg.astype(jnp.float32), q_pos, k_pos, scale,
+                          causal)
+    l = jnp.maximum(l, 1e-30)
+    return (o / l[..., None]).astype(q.dtype)

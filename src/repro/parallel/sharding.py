@@ -1,0 +1,234 @@
+"""PartitionSpec rules — DP / TP / EP / SP over the production mesh.
+
+Mesh axes (launch.mesh.make_production_mesh):
+  pod    outermost data parallelism (multi-pod only)
+  data   batch DP + FSDP weight sharding (ZeRO-3 style)
+  model  tensor parallelism (heads / d_ff / vocab / experts) and — for
+         decode — SEQUENCE sharding of the KV cache (the ARTEMIS
+         token-based dataflow mapped onto the TP axis: banks -> chips,
+         shared HBM bus -> ICI, K_i/V_i ring exchange -> split-KV psum
+         merge / ring attention).
+
+Rules are name-matched over flattened param paths (MaxText-style logical
+rules), with a divisibility guard: GSPMD pads uneven dims, but we only
+*request* sharding where it pays; tiny leaves (norms, biases, scalars)
+stay replicated.
+
+Batch specs by shape kind:
+  train    tokens (B,S): B over (pod,data); activations constrained
+           (B over dp, optional S over model = sequence parallelism)
+  prefill  B over (pod,data)
+  decode   B over (pod,data); KV cache S over model (split-KV)
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ShardingRules:
+    """Knobs iterated over in §Perf hillclimbing."""
+    fsdp: bool = True              # shard the non-TP weight dim over `data`
+    seq_parallel: bool = False     # activations S over `model` between blocks
+    decode_kv_seq_shard: bool = True   # KV cache S over `model` (split-KV)
+    expert_axis: str = "model"     # EP axis for MoE expert leaves
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    """Data-parallel axes: ('pod', 'data') on the multi-pod mesh."""
+    return tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        out = 1
+        for n in name:
+            out *= mesh.shape[n]
+        return out
+    return mesh.shape[name]
+
+
+def _guard(mesh: Mesh, dim: int, axis, min_frac: float = 1.0):
+    """Request sharding only when the dim divides evenly: jit
+    in_shardings are strict about divisibility (and padded shards waste
+    compute even where GSPMD would tolerate them)."""
+    size = _axis_size(mesh, axis)
+    if size == 1 or dim % size != 0:
+        return None
+    return axis
+
+
+# ---------------------------------------------------------------------------
+# parameter rules: (regex over leaf path, lambda(shape) -> logical spec)
+# logical axes: "tp" (model), "fsdp" (data), "ep" (model), None
+# ---------------------------------------------------------------------------
+
+# each entry: (pattern, per-dim logical axes, applied right-aligned to the
+# leaf's trailing dims; leading dims — the scan L axis, expert E axis
+# handled explicitly — get None)
+_RULES: list[tuple[str, tuple]] = [
+    # -- MoE (match before generic ffn rules) --
+    # expert weights: EP-sharded on E ONLY. FSDP-sharding d over `data`
+    # makes the expert einsum contract over a data-sharded dim; XLA then
+    # all-reduces (E, G·C, ff)-sized activation partials (~7 GB/op) and
+    # gathers the dispatch buffers — §Perf H4b. Per-device expert slices
+    # are small (E/tp experts), so EP-only is also the memory-right call.
+    (r"experts.*w_(up|gate)", ("ep", None, None)),       # (E, d, d_ff_e)
+    (r"experts.*w_down",      ("ep", None, None)),       # (E, d_ff_e, d)
+    (r"shared.*w_(up|gate)",  ("ep", "fsdp", "tp")),     # (Ns, d, d_ff_e)
+    (r"shared.*w_down",       ("ep", "tp", "fsdp")),
+    (r"router",               ("fsdp", None)),           # (d, E) exact fp32
+    # -- attention --
+    (r"\['wq'\]|\['wk'\]|\['wv'\]", ("fsdp", "tp")),     # (d, H*hd)
+    (r"\['wo'\]",             ("tp", "fsdp")),           # (H*hd, d)
+    # -- FFN --
+    (r"w_(up|gate)",          ("fsdp", "tp")),           # (d, d_ff)
+    (r"w_down",               ("tp", "fsdp")),           # (d_ff, d)
+    # -- embeddings / head --
+    (r"embed",                ("tp", "fsdp")),           # (V, d) vocab-TP
+    (r"head",                 ("fsdp", "tp")),           # (d, V)
+    # -- mamba2 --
+    (r"in_proj",              ("fsdp", "tp")),           # (d, 2di+2n+h)
+    (r"out_proj",             ("tp", "fsdp")),           # (di, d)
+    (r"conv_w",               (None, "tp")),             # (W, C)
+    (r"conv_b",               ("tp",)),
+    # -- rwkv6 --
+    (r"\['wr'\]|\['wg'\]",    ("fsdp", "tp")),
+    (r"cm_wk",                ("fsdp", "tp")),
+    (r"cm_wv",                ("tp", "fsdp")),
+    (r"cm_wr",                ("fsdp", "tp")),
+    (r"td_w1|maa_w1",         ("fsdp", None)),
+    (r"td_w2",                (None, "fsdp")),
+    (r"maa_w2",               (None, None, "fsdp")),
+]
+
+
+def _logical_to_mesh(logical, mesh: Mesh, rules: ShardingRules):
+    if logical == "tp":
+        return "model"
+    if logical == "ep":
+        return rules.expert_axis
+    if logical == "fsdp":
+        if not rules.fsdp:
+            return None
+        axes = dp_axes(mesh)
+        if not axes:
+            return None
+        return axes if len(axes) > 1 else axes[0]
+    return None
+
+
+def _spec_for_leaf(path: str, shape: tuple, mesh: Mesh,
+                   rules: ShardingRules) -> P:
+    for pattern, logical in _RULES:
+        if re.search(pattern, path):
+            ndim = len(shape)
+            spec: list = [None] * ndim
+            # right-align the logical template onto trailing dims
+            tmpl = logical[-ndim:] if len(logical) > ndim else logical
+            off = ndim - len(tmpl)
+            for i, ax in enumerate(tmpl):
+                mesh_ax = _logical_to_mesh(ax, mesh, rules)
+                spec[off + i] = _guard(mesh, shape[off + i], mesh_ax)
+            # never shard the same mesh axis twice in one spec
+            seen: set = set()
+            for i, s in enumerate(spec):
+                flat = s if isinstance(s, tuple) else (s,)
+                if s is not None and seen & set(flat):
+                    spec[i] = None
+                else:
+                    seen |= set(flat)
+            return P(*spec)
+    return P()  # replicate (norms, scalars, luts, small loras)
+
+
+def param_specs(cfg: ModelConfig, shapes, mesh: Mesh,
+                rules: ShardingRules = ShardingRules()):
+    """shapes: pytree of ShapeDtypeStruct/arrays -> pytree of PartitionSpec."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(shapes)
+    specs = []
+    for kp, leaf in flat:
+        path = jax.tree_util.keystr(kp)
+        specs.append(_spec_for_leaf(path, tuple(leaf.shape), mesh, rules))
+    return jax.tree_util.tree_unflatten(treedef, specs)
+
+
+# ---------------------------------------------------------------------------
+# batch / cache specs
+# ---------------------------------------------------------------------------
+
+
+def batch_axes(mesh: Mesh):
+    axes = dp_axes(mesh)
+    return axes if len(axes) > 1 else (axes[0] if axes else None)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, batch: int) -> dict:
+    """Specs for {"tokens", "labels", optional "prefix_embeds"}."""
+    bax = batch_axes(mesh)
+    if _axis_size(mesh, bax) > batch:
+        bax = None  # degenerate cells (long_500k B=1): replicate batch
+    tok = P(bax, None, None) if cfg.modality == "audio" else P(bax, None)
+    out = {"tokens": tok, "labels": tok}
+    if cfg.modality == "vlm":
+        out["prefix_embeds"] = P(bax, None, None)
+    return out
+
+
+def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int,
+                rules: ShardingRules = ShardingRules()) -> dict:
+    """Decode-cache specs. The KV sequence axis goes over `model` — the
+    ARTEMIS token dataflow (each "bank" owns a token shard; attention is
+    split-KV with an LSE-exact merge, inserted by GSPMD as psums)."""
+    bax = batch_axes(mesh)
+    if _axis_size(mesh, bax) > batch:
+        bax = None
+    seq_ax = "model" if rules.decode_kv_seq_shard else None
+    if cfg.family == "rwkv6":
+        # O(1) state: (L, B, H, N, N) x_tm/x_cm (L, B, d), no seq axis.
+        # H (=40) rarely divides the TP degree; the value dim N does.
+        h = cfg.d_model // cfg.ssm_head_dim
+        h_ax = _guard(mesh, h, "model")
+        n_ax = None if h_ax else _guard(mesh, cfg.ssm_head_dim, "model")
+        return {
+            "layers": {
+                "x_tm": P(None, bax, None),
+                "x_cm": P(None, bax, None),
+                "wkv": P(None, bax, h_ax, n_ax, None),
+            },
+            "index": P(),
+        }
+    if cfg.family == "zamba2":
+        h_ax = _guard(mesh, cfg.ssm_heads, "model")
+        n_ax = None if h_ax else _guard(mesh, cfg.ssm_state, "model")
+        conv_ch = cfg.d_inner + 2 * cfg.ssm_state
+        return {
+            "mamba": {
+                "ssd": P(None, bax, h_ax, n_ax, None),
+                "conv": P(None, bax, None, _guard(mesh, conv_ch, "model")),
+            },
+            "attn_k": P(None, bax, seq_ax, None, None),
+            "attn_v": P(None, bax, seq_ax, None, None),
+            "attn_pos": P(bax, None),
+            "index": P(),
+        }
+    # dense / moe transformer KV cache: (L, B, S, KV, hd)
+    return {
+        "k": P(None, bax, seq_ax, None, None),
+        "v": P(None, bax, seq_ax, None, None),
+        "index": P(),
+    }
+
+
+def named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s), spec_tree,
+        is_leaf=lambda x: isinstance(x, P))

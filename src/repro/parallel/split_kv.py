@@ -1,0 +1,51 @@
+"""Split-KV decode attention — the token dataflow's decode-side analogue.
+
+Paper Eq. 5's log-sum-exp decomposition is associative across token
+shards, so a decode step against a sequence-sharded KV cache can compute
+per-shard partial attention and merge exactly with one psum pair:
+
+  m   = pmax_i(m_i)
+  out = psum_i(o_i * l_i * exp(m_i - m)) / psum_i(l_i * exp(m_i - m))
+
+where (o_i, m_i, l_i) are each shard's normalized output / running max /
+sum-exp. This is what ARTEMIS' NSC comparator network does across banks
+(§III.C.2 pipelined y_max + §III.D softmax overlap), expressed on the TPU
+ICI. Used by serve_step when the KV cache's S axis is sharded over
+`model` (parallel.sharding.cache_specs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.ring_attention import _chunk_attn
+
+NEG_INF = -1e30
+
+
+def split_kv_attention(q, k_local, v_local, *, axis_name: str,
+                       q_positions, kv_positions_local,
+                       scale: float | None = None):
+    """q: (B, Sq, H, D) REPLICATED across `axis_name` (Sq = 1 for decode);
+    k_local/v_local: (B, S_shard, H, D) — this device's token shard.
+    kv_positions_local: (B, S_shard) global positions (INT32_MAX = empty).
+
+    Returns (B, Sq, H, D) replicated (identical on every shard).
+    """
+    b, sq, h, d = q.shape
+    if scale is None:
+        scale = 1.0 / (d ** 0.5)
+    o, m, l = _chunk_attn(q.astype(jnp.float32),
+                          k_local.astype(jnp.float32),
+                          v_local.astype(jnp.float32),
+                          q_positions, kv_positions_local, scale,
+                          causal=True)
+    # cross-shard LSE merge (one pmax + two psums on (B,Sq,H)-sized terms —
+    # the 'transfer in binary, compressed' insight: only statistics cross
+    # the link, never the S-sized score matrix)
+    m_glob = jax.lax.pmax(m, axis_name)
+    w = jnp.exp(m - m_glob)
+    num = jax.lax.psum(o * w[..., None], axis_name)
+    den = jax.lax.psum(l * w, axis_name)
+    den = jnp.maximum(den, 1e-30)
+    return (num / den[..., None]).astype(q.dtype)

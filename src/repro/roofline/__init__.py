@@ -1,0 +1,11 @@
+from repro.roofline.hlo import collective_bytes, parse_collectives
+from repro.roofline.model import (
+    HW_V5E,
+    HardwareSpec,
+    RooflineReport,
+    analyze,
+    model_flops,
+)
+
+__all__ = ["collective_bytes", "parse_collectives", "HardwareSpec",
+           "HW_V5E", "RooflineReport", "analyze", "model_flops"]

@@ -1,0 +1,123 @@
+"""HLO collective-bytes parser.
+
+`cost_analysis()` does not expose collective traffic, so we parse the
+compiled (post-SPMD-partitioning, per-device) HLO text. Compiled HLO
+writes operands as bare refs (`all-reduce(%dot)`), so sizes are derived
+from each collective's OUTPUT shape(s) plus the replica-group size S:
+
+  op                  operand bytes      ring wire bytes / device
+  all-reduce          out                2·(S-1)/S·out
+  all-gather          out / S            (S-1)/S·out
+  reduce-scatter      out · S            (S-1)/S·out·S
+  all-to-all          out                (S-1)/S·out
+  collective-permute  out                out
+
+Variadic (combined) collectives have tuple outputs — all elements are
+summed. Async pairs (`-start`/`-done`) are counted once at `-start`.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+
+_COLLECTIVES = (
+    "all-reduce",
+    "all-gather",
+    "reduce-scatter",
+    "all-to-all",
+    "collective-permute",
+)
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s16": 2, "u16": 2, "f16": 2, "bf16": 2,
+    "s32": 4, "u32": 4, "f32": 4,
+    "s64": 8, "u64": 8, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+# `%name = f32[8,128]{1,0} all-reduce(...)` or
+# `%name = (f32[..], f32[..]) all-gather-start(...)`
+_LINE_RE = re.compile(
+    r"=\s*(?P<out>\([^)]*\)|[\w\[\]{},]+)\s+"
+    r"(?P<kind>" + "|".join(_COLLECTIVES) + r")"
+    r"(?P<variant>-start|-done)?\(")
+# iota form `replica_groups=[4,2]<=[8]` -> group size 2;
+# explicit form `replica_groups={{0,1},{2,3}}` -> len of first group
+_GROUPS_IOTA_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_EXPL_RE = re.compile(r"replica_groups=\{\{([\d,]+)\}")
+
+
+def _shapes_bytes(type_str: str) -> int:
+    total = 0
+    for m in _SHAPE_RE.finditer(type_str):
+        dtype, dims = m.groups()
+        size = _DTYPE_BYTES.get(dtype, 4)
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * size
+    return total
+
+
+def _group_size(line: str, default: int = 2) -> int:
+    m = _GROUPS_IOTA_RE.search(line)
+    if m:
+        return max(int(m.group(2)), 1)
+    m = _GROUPS_EXPL_RE.search(line)
+    if m:
+        return max(len(m.group(1).split(",")), 1)
+    return default
+
+
+@dataclasses.dataclass
+class CollectiveStats:
+    ops: dict            # kind -> count
+    bytes_by_kind: dict  # kind -> operand bytes (per device)
+    raw_bytes: int       # total operand bytes (the brief's metric)
+    wire_bytes: float    # ring-algorithm bytes on the wire per device
+
+    def summary(self) -> str:
+        parts = [f"{k}:{v} ({self.bytes_by_kind.get(k, 0)/1e6:.1f}MB)"
+                 for k, v in sorted(self.ops.items())]
+        return ", ".join(parts) or "none"
+
+
+def parse_collectives(hlo_text: str) -> CollectiveStats:
+    ops: dict = defaultdict(int)
+    by_kind: dict = defaultdict(float)
+    wire = 0.0
+    for line in hlo_text.splitlines():
+        m = _LINE_RE.search(line)
+        if not m:
+            continue
+        if m.group("variant") == "-done":
+            continue
+        kind = m.group("kind")
+        out_bytes = _shapes_bytes(m.group("out"))
+        s = _group_size(line)
+        if s <= 1:
+            continue  # degenerate group: no traffic
+        ops[kind] += 1
+        frac = (s - 1) / s
+        if kind == "all-reduce":
+            operand, w = out_bytes, 2.0 * frac * out_bytes
+        elif kind == "all-gather":
+            operand, w = out_bytes / s, frac * out_bytes
+        elif kind == "reduce-scatter":
+            operand, w = out_bytes * s, frac * out_bytes * s
+        elif kind == "all-to-all":
+            operand, w = out_bytes, frac * out_bytes
+        else:  # collective-permute
+            operand, w = out_bytes, float(out_bytes)
+        by_kind[kind] += operand
+        wire += w
+    raw = int(sum(by_kind.values()))
+    return CollectiveStats(dict(ops), dict(by_kind), raw, wire)
+
+
+def collective_bytes(hlo_text: str) -> int:
+    return parse_collectives(hlo_text).raw_bytes

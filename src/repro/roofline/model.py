@@ -1,0 +1,136 @@
+"""Three-term roofline model over the compiled dry-run artifact.
+
+Per (arch × shape × mesh) cell (brief §Roofline):
+
+  compute term    = HLO_FLOPs   / (chips × peak_FLOP/s)
+  memory term     = HLO_bytes   / (chips × HBM_bw)
+  collective term = coll_bytes  / (chips × link_bw)
+
+HLO_FLOPs / HLO_bytes come from `compiled.cost_analysis()` (whole-program,
+all devices — divided by chips here). collective_bytes comes from the HLO
+parser (already per-device operand bytes; wire-weighted variant reported
+too). The dominant term is the bottleneck; MODEL_FLOPS/HLO_FLOPs measures
+how much compiled compute is 'useful' (remat/dequant-emulation waste).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.models.config import ModelConfig
+from repro.roofline.hlo import CollectiveStats
+
+
+@dataclasses.dataclass(frozen=True)
+class HardwareSpec:
+    name: str
+    peak_flops: float      # per chip, FLOP/s (bf16)
+    hbm_bw: float          # per chip, B/s
+    ici_bw: float          # per link, B/s
+    ici_links: int = 4     # v5e: 4 links per chip (2D torus x2 directions)
+    hbm_gib: float = 16.0  # per chip HBM capacity
+
+
+# brief-specified constants: 197 TFLOP/s bf16, 819 GB/s HBM, ~50 GB/s/link
+HW_V5E = HardwareSpec(
+    name="tpu-v5e",
+    peak_flops=197e12,
+    hbm_bw=819e9,
+    ici_bw=50e9,
+    ici_links=4,
+)
+
+
+@dataclasses.dataclass
+class RooflineReport:
+    arch: str
+    shape: str
+    mesh: str
+    chips: int
+    hlo_flops: float           # whole program
+    hlo_bytes: float           # whole program (HBM traffic estimate)
+    coll_bytes: float          # per-device operand bytes
+    coll_wire_bytes: float     # ring-weighted per-device
+    model_flops: float         # 6·N_active·D useful flops
+    peak_bytes_per_device: float  # from memory_analysis
+    t_compute: float = 0.0
+    t_memory: float = 0.0
+    t_collective: float = 0.0
+
+    @property
+    def dominant(self) -> str:
+        terms = {"compute": self.t_compute, "memory": self.t_memory,
+                 "collective": self.t_collective}
+        return max(terms, key=terms.get)
+
+    @property
+    def step_time(self) -> float:
+        """Lower bound assuming perfect overlap: max of the three terms."""
+        return max(self.t_compute, self.t_memory, self.t_collective)
+
+    @property
+    def useful_flop_fraction(self) -> float:
+        return self.model_flops / self.hlo_flops if self.hlo_flops else 0.0
+
+    @property
+    def roofline_fraction(self) -> float:
+        """Fraction of the compute roofline achieved at the bound:
+        useful FLOPs / (chips · peak · step_time)."""
+        if self.step_time <= 0:
+            return 0.0
+        return self.t_compute / self.step_time * self.useful_flop_fraction
+
+    def row(self) -> dict:
+        return {
+            "arch": self.arch, "shape": self.shape, "mesh": self.mesh,
+            "chips": self.chips,
+            "t_compute_s": self.t_compute, "t_memory_s": self.t_memory,
+            "t_collective_s": self.t_collective,
+            "dominant": self.dominant,
+            "hlo_gflops": self.hlo_flops / 1e9,
+            "hlo_gbytes": self.hlo_bytes / 1e9,
+            "coll_mbytes": self.coll_bytes / 1e6,
+            "model_gflops": self.model_flops / 1e9,
+            "useful_flop_frac": self.useful_flop_fraction,
+            "roofline_frac": self.roofline_fraction,
+            "bytes_per_device_gib": self.peak_bytes_per_device / 2**30,
+        }
+
+
+def analyze(arch: str, shape: str, mesh_name: str, chips: int,
+            cost: dict, coll: CollectiveStats, mflops: float,
+            peak_bytes: float, hw: HardwareSpec = HW_V5E) -> RooflineReport:
+    """NOTE on units: `compiled.cost_analysis()` reports the PARTITIONED
+    (per-device SPMD) program — flops/bytes are already per-chip (verified
+    empirically: a (4,2)-sharded matmul reports total/8). The HLO collective
+    parse is per-device operand bytes for the same reason. `chips` is used
+    only to convert whole-model useful FLOPs to per-chip."""
+    flops = float(cost.get("flops", 0.0))
+    byts = float(cost.get("bytes accessed", 0.0))
+    rep = RooflineReport(
+        arch=arch, shape=shape, mesh=mesh_name, chips=chips,
+        hlo_flops=flops, hlo_bytes=byts,
+        coll_bytes=float(coll.raw_bytes),
+        coll_wire_bytes=float(coll.wire_bytes),
+        model_flops=mflops / chips, peak_bytes_per_device=peak_bytes)
+    rep.t_compute = flops / hw.peak_flops
+    rep.t_memory = byts / hw.hbm_bw
+    # collective bytes are per-device; each chip drives ici_links links
+    # concurrently (ring collectives on a 2D torus use all of them)
+    rep.t_collective = rep.coll_wire_bytes / (hw.ici_bw * hw.ici_links)
+    return rep
+
+
+def model_flops(cfg: ModelConfig, n_tokens: int, kind: str,
+                kv_len: int = 0) -> float:
+    """Useful FLOPs: 6·N_active·D for training, 2·N_active·D for inference
+    (+ attention score/value FLOPs, which 6ND omits)."""
+    n_active = cfg.active_param_count()
+    per_token = 2.0 * n_active
+    # attention quadratic term (omitted by 2ND): 4·H·hd·context FLOPs per
+    # token per layer (QK^T + PV, 2 FLOPs each), halved for causal prefill
+    if cfg.family in ("dense", "moe"):
+        h, hd = cfg.n_heads, cfg.resolved_head_dim
+        context = kv_len if kind == "decode" else (kv_len or 1) / 2.0
+        per_token += 4.0 * h * hd * context * cfg.n_layers
+    mult = 3.0 if kind == "train" else 1.0   # fwd+bwd = 3x fwd
+    return per_token * n_tokens * mult

@@ -1,0 +1,20 @@
+"""Test-session config: force 8 host devices BEFORE jax initializes.
+
+The parallel-layer tests (ring attention, split-KV, compression) and the
+launch integration tests need a multi-device mesh; 8 CPU devices cover
+them while keeping single-device semantics for everything else (jit
+without shardings still places on device 0). The production 512-device
+count is dry-run-only (never set here — brief requirement).
+"""
+import os
+import sys
+
+if "jax" not in sys.modules:
+    flags = os.environ.get("XLA_FLAGS", "")
+    if "host_platform_device_count" not in flags:
+        os.environ["XLA_FLAGS"] = (
+            flags + " --xla_force_host_platform_device_count=8").strip()
+
+import jax  # noqa: E402
+
+jax.config.update("jax_platform_name", "cpu")

@@ -1,0 +1,79 @@
+"""Roofline package tests: HLO collective parser + 3-term model."""
+import pytest
+
+from repro.roofline import HW_V5E, analyze, model_flops, parse_collectives
+from repro import configs
+
+
+HLO_SAMPLE = """
+  %ar = f32[64,1024]{1,0} all-reduce(%dot), channel_id=1, replica_groups=[4,2]<=[8], to_apply=%add
+  %ag = f32[128,256]{1,0} all-gather(%x), channel_id=2, replica_groups=[2,4]<=[8], dimensions={0}
+  %rs = bf16[32,64]{1,0} reduce-scatter(%y), channel_id=3, replica_groups=[1,8]<=[8], to_apply=%add
+  %cp = f32[16,16]{1,0} collective-permute(%z), channel_id=4, source_target_pairs={{0,1},{1,0}}
+  %ignored = f32[8,8]{1,0} add(%a, %b)
+  %aa = (f32[4,4]{1,0}, f32[4,4]{1,0}) all-to-all(%p, %q), replica_groups={{0,1,2,3}}
+"""
+
+
+class TestParser:
+    def test_counts_and_bytes(self):
+        st = parse_collectives(HLO_SAMPLE)
+        assert st.ops == {"all-reduce": 1, "all-gather": 1,
+                          "reduce-scatter": 1, "collective-permute": 1,
+                          "all-to-all": 1}
+        # all-reduce operand = output = 64*1024*4
+        assert st.bytes_by_kind["all-reduce"] == 64 * 1024 * 4
+        # all-gather operand = output / group(4)
+        assert st.bytes_by_kind["all-gather"] == 128 * 256 * 4 / 4
+        # reduce-scatter operand = output * group(8)
+        assert st.bytes_by_kind["reduce-scatter"] == 32 * 64 * 2 * 8
+        # all-to-all tuple output: 2 tensors of 4x4 f32, group 4
+        assert st.bytes_by_kind["all-to-all"] == 2 * 4 * 4 * 4
+
+    def test_wire_weighting(self):
+        st = parse_collectives(
+            "%ar = f32[100]{0} all-reduce(%x), replica_groups=[1,4]<=[4],"
+            " to_apply=%a")
+        # ring AR: 2*(S-1)/S*size = 2*3/4*400
+        assert st.wire_bytes == pytest.approx(2 * 0.75 * 400)
+
+    def test_start_done_counted_once(self):
+        txt = ("%s = f32[8]{0} all-gather-start(%x), replica_groups=[1,2]<=[2]\n"
+               "%d = f32[8]{0} all-gather-done(%s)\n")
+        st = parse_collectives(txt)
+        assert st.ops.get("all-gather", 0) == 1
+
+    def test_degenerate_group_skipped(self):
+        st = parse_collectives(
+            "%ar = f32[8]{0} all-reduce(%x), replica_groups=[8,1]<=[8],"
+            " to_apply=%a")
+        assert st.raw_bytes == 0
+
+
+class TestModel:
+    def test_three_terms(self):
+        st = parse_collectives(HLO_SAMPLE)
+        rep = analyze("a", "s", "m", 256,
+                      {"flops": 1e15, "bytes accessed": 1e12}, st,
+                      mflops=2.56e17, peak_bytes=8e9)
+        assert rep.t_compute == pytest.approx(1e15 / HW_V5E.peak_flops)
+        assert rep.t_memory == pytest.approx(1e12 / HW_V5E.hbm_bw)
+        assert rep.dominant in ("compute", "memory", "collective")
+        assert 0 < rep.useful_flop_fraction <= 1.01
+        assert rep.step_time == max(rep.t_compute, rep.t_memory,
+                                    rep.t_collective)
+
+    def test_model_flops_dense_vs_moe(self):
+        dense = configs.get_config("qwen3_8b")
+        moe = configs.get_config("qwen2_moe_a2_7b")
+        fd = model_flops(dense, 1024, "prefill", kv_len=1024)
+        fm = model_flops(moe, 1024, "prefill", kv_len=1024)
+        assert fd > 0 and fm > 0
+        # MoE counts ACTIVE params only: far fewer than total
+        assert moe.active_param_count() < moe.param_count() / 2
+
+    def test_train_is_3x_forward(self):
+        cfg = configs.get_config("gemma_2b")
+        f_train = model_flops(cfg, 1000, "train", kv_len=1024)
+        f_pref = model_flops(cfg, 1000, "prefill", kv_len=1024)
+        assert f_train == pytest.approx(3.0 * f_pref)
