@@ -33,6 +33,8 @@ SUITES = [
      "Kernels   — Pallas vs oracle + ladder accuracy"),
     ("collectives", "benchmarks.collective_bytes",
      "Beyond    — token vs layer dataflow in lowered HLO"),
+    ("serve", "benchmarks.serve_throughput",
+     "Beyond    — continuous-batching engine throughput"),
 ]
 
 

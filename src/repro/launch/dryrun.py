@@ -60,6 +60,16 @@ def _save_cache(cache: dict) -> None:
 # ---------------------------------------------------------------------------
 
 
+def cost_analysis_dict(compiled) -> dict:
+    """Version-compatible `compiled.cost_analysis()`: jax <= 0.4.x returns
+    a list with one dict per partitioned program, newer jax returns the
+    dict directly."""
+    ca = compiled.cost_analysis()
+    if isinstance(ca, (list, tuple)):
+        ca = ca[0] if ca else {}
+    return dict(ca)
+
+
 def _named(mesh, spec_tree):
     return jax.tree.map(
         lambda s: jax.sharding.NamedSharding(mesh, s), spec_tree,
@@ -213,7 +223,7 @@ def _probe_cost(cfg: ModelConfig, cell, mesh, rules, policy,
     lowered = lower_cell(pcfg, cell, mesh, rules, policy, donate=True,
                          unroll=True)
     compiled = lowered.compile()
-    cost = dict(compiled.cost_analysis())
+    cost = cost_analysis_dict(compiled)
     coll = parse_collectives(compiled.as_text())
     return cost, coll
 
@@ -254,7 +264,7 @@ def run_cell(arch: str, shape: str, mesh, mesh_tag: str,
         t_compile = time.time() - t0 - t_lower
 
         mem = compiled.memory_analysis()
-        cost = dict(compiled.cost_analysis())
+        cost = cost_analysis_dict(compiled)
         coll = parse_collectives(compiled.as_text())
         chips = meshlib.mesh_chips(mesh)
 

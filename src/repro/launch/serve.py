@@ -1,10 +1,17 @@
-"""Serving launcher — batched prefill + decode with the KV cache
-(the paper is inference-oriented; this is the serve_step driver).
+"""Serving launcher — static batch or the continuous-batching engine.
 
-Continuous-batching-lite: requests with different prompt lengths are
-left-padded into one batch, prefilled once, then decoded token-by-token
-with greedy sampling. The ARTEMIS arithmetic policy applies to every
-matmul in both phases.
+Two modes (the paper is inference-oriented; this is the serve driver):
+
+  --mode static   the original continuous-batching-lite path: requests
+                  with different prompt lengths are left-padded into one
+                  batch, prefilled once, then decoded in lockstep with
+                  greedy sampling against the dense KV cache.
+  --mode engine   the `repro.serve` engine: per-request lifecycles over
+                  a paged KV cache, prefill/decode interleaved by the
+                  ARTEMIS-cost-aware scheduler, driven by a synthetic
+                  Poisson trace.
+
+The ARTEMIS arithmetic policy applies to every matmul in both modes.
 """
 from __future__ import annotations
 
@@ -24,6 +31,7 @@ def serve(arch: str = "qwen3_8b", smoke: bool = True,
           batch: int = 4, prompt_len: int = 32, gen_len: int = 16,
           policy_mode: str = "exact", seed: int = 0,
           params=None) -> dict:
+    """Static-batch serving: one prefill, lockstep decode."""
     cfg = configs.get_config(arch, smoke=smoke)
     policy = ArithmeticPolicy(mode=policy_mode)
     if params is None:
@@ -53,7 +61,9 @@ def serve(arch: str = "qwen3_8b", smoke: bool = True,
     nxt = stepslib.greedy_sample(logits)
     t0 = time.time()
     for _ in range(gen_len):
-        step_tok = nxt[:, None] if cfg.modality != "audio" else nxt[:, None]
+        # (B,) -> (B, 1); audio's (B, C) broadcasts to (B, 1, C) the
+        # same way, so one expression covers both modalities
+        step_tok = nxt[:, None]
         logits, cache = decode(params, step_tok, cache)
         nxt = stepslib.greedy_sample(logits)
         out_tokens.append(nxt)
@@ -70,22 +80,85 @@ def serve(arch: str = "qwen3_8b", smoke: bool = True,
     }
 
 
+def serve_engine(arch: str = "qwen3_8b", smoke: bool = True,
+                 n_requests: int = 16, arrival_rate: float = 200.0,
+                 prompt_len: int = 32, gen_len: int = 16,
+                 policy_mode: str = "exact", seed: int = 0,
+                 page_size: int = 8, n_pages: int = 256,
+                 max_batch: int = 8, scheduler: str = "cost",
+                 params=None) -> dict:
+    """Continuous-batching serving over a synthetic Poisson trace."""
+    from repro.serve import (EngineConfig, ServeEngine, TrafficConfig,
+                             synth_trace)
+    cfg = configs.get_config(arch, smoke=smoke)
+    policy = ArithmeticPolicy(mode=policy_mode)
+    max_len = prompt_len + gen_len
+    ecfg = EngineConfig(
+        page_size=page_size, n_pages=n_pages, max_batch=max_batch,
+        max_pages_per_seq=max(1, -(-max_len // page_size)) + 1,
+        scheduler=scheduler)
+    eng = ServeEngine(cfg, params=params, policy=policy, ecfg=ecfg,
+                      seed=seed)
+    trace = synth_trace(TrafficConfig(
+        n_requests=n_requests, arrival_rate=arrival_rate,
+        prompt_len_min=max(1, prompt_len // 2), prompt_len_max=prompt_len,
+        gen_len_min=max(1, gen_len // 2), gen_len_max=gen_len,
+        vocab_size=cfg.vocab_size, seed=seed))
+    eng.submit_trace(trace)
+    t0 = time.time()
+    eng.drain()
+    wall = time.time() - t0
+    m = eng.metrics()
+    m["wall_s"] = wall
+    m["wall_tok_per_s"] = m["n_generated_tokens"] / max(wall, 1e-9)
+    return {"metrics": m, "results": eng.results(), "events": eng.events}
+
+
 def main() -> None:
     ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--mode", default="static",
+                    choices=["static", "engine"])
     ap.add_argument("--arch", default="qwen3_8b")
     ap.add_argument("--full", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--batch", type=int, default=4,
+                    help="static batch size / engine decode lanes")
     ap.add_argument("--prompt-len", type=int, default=32)
     ap.add_argument("--gen-len", type=int, default=16)
     ap.add_argument("--policy", default="exact",
                     choices=["exact", "int8", "artemis", "artemis_mxu"])
+    ap.add_argument("--n-requests", type=int, default=16,
+                    help="engine: synthetic trace length")
+    ap.add_argument("--arrival-rate", type=float, default=200.0,
+                    help="engine: Poisson arrivals per virtual second")
+    ap.add_argument("--page-size", type=int, default=8)
+    ap.add_argument("--n-pages", type=int, default=256)
+    ap.add_argument("--scheduler", default="cost",
+                    choices=["cost", "fcfs"])
     args = ap.parse_args()
-    out = serve(arch=args.arch, smoke=not args.full, batch=args.batch,
-                prompt_len=args.prompt_len, gen_len=args.gen_len,
-                policy_mode=args.policy)
-    print(f"prefill {out['prefill_s']*1e3:.0f}ms | decode "
-          f"{out['decode_tok_per_s']:.1f} tok/s | "
-          f"generated shape {out['generated'].shape}")
+
+    if args.mode == "static":
+        out = serve(arch=args.arch, smoke=not args.full, batch=args.batch,
+                    prompt_len=args.prompt_len, gen_len=args.gen_len,
+                    policy_mode=args.policy)
+        print(f"prefill {out['prefill_s']*1e3:.0f}ms | decode "
+              f"{out['decode_tok_per_s']:.1f} tok/s | "
+              f"generated shape {out['generated'].shape}")
+        return
+
+    out = serve_engine(
+        arch=args.arch, smoke=not args.full, n_requests=args.n_requests,
+        arrival_rate=args.arrival_rate, prompt_len=args.prompt_len,
+        gen_len=args.gen_len, policy_mode=args.policy,
+        page_size=args.page_size, n_pages=args.n_pages,
+        max_batch=args.batch, scheduler=args.scheduler)
+    m = out["metrics"]
+    print(f"engine: {m['n_done']} requests, "
+          f"{m['n_generated_tokens']} tokens | "
+          f"{m['wall_tok_per_s']:.1f} tok/s wall | "
+          f"p50 {m['p50_latency_s']*1e3:.3f}ms "
+          f"p99 {m['p99_latency_s']*1e3:.3f}ms (virtual) | "
+          f"cache util {m['cache_utilization']:.2f} | "
+          f"{m['n_preemptions']} preemptions")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,58 @@
+"""ARTEMIS-cost-aware batch pricing — the hwsim bridge.
+
+The scheduler doesn't invent its own latency heuristics: it prices each
+candidate batch with the SAME simulator the paper's evaluation uses
+(`hwsim.simulate_model` under the token_PP dataflow, i.e. the ARTEMIS
+scheme of Fig 8). Token-based sharding spreads the in-flight tokens
+over all banks, so batches with more concurrent tokens amortize the
+ring K/V broadcast better — which is exactly the signal continuous
+batching needs: a full decode lane-set prices cheaper per token than a
+lone straggler, and a prefill's big token count competes on equal
+footing.
+
+The hook is pluggable: anything with `price(n_tokens) -> ns` works;
+`None` disables cost-aware ordering (pure FCFS).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.hwsim import DataflowConfig, simulate_model
+from repro.hwsim.workloads import Workload
+from repro.models.config import ModelConfig
+
+
+@dataclasses.dataclass(frozen=True)
+class ArtemisCostModel:
+    """Prices a candidate batch of `n_tokens` concurrent tokens through
+    one full model pass on the ARTEMIS hardware model."""
+    cfg: ModelConfig
+    scheme: str = "token_PP"
+    # per-instance memo (excluded from eq/hash; dies with the instance)
+    _memo: dict = dataclasses.field(
+        default_factory=dict, repr=False, compare=False)
+
+    def _workload(self, n_tokens: int) -> Workload:
+        cfg = self.cfg
+        d_ff = cfg.d_ff
+        if cfg.family == "moe" and cfg.d_ff_expert:
+            # active FFN width per token (routed experts + shared)
+            d_ff = cfg.d_ff_expert * (max(cfg.top_k, 1)
+                                      + cfg.n_shared_experts)
+        return Workload(
+            name=f"serve-{cfg.name}", params=float(cfg.param_count()),
+            n_layers=cfg.n_layers, n_tokens=max(int(n_tokens), 1),
+            n_heads=cfg.n_heads, d_model=cfg.d_model, d_ff=max(d_ff, 1))
+
+    def price(self, n_tokens: int) -> float:
+        """Latency (ns) of one model pass over n_tokens concurrent
+        tokens under the configured dataflow scheme."""
+        n = max(int(n_tokens), 1)
+        if n not in self._memo:
+            res = simulate_model(self._workload(n),
+                                 DataflowConfig(scheme=self.scheme))
+            self._memo[n] = res.latency_ns
+        return self._memo[n]
+
+    def price_per_token(self, n_tokens: int) -> float:
+        return self.price(n_tokens) / max(int(n_tokens), 1)

@@ -1,0 +1,312 @@
+"""Continuous-batching serving engine: submit() / step() / drain().
+
+One `step()` executes one scheduler action on the device:
+
+  prefill — one request through `make_paged_prefill` (prompt bucketed
+            to a page multiple), K/V scattered into freshly allocated
+            pages, first token greedily sampled from the last prompt
+            logit, request moved to a decode lane.
+  decode  — every decode lane advances one token through the single
+            compiled `make_paged_decode` step (fixed max-batch shape;
+            idle lanes are masked onto the trash page). Lanes that hit
+            a page boundary get a new page first; if the pool is dry
+            the latest-admitted request is preempted (pages freed,
+            recompute-style requeue) until the allocation fits.
+
+The engine keeps a VIRTUAL clock priced by the ARTEMIS cost model
+(`hwsim.simulate_model`, token_PP dataflow): every executed batch
+advances time by its simulated latency, so arrival interleaving,
+latency percentiles and the scheduler's decisions are deterministic
+functions of (trace, seed) — wall-clock throughput is measured
+separately by the benchmark. Greedy sampling end-to-end: the engine's
+outputs are token-identical to decoding each request alone on the
+dense-cache path (tests/test_serve.py pins this).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.policy import ArithmeticPolicy
+from repro.launch import steps as stepslib
+from repro.models import model
+from repro.models.config import ModelConfig
+from repro.serve.cost import ArtemisCostModel
+from repro.serve.paged_cache import (
+    TRASH_PAGE,
+    init_paged_cache,
+    pad_to_page,
+)
+from repro.serve.paged_model import make_paged_decode, make_paged_prefill
+from repro.serve.request import Request, RequestState
+from repro.serve.scheduler import Scheduler, SchedulerConfig
+from repro.serve.traffic import TraceItem
+
+
+@dataclasses.dataclass(frozen=True)
+class EngineConfig:
+    page_size: int = 8
+    n_pages: int = 128             # includes the reserved trash page 0
+    max_batch: int = 4             # decode lanes (compiled batch width)
+    max_pages_per_seq: int = 16    # block-table width
+    cache_dtype: str = "float32"
+    scheduler: str = "cost"        # "cost" | "fcfs"
+    scheme: str = "token_PP"       # hwsim dataflow used for pricing
+
+
+class ServeEngine:
+    def __init__(self, cfg: ModelConfig, params=None,
+                 policy: ArithmeticPolicy = ArithmeticPolicy(),
+                 ecfg: EngineConfig = EngineConfig(), seed: int = 0):
+        self.cfg = cfg
+        self.ecfg = ecfg
+        self.policy = policy
+        if params is None:
+            params = model.init(jax.random.PRNGKey(seed), cfg)
+        self.params = params
+        self.cache = init_paged_cache(
+            cfg, ecfg.n_pages, ecfg.page_size,
+            dtype=jnp.dtype(ecfg.cache_dtype))
+        self.cost = ArtemisCostModel(cfg, scheme=ecfg.scheme)
+        self.scheduler = Scheduler(
+            SchedulerConfig(policy=ecfg.scheduler),
+            self.cost, ecfg.page_size)
+        # donate the KV pool (arg 2): both steps return the updated pool
+        # and the engine overwrites self.cache.kv with it, so XLA can
+        # update pages in place instead of copying the whole pool
+        self._prefill = jax.jit(make_paged_prefill(cfg, policy),
+                                donate_argnums=(2,))
+        self._decode = jax.jit(make_paged_decode(cfg, policy),
+                               donate_argnums=(2,))
+        self.requests: dict[int, Request] = {}
+        self.lanes: list[Request | None] = [None] * ecfg.max_batch
+        self.now = 0.0
+        self.events: list[tuple] = []
+        self._next_rid = 0
+        self._admit_seq = 0
+        self._admit_order: dict[int, int] = {}   # rid -> admission counter
+        self._util_sum = 0.0
+        self._util_samples = 0
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               arrival_time: float = 0.0) -> int:
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) < 1:
+            raise ValueError("prompt must have at least one token")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1")
+        # last cache write lands at position prompt+gen-2 (the final
+        # sampled token is never fed back), so this bounds page usage
+        worst_pages = self.cache.allocator.pages_for(
+            len(prompt) + max_new_tokens - 1)
+        if worst_pages > self.ecfg.max_pages_per_seq:
+            raise ValueError(
+                f"request needs up to {worst_pages} pages, block table "
+                f"holds {self.ecfg.max_pages_per_seq}")
+        if worst_pages > self.ecfg.n_pages - 1:
+            raise ValueError(
+                f"request needs up to {worst_pages} pages, pool has "
+                f"{self.ecfg.n_pages - 1}")
+        rid = self._next_rid
+        self._next_rid += 1
+        self.requests[rid] = Request(
+            rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
+            arrival_time=float(arrival_time))
+        return rid
+
+    def submit_trace(self, items: list[TraceItem]) -> list[int]:
+        return [self.submit(it.prompt, it.max_new_tokens, it.arrival_time)
+                for it in items]
+
+    # -- stepping -----------------------------------------------------------
+
+    def _queued_visible(self) -> list[Request]:
+        qs = [r for r in self.requests.values()
+              if r.state is RequestState.QUEUED
+              and r.arrival_time <= self.now]
+        return sorted(qs, key=lambda r: (r.arrival_time, r.rid))
+
+    def _next_arrival(self) -> float | None:
+        future = [r.arrival_time for r in self.requests.values()
+                  if r.state is RequestState.QUEUED
+                  and r.arrival_time > self.now]
+        return min(future) if future else None
+
+    def _decoding(self) -> list[Request]:
+        return [r for r in self.lanes if r is not None]
+
+    def step(self) -> tuple | None:
+        """Execute one scheduler action; returns the event or None when
+        there is nothing left to do."""
+        action = self.scheduler.decide(
+            self._queued_visible(), self._next_arrival(),
+            len(self._decoding()), self.lanes.count(None),
+            self.cache.allocator.n_free)
+        if action.kind == "idle":
+            return None
+        if action.kind == "advance":
+            self.now = action.next_time
+            ev = ("advance", action.next_time)
+        elif action.kind == "prefill":
+            ev = self._do_prefill(self.requests[action.rid])
+        else:
+            ev = self._do_decode()
+        if ev is not None:
+            self.events.append(ev)
+            if ev[0] != "advance":   # utilization of EXECUTED batches
+                self._util_sum += self.cache.utilization()
+                self._util_samples += 1
+        return ev
+
+    def drain(self, max_steps: int = 100_000) -> None:
+        for _ in range(max_steps):
+            if all(r.state is RequestState.DONE
+                   for r in self.requests.values()):
+                return
+            if self.step() is None:
+                break
+        undone = [r.rid for r in self.requests.values()
+                  if r.state is not RequestState.DONE]
+        if undone:
+            raise RuntimeError(f"drain stalled with requests {undone}")
+
+    # -- actions ------------------------------------------------------------
+
+    def _do_prefill(self, req: Request) -> tuple:
+        page = self.ecfg.page_size
+        prompt = req.effective_prompt()
+        s_pad = pad_to_page(len(prompt), page)
+        req.state = RequestState.PREFILL
+        req.pages = self.cache.allocator.alloc(s_pad // page, req.rid)
+        tokens = np.zeros((1, s_pad), np.int32)
+        tokens[0, :len(prompt)] = prompt
+        logits, kv = self._prefill(
+            self.params, jnp.asarray(tokens), self.cache.kv,
+            jnp.asarray(req.pages, jnp.int32))
+        self.cache.kv = kv
+        nxt = int(stepslib.greedy_sample(logits[len(prompt) - 1]))
+        req.seq_len = len(prompt)
+        self.now += self.cost.price(s_pad) * 1e-9
+        req.generated.append(nxt)
+        if req.t_first_token is None:
+            req.t_first_token = self.now
+        self._admit_order[req.rid] = self._admit_seq
+        self._admit_seq += 1
+        if req.done:
+            self._finish(req)
+        else:
+            lane = self.lanes.index(None)
+            req.lane = lane
+            self.lanes[lane] = req
+            req.state = RequestState.DECODE
+        return ("prefill", req.rid, s_pad, self.now)
+
+    def _grow(self, req: Request) -> bool:
+        """Give `req` one more page, preempting latest-admitted decode
+        requests under cache pressure. False if req itself was evicted."""
+        alloc = self.cache.allocator
+        while not alloc.can_alloc(1):
+            victims = self._decoding()
+            victim = max(victims, key=lambda r: self._admit_order[r.rid])
+            self._preempt(victim)
+            if victim is req:
+                return False
+        req.pages.extend(alloc.alloc(1, req.rid))
+        return True
+
+    def _preempt(self, req: Request) -> None:
+        self.cache.allocator.free(req.pages)
+        req.pages = []
+        req.seq_len = 0
+        self.lanes[req.lane] = None
+        req.lane = -1
+        req.state = RequestState.QUEUED
+        req.n_preemptions += 1
+        self.events.append(("preempt", req.rid, self.now))
+
+    def _do_decode(self) -> tuple | None:
+        page = self.ecfg.page_size
+        # page boundary crossings first, oldest admissions first so
+        # eviction pressure lands on the newest request
+        for req in sorted(self._decoding(),
+                          key=lambda r: self._admit_order[r.rid]):
+            if req.state is not RequestState.DECODE:
+                continue   # evicted earlier in this very loop
+            if req.seq_len >= len(req.pages) * page:
+                self._grow(req)
+        batch = self._decoding()
+        if not batch:
+            return None   # everything was preempted; nothing ran
+
+        b, pmax = self.ecfg.max_batch, self.ecfg.max_pages_per_seq
+        tokens = np.zeros((b, 1), np.int32)
+        tables = np.full((b, pmax), TRASH_PAGE, np.int32)
+        seq_lens = np.zeros((b,), np.int32)
+        active = np.zeros((b,), bool)
+        for req in batch:
+            tokens[req.lane, 0] = req.generated[-1]
+            tables[req.lane, :len(req.pages)] = req.pages
+            seq_lens[req.lane] = req.seq_len
+            active[req.lane] = True
+        logits, kv = self._decode(
+            self.params, jnp.asarray(tokens), self.cache.kv,
+            jnp.asarray(tables), jnp.asarray(seq_lens),
+            jnp.asarray(active))
+        self.cache.kv = kv
+        nxt = np.asarray(stepslib.greedy_sample(logits))
+        self.now += self.cost.price(len(batch)) * 1e-9
+        rids = []
+        for req in batch:
+            req.generated.append(int(nxt[req.lane]))
+            req.seq_len += 1
+            rids.append(req.rid)
+            if req.done:
+                self._finish(req)
+        return ("decode", tuple(rids), self.now)
+
+    def _finish(self, req: Request) -> None:
+        if req.pages:
+            self.cache.allocator.free(req.pages)
+            req.pages = []
+        if req.lane >= 0:
+            self.lanes[req.lane] = None
+            req.lane = -1
+        req.state = RequestState.DONE
+        req.t_done = self.now
+
+    # -- results ------------------------------------------------------------
+
+    def results(self) -> dict[int, np.ndarray]:
+        return {rid: np.asarray(r.generated, np.int32)
+                for rid, r in sorted(self.requests.items())}
+
+    def metrics(self) -> dict:
+        done = [r for r in self.requests.values()
+                if r.state is RequestState.DONE]
+        lats = sorted(r.latency() for r in done)
+        n_tok = sum(len(r.generated) for r in done)
+
+        def pct(p):
+            if not lats:
+                return 0.0
+            return lats[min(int(p / 100 * len(lats)), len(lats) - 1)]
+
+        return {
+            "n_done": len(done),
+            "n_generated_tokens": n_tok,
+            "virtual_time_s": self.now,
+            "virtual_tok_per_s": n_tok / max(self.now, 1e-12),
+            "p50_latency_s": pct(50),
+            "p99_latency_s": pct(99),
+            "mean_ttft_s": (float(np.mean([r.ttft() for r in done]))
+                            if done else 0.0),
+            "n_preemptions": sum(r.n_preemptions
+                                 for r in self.requests.values()),
+            "cache_utilization": (self._util_sum
+                                  / max(self._util_samples, 1)),
+        }

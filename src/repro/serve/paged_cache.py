@@ -1,0 +1,126 @@
+"""Block-based paged KV cache — free-list allocator + device page pool.
+
+The dense cache in `models/transformer.py` keys every request to one
+(B, Smax) rectangle with a single shared write index, which is exactly
+what continuous batching cannot use: requests enter and leave the batch
+at different sequence lengths. Here KV storage is a pool of fixed-size
+pages shared by all in-flight requests:
+
+  k/v pool : (L, n_pages, page_size, KV, Dh)   device arrays
+  allocator: host-side free list handing out page ids
+  per-request page table: ordered page ids; the j-th page of a request
+             holds its token positions [j*page_size, (j+1)*page_size).
+
+Page 0 is RESERVED as the trash page: jit'd decode steps run at a fixed
+max-batch shape, and inactive batch lanes scatter their (garbage) K/V
+into page 0 / read from it behind the length mask — so the compiled
+step never sees a data-dependent shape.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+
+from repro.models.config import ModelConfig
+
+TRASH_PAGE = 0
+
+
+class PageAllocator:
+    """Free-list allocator over `n_pages` fixed-size pages.
+
+    Page ids are ints in [1, n_pages); page 0 (TRASH_PAGE) is never
+    handed out. Allocation is LIFO on the free list so tests can pin
+    down exact page reuse; correctness only needs the invariants:
+    no page is owned twice, and freed pages return to the pool.
+    """
+
+    def __init__(self, n_pages: int, page_size: int):
+        if n_pages < 2:
+            raise ValueError("need >= 2 pages (page 0 is reserved)")
+        self.n_pages = n_pages
+        self.page_size = page_size
+        # LIFO: low page ids come back first (deterministic)
+        self._free = list(range(n_pages - 1, 0, -1))
+        self._owner: dict[int, int] = {}   # page id -> request id
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    @property
+    def n_used(self) -> int:
+        return len(self._owner)
+
+    def pages_for(self, n_tokens: int) -> int:
+        """Pages needed to hold n_tokens."""
+        return max(1, -(-n_tokens // self.page_size))
+
+    def can_alloc(self, n: int) -> bool:
+        return n <= len(self._free)
+
+    def alloc(self, n: int, owner: int) -> list[int]:
+        """Take n pages for request `owner`; raises if the pool is dry."""
+        if n > len(self._free):
+            raise MemoryError(
+                f"paged cache exhausted: want {n}, free {len(self._free)}")
+        pages = [self._free.pop() for _ in range(n)]
+        for p in pages:
+            self._owner[p] = owner
+        return pages
+
+    def free(self, pages: list[int]) -> None:
+        for p in pages:
+            if p not in self._owner:
+                raise ValueError(f"double free of page {p}")
+            del self._owner[p]
+            self._free.append(p)
+
+    def owner_of(self, page: int) -> int | None:
+        return self._owner.get(page)
+
+    def check_invariants(self) -> None:
+        """No aliasing, no leaks: free + used partition [1, n_pages)."""
+        free = set(self._free)
+        used = set(self._owner)
+        assert len(free) == len(self._free), "duplicate pages on free list"
+        assert not (free & used), f"aliased pages {free & used}"
+        assert free | used == set(range(1, self.n_pages)), "leaked pages"
+        assert TRASH_PAGE not in free and TRASH_PAGE not in used
+
+
+@dataclasses.dataclass
+class PagedKVCache:
+    """Device page pool + its host-side allocator."""
+    kv: dict                 # {"k","v"}: (L, n_pages, page, KV, Dh)
+    allocator: PageAllocator
+
+    @property
+    def page_size(self) -> int:
+        return self.kv["k"].shape[2]
+
+    @property
+    def n_pages(self) -> int:
+        return self.kv["k"].shape[1]
+
+    def utilization(self) -> float:
+        """Fraction of allocatable pages currently owned by requests."""
+        return self.allocator.n_used / max(self.allocator.n_pages - 1, 1)
+
+
+def init_paged_cache(cfg: ModelConfig, n_pages: int, page_size: int,
+                     dtype=jnp.float32) -> PagedKVCache:
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"paged KV cache needs an attention family, got {cfg.family!r}")
+    kv_heads, hd = cfg.n_kv_heads, cfg.resolved_head_dim
+    shape = (cfg.n_layers, n_pages, page_size, kv_heads, hd)
+    kv = {"k": jnp.zeros(shape, dtype), "v": jnp.zeros(shape, dtype)}
+    return PagedKVCache(kv=kv, allocator=PageAllocator(n_pages, page_size))
+
+
+def pad_to_page(n_tokens: int, page_size: int) -> int:
+    """Prompt lengths are bucketed to page multiples so the jitted
+    prefill retraces once per bucket, not once per length."""
+    return max(page_size, -(-n_tokens // page_size) * page_size)

@@ -1,0 +1,182 @@
+"""Paged-attention forward passes for the serving engine.
+
+Two step builders, both jit-stable under continuous batching:
+
+  make_paged_prefill(cfg, policy) ->
+      (params, tokens (1, S_pad), kv, page_ids (P_req,)) -> (logits, kv)
+    Prefill runs ONE request at a time through the standard
+    `model.apply` in-sequence attention path (so prefill numerics are
+    the dense path's by construction), then scatters the resulting
+    K/V rows into the request's pages. S_pad is the prompt length
+    padded to a page multiple — retraces once per bucket.
+
+  make_paged_decode(cfg, policy) ->
+      (params, tokens (B, 1), kv, block_tables (B, Pmax),
+       seq_lens (B,), active (B,)) -> (logits (B, V), kv)
+    One token for every lane of a FIXED max-batch. Each lane scatters
+    its new K/V into (its own page, seq_len % page) — inactive lanes
+    scatter into the reserved trash page 0 — then gathers its block
+    table back to a (B, Pmax*page) key/value view and attends under a
+    per-lane length mask. Shapes never depend on request state, so the
+    decode step compiles exactly once.
+
+Only attention families (dense / moe) are supported: paged KV is
+meaningless for the recurrent-state families (rwkv6 / zamba2), which
+keep the static serve path.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import ArithmeticPolicy
+from repro.models import layers as L
+from repro.models import moe as M
+from repro.models import model, transformer
+from repro.models.config import ModelConfig
+from repro.serve.paged_cache import TRASH_PAGE
+
+
+def _check_family(cfg: ModelConfig) -> None:
+    if cfg.family not in ("dense", "moe"):
+        raise ValueError(
+            f"paged serving supports dense/moe families, got {cfg.family!r}")
+    if cfg.modality != "text":
+        raise ValueError(
+            f"paged serving supports text modality, got {cfg.modality!r}")
+
+
+# ---------------------------------------------------------------------------
+# prefill
+# ---------------------------------------------------------------------------
+
+
+def make_paged_prefill(cfg: ModelConfig,
+                       policy: ArithmeticPolicy = ArithmeticPolicy()):
+    """Returns prefill(params, tokens, kv, page_ids) -> (logits, kv).
+
+    tokens: (1, S_pad) i32, S_pad a page multiple; page_ids: (S_pad/page,)
+    i32 pages owned by the request, in position order. Returns logits for
+    ALL S_pad positions (the engine indexes the true last prompt position
+    host-side) and the pool with the request's K/V written.
+    """
+    _check_family(cfg)
+
+    def prefill(params, tokens, kv, page_ids):
+        s_pad = tokens.shape[1]
+        page = kv["k"].shape[2]
+        dense = transformer.init_cache(cfg, 1, s_pad, kv["k"].dtype)
+        logits, _, dense = model.apply(
+            params, cfg, {"tokens": tokens}, policy=policy, cache=dense,
+            remat=False)
+        n_layers, _, _, kvh, hd = dense["k"].shape
+        kp = dense["k"].reshape(n_layers, s_pad // page, page, kvh, hd)
+        vp = dense["v"].reshape(n_layers, s_pad // page, page, kvh, hd)
+        new_kv = {"k": kv["k"].at[:, page_ids].set(kp),
+                  "v": kv["v"].at[:, page_ids].set(vp)}
+        return logits[0], new_kv
+
+    return prefill
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
+
+
+def _paged_attn_block(lp, x, cfg: ModelConfig, policy, positions,
+                      ckl, cvl, block_tables, page_idx, offset):
+    """One layer's attention with paged K/V. x: (B, 1, d).
+
+    ckl/cvl: this layer's page pool (P, page, KV, Dh); page_idx/offset:
+    (B,) scatter coordinates for the new token (trash page for inactive
+    lanes). Returns (attn_out, new ckl, new cvl).
+    """
+    b, s, _ = x.shape
+    h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
+    p = lp["attn"]
+    qh = L.mm(x, p["wq"], policy).reshape(b, s, h, hd)
+    kh = L.mm(x, p["wk"], policy).reshape(b, s, kvh, hd)
+    vh = L.mm(x, p["wv"], policy).reshape(b, s, kvh, hd)
+    if cfg.qk_norm:
+        qh = L.headwise_rmsnorm(p["q_norm"], qh, cfg.norm_eps)
+        kh = L.headwise_rmsnorm(p["k_norm"], kh, cfg.norm_eps)
+    qh = L.apply_rope(qh, positions, cfg.rope_theta)
+    kh = L.apply_rope(kh, positions, cfg.rope_theta)
+
+    # scatter the new token's K/V into each lane's current page
+    ckl = ckl.at[page_idx, offset].set(kh[:, 0].astype(ckl.dtype))
+    cvl = cvl.at[page_idx, offset].set(vh[:, 0].astype(cvl.dtype))
+
+    # gather each lane's block table back to a contiguous KV view:
+    # (B, Pmax, page, KV, Dh) -> (B, Smax, KV, Dh), position order
+    pmax, page = block_tables.shape[1], ckl.shape[1]
+    smax = pmax * page
+    kall = ckl[block_tables].reshape(b, smax, kvh, hd).astype(x.dtype)
+    vall = cvl[block_tables].reshape(b, smax, kvh, hd).astype(x.dtype)
+
+    g = h // kvh
+    qg = qh.reshape(b, s, kvh, g, hd)
+    scores = L.qeinsum("bskgd,btkd->bkgst", qg, kall, policy)
+    scores = scores.astype(jnp.float32) * (hd ** -0.5)
+    # page j of a block table holds positions [j*page, (j+1)*page), so
+    # the gathered view's kv position IS its index t
+    t = jnp.arange(smax, dtype=jnp.int32)[None, :]       # (1, Smax)
+    keep = t <= positions                                # (B, Smax)
+    if cfg.attn_window:
+        keep = keep & (t > positions - cfg.attn_window)
+    scores = jnp.where(keep[:, None, None, None, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
+    ctx = L.qeinsum("bkgst,btkd->bskgd", probs, vall, policy)
+    ctx = ctx.reshape(b, s, h * hd)
+    return L.mm(ctx, p["wo"], policy), ckl, cvl
+
+
+def make_paged_decode(cfg: ModelConfig,
+                      policy: ArithmeticPolicy = ArithmeticPolicy()):
+    """Returns decode(params, tokens, kv, block_tables, seq_lens, active)
+    -> (logits (B, V), kv). One token per lane at a fixed batch shape."""
+    _check_family(cfg)
+
+    def decode(params, tokens, kv, block_tables, seq_lens, active):
+        dtype = jnp.dtype(cfg.compute_dtype)
+        page = kv["k"].shape[2]
+        x = transformer._embed_tokens(params, cfg, tokens, dtype)  # (B,1,d)
+        b = x.shape[0]
+        positions = seq_lens[:, None]                              # (B, 1)
+
+        # scatter coordinates; inactive lanes write to the trash page
+        page_slot = jnp.take_along_axis(
+            block_tables, (seq_lens // page)[:, None], axis=1)[:, 0]
+        page_idx = jnp.where(active, page_slot, TRASH_PAGE)
+        offset = jnp.where(active, seq_lens % page, 0)
+
+        def ln(lnp, y):
+            return L.rmsnorm(lnp, y, cfg.norm_eps)
+
+        def body(carry, lp):
+            x, ck, cv, li = carry
+            ckl = jax.lax.dynamic_index_in_dim(ck, li, 0, False)
+            cvl = jax.lax.dynamic_index_in_dim(cv, li, 0, False)
+            h, ckl, cvl = _paged_attn_block(
+                lp, ln(lp["ln1"], x), cfg, policy, positions,
+                ckl, cvl, block_tables, page_idx, offset)
+            x = x + h
+            if cfg.family == "moe":
+                f, _ = M.moe_ffn(lp["moe"], ln(lp["ln2"], x), cfg, policy)
+            else:
+                f = L.ffn(lp["ffn"], ln(lp["ln2"], x),
+                          cfg.act, cfg.glu, policy)
+            x = x + f
+            ck = jax.lax.dynamic_update_index_in_dim(ck, ckl, li, 0)
+            cv = jax.lax.dynamic_update_index_in_dim(cv, cvl, li, 0)
+            return (x, ck, cv, li + 1), None
+
+        (x, ck, cv, _), _ = jax.lax.scan(
+            body, (x, kv["k"], kv["v"], jnp.zeros((), jnp.int32)),
+            params["layers"])
+        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+        logits = transformer._logits(params, cfg, x)   # (B, 1, V)
+        return logits[:, 0], {"k": ck, "v": cv}
+
+    return decode

@@ -1,0 +1,69 @@
+"""Request lifecycle for the serving engine.
+
+State machine:
+
+    QUEUED -> PREFILL -> DECODE -> DONE
+       ^                   |
+       +---- (preempt) ----+
+
+A preempted request is re-queued in *recompute* style: its prompt
+becomes original-prompt + tokens-generated-so-far, its pages are freed,
+and a later prefill rebuilds the cache — for greedy sampling this is
+token-identical to never having been preempted.
+"""
+from __future__ import annotations
+
+import dataclasses
+import enum
+
+import numpy as np
+
+
+class RequestState(enum.Enum):
+    QUEUED = "queued"
+    PREFILL = "prefill"
+    DECODE = "decode"
+    DONE = "done"
+
+
+@dataclasses.dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray               # (S,) i32 — original prompt
+    max_new_tokens: int
+    arrival_time: float = 0.0
+    state: RequestState = RequestState.QUEUED
+    generated: list[int] = dataclasses.field(default_factory=list)
+    pages: list[int] = dataclasses.field(default_factory=list)
+    seq_len: int = 0                 # tokens currently in the paged cache
+    lane: int = -1                   # decode batch lane, -1 = none
+    n_preemptions: int = 0
+    # metrics (virtual-clock seconds)
+    t_first_token: float | None = None
+    t_done: float | None = None
+
+    @property
+    def prompt_len(self) -> int:
+        return int(self.prompt.shape[0])
+
+    @property
+    def done(self) -> bool:
+        return len(self.generated) >= self.max_new_tokens
+
+    def effective_prompt(self) -> np.ndarray:
+        """Prompt for (re-)prefill: original prompt plus everything
+        generated so far (recompute-style preemption recovery)."""
+        if not self.generated:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.generated, np.int32)])
+
+    def latency(self) -> float | None:
+        if self.t_done is None:
+            return None
+        return self.t_done - self.arrival_time
+
+    def ttft(self) -> float | None:
+        if self.t_first_token is None:
+            return None
+        return self.t_first_token - self.arrival_time

@@ -1,0 +1,95 @@
+"""Continuous-batching scheduler — admission control + action choice.
+
+Each engine step the scheduler picks ONE action from the feasible set:
+
+  prefill(r) — admit the head-of-line queued request (strict FCFS within
+               the queue): needs a free decode lane and enough free
+               pages for its padded prompt.
+  decode     — run one token for every active decode lane.
+  advance(t) — nothing runnable now; jump the virtual clock to the next
+               arrival.
+
+Two policies:
+
+  fcfs — prefill whenever admissible, else decode (vLLM's default
+         prompt-first ordering).
+  cost — price both candidates with the ARTEMIS cost model
+         (`serve.cost.ArtemisCostModel`, hwsim token_PP dataflow) and
+         take the cheaper per token. The simulated per-token price is
+         U-shaped in tokens-per-pass: falling while token-based
+         sharding amortizes the K/V ring broadcast (so short prefills
+         are admitted eagerly — here cost coincides with fcfs), then
+         rising once the O(N^2) attention terms dominate. The policies
+         diverge on LONG prompts: cost keeps the decode lanes running
+         rather than stalling them behind a multi-thousand-token
+         prefill whose per-token price exceeds the decode batch's
+         (pinned by tests/test_serve.py::test_cost_policy_defers_long_
+         prefill_while_decoding).
+
+The scheduler is a pure function of its inputs — determinism under a
+fixed trace is a test invariant, and eviction (cache pressure during
+decode) lives in the engine, not here.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.serve.cost import ArtemisCostModel
+from repro.serve.paged_cache import pad_to_page
+from repro.serve.request import Request
+
+
+@dataclasses.dataclass(frozen=True)
+class Action:
+    kind: str                  # "prefill" | "decode" | "advance" | "idle"
+    rid: int | None = None
+    next_time: float | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class SchedulerConfig:
+    policy: str = "cost"       # "cost" | "fcfs"
+
+    def __post_init__(self):
+        if self.policy not in ("cost", "fcfs"):
+            raise ValueError(f"unknown scheduler policy {self.policy!r}")
+
+
+class Scheduler:
+    def __init__(self, sched_cfg: SchedulerConfig,
+                 cost: ArtemisCostModel | None, page_size: int):
+        if sched_cfg.policy == "cost" and cost is None:
+            raise ValueError("cost policy needs a cost model")
+        self.cfg = sched_cfg
+        self.cost = cost
+        self.page_size = page_size
+
+    def admissible(self, req: Request, free_lanes: int,
+                   free_pages: int) -> bool:
+        n_pages = pad_to_page(len(req.effective_prompt()),
+                              self.page_size) // self.page_size
+        return free_lanes > 0 and n_pages <= free_pages
+
+    def decide(self, queued: list[Request], next_arrival: float | None,
+               n_decoding: int, free_lanes: int,
+               free_pages: int) -> Action:
+        """queued: arrived, FCFS-ordered QUEUED requests."""
+        head = queued[0] if queued else None
+        can_prefill = head is not None and self.admissible(
+            head, free_lanes, free_pages)
+        can_decode = n_decoding > 0
+
+        if can_prefill and can_decode and self.cfg.policy == "cost":
+            prefill_tokens = pad_to_page(len(head.effective_prompt()),
+                                         self.page_size)
+            if (self.cost.price_per_token(n_decoding)
+                    < self.cost.price_per_token(prefill_tokens)):
+                return Action("decode")
+            return Action("prefill", rid=head.rid)
+        if can_prefill:
+            return Action("prefill", rid=head.rid)
+        if can_decode:
+            return Action("decode")
+        if next_arrival is not None:
+            return Action("advance", next_time=next_arrival)
+        return Action("idle")

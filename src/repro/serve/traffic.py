@@ -1,0 +1,48 @@
+"""Synthetic traffic for the serving engine.
+
+Poisson arrivals (exponential inter-arrival gaps) with configurable
+prompt/generation length distributions — the many-concurrent-requests
+regime the ROADMAP north-star targets, in deterministic, seedable form
+so scheduler tests can replay the exact same trace.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TrafficConfig:
+    n_requests: int = 16
+    arrival_rate: float = 50.0       # requests / virtual second
+    prompt_len_min: int = 4
+    prompt_len_max: int = 48
+    gen_len_min: int = 4
+    gen_len_max: int = 24
+    vocab_size: int = 256
+    seed: int = 0
+
+
+@dataclasses.dataclass(frozen=True)
+class TraceItem:
+    arrival_time: float
+    prompt: np.ndarray               # (S,) i32
+    max_new_tokens: int
+
+
+def synth_trace(tc: TrafficConfig) -> list[TraceItem]:
+    """Deterministic Poisson trace; sorted by arrival time."""
+    rng = np.random.default_rng(tc.seed)
+    gaps = rng.exponential(1.0 / max(tc.arrival_rate, 1e-9),
+                           size=tc.n_requests)
+    arrivals = np.cumsum(gaps)
+    items = []
+    for i in range(tc.n_requests):
+        plen = int(rng.integers(tc.prompt_len_min, tc.prompt_len_max + 1))
+        glen = int(rng.integers(tc.gen_len_min, tc.gen_len_max + 1))
+        # token ids start at 2 (0/1 conventionally pad/bos in the repo's
+        # synthetic batches — see launch/serve.py)
+        prompt = rng.integers(2, tc.vocab_size, size=plen).astype(np.int32)
+        items.append(TraceItem(float(arrivals[i]), prompt, glen))
+    return items

@@ -3,8 +3,26 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings
-from hypothesis import strategies as st
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    # hypothesis is a dev-only dep (requirements-dev.txt): without it
+    # only the @given property tests skip — the deterministic tests in
+    # this module still run.
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+    def given(*a, **k):
+        return pytest.mark.skip(
+            reason="property test needs hypothesis (requirements-dev.txt)")
+
+    def settings(*a, **k):
+        return lambda f: f
 
 from repro.core import (
     ARTEMIS,
