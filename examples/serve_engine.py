@@ -1,11 +1,12 @@
 """Continuous-batching engine walkthrough.
 
 Submits a handful of mixed-length requests to the `repro.serve` engine,
-steps it manually (so you can watch the scheduler interleave prefill
-and decode over the paged KV cache), then drains and prints the
-per-request outputs and engine metrics.
+steps it manually (so you can watch the scheduler compose chunked
+prefill batches with decode into mixed steps over the paged KV cache),
+then drains and prints the per-request outputs and engine metrics.
 
-Run: PYTHONPATH=src python examples/serve_engine.py [--scheduler fcfs]
+Run: PYTHONPATH=src python examples/serve_engine.py
+         [--scheduler fcfs] [--prefill-chunk 8]
 """
 import argparse
 import dataclasses
@@ -21,13 +22,16 @@ def main():
     ap.add_argument("--arch", default="qwen3_8b")
     ap.add_argument("--scheduler", default="cost",
                     choices=["cost", "fcfs"])
+    ap.add_argument("--prefill-chunk", type=int, default=8,
+                    help="prompt tokens per prefill chunk (small, so "
+                         "the 24-token prompt visibly spans steps)")
     args = ap.parse_args()
 
     cfg = dataclasses.replace(configs.get_config(args.arch, smoke=True),
                               compute_dtype="float32")
     eng = ServeEngine(cfg, ecfg=EngineConfig(
         page_size=8, n_pages=64, max_batch=3, max_pages_per_seq=8,
-        scheduler=args.scheduler))
+        prefill_chunk=args.prefill_chunk, scheduler=args.scheduler))
 
     rng = np.random.default_rng(0)
     print(f"submitting 5 requests with mixed prompt/gen lengths "
@@ -37,16 +41,21 @@ def main():
         rid = eng.submit(prompt, max_new_tokens=glen)
         print(f"  request {rid}: prompt {plen} tokens, gen {glen}")
 
-    print("\nfirst 8 engine steps:")
-    for _ in range(8):
+    print("\nfirst 10 engine steps:")
+    for _ in range(10):
         ev = eng.step()
         if ev is None:
             break
         kind = ev[0]
         if kind == "prefill":
-            print(f"  prefill  rid={ev[1]} (padded to {ev[2]} tokens)")
+            chunks = ", ".join(f"rid {r}+{n}t" for r, n in ev[1])
+            print(f"  prefill  chunks [{chunks}]")
         elif kind == "decode":
             print(f"  decode   lanes={list(ev[1])}")
+        elif kind == "mixed":
+            chunks = ", ".join(f"rid {r}+{n}t" for r, n in ev[1])
+            print(f"  mixed    chunks [{chunks}] + decode "
+                  f"lanes={list(ev[2])}")
         else:
             print(f"  {kind}")
     eng.drain()

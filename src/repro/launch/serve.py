@@ -7,9 +7,11 @@ Two modes (the paper is inference-oriented; this is the serve driver):
                   batch, prefilled once, then decoded in lockstep with
                   greedy sampling against the dense KV cache.
   --mode engine   the `repro.serve` engine: per-request lifecycles over
-                  a paged KV cache, prefill/decode interleaved by the
-                  ARTEMIS-cost-aware scheduler, driven by a synthetic
-                  Poisson trace.
+                  a paged KV cache, chunked+batched prefill composed
+                  with decode into mixed steps by the ARTEMIS-cost-aware
+                  scheduler, driven by a synthetic Poisson trace
+                  (`--prefill-chunk` sets the chunk size, `--seed` the
+                  trace/params seed).
 
 The ARTEMIS arithmetic policy applies to every matmul in both modes.
 """
@@ -86,7 +88,7 @@ def serve_engine(arch: str = "qwen3_8b", smoke: bool = True,
                  policy_mode: str = "exact", seed: int = 0,
                  page_size: int = 8, n_pages: int = 256,
                  max_batch: int = 8, scheduler: str = "cost",
-                 params=None) -> dict:
+                 prefill_chunk: int = 32, params=None) -> dict:
     """Continuous-batching serving over a synthetic Poisson trace."""
     from repro.serve import (EngineConfig, ServeEngine, TrafficConfig,
                              synth_trace)
@@ -96,7 +98,7 @@ def serve_engine(arch: str = "qwen3_8b", smoke: bool = True,
     ecfg = EngineConfig(
         page_size=page_size, n_pages=n_pages, max_batch=max_batch,
         max_pages_per_seq=max(1, -(-max_len // page_size)) + 1,
-        scheduler=scheduler)
+        prefill_chunk=prefill_chunk, scheduler=scheduler)
     eng = ServeEngine(cfg, params=params, policy=policy, ecfg=ecfg,
                       seed=seed)
     trace = synth_trace(TrafficConfig(
@@ -132,14 +134,18 @@ def main() -> None:
                     help="engine: Poisson arrivals per virtual second")
     ap.add_argument("--page-size", type=int, default=8)
     ap.add_argument("--n-pages", type=int, default=256)
+    ap.add_argument("--prefill-chunk", type=int, default=32,
+                    help="engine: prompt tokens per prefill chunk")
     ap.add_argument("--scheduler", default="cost",
                     choices=["cost", "fcfs"])
+    ap.add_argument("--seed", type=int, default=0,
+                    help="params + synthetic trace seed")
     args = ap.parse_args()
 
     if args.mode == "static":
         out = serve(arch=args.arch, smoke=not args.full, batch=args.batch,
                     prompt_len=args.prompt_len, gen_len=args.gen_len,
-                    policy_mode=args.policy)
+                    policy_mode=args.policy, seed=args.seed)
         print(f"prefill {out['prefill_s']*1e3:.0f}ms | decode "
               f"{out['decode_tok_per_s']:.1f} tok/s | "
               f"generated shape {out['generated'].shape}")
@@ -148,15 +154,17 @@ def main() -> None:
     out = serve_engine(
         arch=args.arch, smoke=not args.full, n_requests=args.n_requests,
         arrival_rate=args.arrival_rate, prompt_len=args.prompt_len,
-        gen_len=args.gen_len, policy_mode=args.policy,
+        gen_len=args.gen_len, policy_mode=args.policy, seed=args.seed,
         page_size=args.page_size, n_pages=args.n_pages,
-        max_batch=args.batch, scheduler=args.scheduler)
+        max_batch=args.batch, scheduler=args.scheduler,
+        prefill_chunk=args.prefill_chunk)
     m = out["metrics"]
     print(f"engine: {m['n_done']} requests, "
           f"{m['n_generated_tokens']} tokens | "
           f"{m['wall_tok_per_s']:.1f} tok/s wall | "
           f"p50 {m['p50_latency_s']*1e3:.3f}ms "
-          f"p99 {m['p99_latency_s']*1e3:.3f}ms (virtual) | "
+          f"p99 {m['p99_latency_s']*1e3:.3f}ms "
+          f"p99-ttft {m['p99_ttft_s']*1e3:.3f}ms (virtual) | "
           f"cache util {m['cache_utilization']:.2f} | "
           f"{m['n_preemptions']} preemptions")
 

@@ -1,30 +1,35 @@
 """repro.serve — continuous-batching serving engine.
 
-A new layer between the kernels and the launch CLI: request lifecycle
+A layer between the kernels and the launch CLI: request lifecycle
 (`request`), block-based paged KV cache (`paged_cache`), jit-stable
-paged prefill/decode forwards (`paged_model`), ARTEMIS-cost-aware
-scheduling (`scheduler` + `cost`, priced by `repro.hwsim`), synthetic
-Poisson traffic (`traffic`), and the engine driver (`engine`).
+chunked+batched prefill and decode forwards (`paged_model`),
+ARTEMIS-cost-aware mixed-step scheduling (`scheduler` + `cost`, priced
+by `repro.hwsim` over the composed token count), synthetic Poisson
+traffic (`traffic`), and the engine driver (`engine`).
 
 Entry point: `python -m repro.launch.serve --mode engine`.
 """
 from repro.serve.cost import ArtemisCostModel
-from repro.serve.engine import EngineConfig, ServeEngine
+from repro.serve.engine import EngineConfig, ServeEngine, percentile
 from repro.serve.paged_cache import (
     PageAllocator,
     PagedKVCache,
     init_paged_cache,
     pad_to_page,
 )
-from repro.serve.paged_model import make_paged_decode, make_paged_prefill
+from repro.serve.paged_model import (
+    make_paged_chunked_prefill,
+    make_paged_decode,
+    make_paged_prefill,
+)
 from repro.serve.request import Request, RequestState
 from repro.serve.scheduler import Action, Scheduler, SchedulerConfig
 from repro.serve.traffic import TraceItem, TrafficConfig, synth_trace
 
 __all__ = [
-    "ArtemisCostModel", "EngineConfig", "ServeEngine",
+    "ArtemisCostModel", "EngineConfig", "ServeEngine", "percentile",
     "PageAllocator", "PagedKVCache", "init_paged_cache", "pad_to_page",
-    "make_paged_decode", "make_paged_prefill",
+    "make_paged_chunked_prefill", "make_paged_decode", "make_paged_prefill",
     "Request", "RequestState",
     "Action", "Scheduler", "SchedulerConfig",
     "TraceItem", "TrafficConfig", "synth_trace",

@@ -10,8 +10,9 @@ batching needs: a full decode lane-set prices cheaper per token than a
 lone straggler, and a prefill's big token count competes on equal
 footing.
 
-The hook is pluggable: anything with `price(n_tokens) -> ns` works;
-`None` disables cost-aware ordering (pure FCFS).
+The hook is pluggable: anything with `price(n_tokens) -> ns` (and
+`energy(n_tokens) -> pJ` for tiebreaks) works; `None` disables
+cost-aware ordering (pure FCFS).
 """
 from __future__ import annotations
 
@@ -44,15 +45,26 @@ class ArtemisCostModel:
             n_layers=cfg.n_layers, n_tokens=max(int(n_tokens), 1),
             n_heads=cfg.n_heads, d_model=cfg.d_model, d_ff=max(d_ff, 1))
 
+    def _simulate(self, n_tokens: int):
+        n = max(int(n_tokens), 1)
+        if n not in self._memo:
+            self._memo[n] = simulate_model(
+                self._workload(n), DataflowConfig(scheme=self.scheme))
+        return self._memo[n]
+
     def price(self, n_tokens: int) -> float:
         """Latency (ns) of one model pass over n_tokens concurrent
         tokens under the configured dataflow scheme."""
-        n = max(int(n_tokens), 1)
-        if n not in self._memo:
-            res = simulate_model(self._workload(n),
-                                 DataflowConfig(scheme=self.scheme))
-            self._memo[n] = res.latency_ns
-        return self._memo[n]
+        return self._simulate(n_tokens).latency_ns
+
+    def energy(self, n_tokens: int) -> float:
+        """Energy (pJ) of the same pass — the scheduler's tiebreak when
+        two candidate compositions price identically (the simulator's
+        round-based latency plateaus make exact ties real)."""
+        return self._simulate(n_tokens).energy_pj
 
     def price_per_token(self, n_tokens: int) -> float:
         return self.price(n_tokens) / max(int(n_tokens), 1)
+
+    def energy_per_token(self, n_tokens: int) -> float:
+        return self.energy(n_tokens) / max(int(n_tokens), 1)

@@ -2,29 +2,45 @@
 
 One `step()` executes one scheduler action on the device:
 
-  prefill — one request through `make_paged_prefill` (prompt bucketed
-            to a page multiple), K/V scattered into freshly allocated
-            pages, first token greedily sampled from the last prompt
-            logit, request moved to a decode lane.
+  prefill — one fixed-size chunk of prompt tokens for up to max_batch
+            requests AT ONCE through the single compiled
+            `make_paged_chunked_prefill` step ((B, C) shapes are
+            engine constants, so chunked prefill compiles exactly
+            once). A request whose prompt exceeds the chunk size sits
+            in PREFILL across steps, `prefill_pos` marking its cursor;
+            pages are allocated chunk-by-chunk. When a chunk completes
+            the prompt, the first token is sampled from the last valid
+            chunk logit and the request flips to DECODE on the lane it
+            reserved at admission.
   decode  — every decode lane advances one token through the single
             compiled `make_paged_decode` step (fixed max-batch shape;
             idle lanes are masked onto the trash page). Lanes that hit
             a page boundary get a new page first; if the pool is dry
             the latest-admitted request is preempted (pages freed,
             recompute-style requeue) until the allocation fits.
+  mixed   — prefill chunks AND a decode round in the same step, priced
+            as ONE pass over the composed token count — the ARTEMIS
+            token-parallel dataflow prices a batch by its total
+            concurrent tokens, so sharing a pass is exactly where the
+            hardware model wins. The two halves touch disjoint pages,
+            so execution order inside the step is irrelevant to the
+            results.
 
 The engine keeps a VIRTUAL clock priced by the ARTEMIS cost model
-(`hwsim.simulate_model`, token_PP dataflow): every executed batch
-advances time by its simulated latency, so arrival interleaving,
-latency percentiles and the scheduler's decisions are deterministic
-functions of (trace, seed) — wall-clock throughput is measured
-separately by the benchmark. Greedy sampling end-to-end: the engine's
-outputs are token-identical to decoding each request alone on the
-dense-cache path (tests/test_serve.py pins this).
+(`hwsim.simulate_model`, token_PP dataflow): every executed step
+advances time by the simulated latency of its composed batch, so
+arrival interleaving, latency percentiles and the scheduler's
+decisions are deterministic functions of (trace, seed) — wall-clock
+throughput is measured separately by the benchmark. Greedy sampling
+end-to-end: the engine's outputs are token-identical to decoding each
+request alone on the dense-cache path, including through preemption
+landing mid-prefill (tests/test_serve.py pins this).
 """
 from __future__ import annotations
 
 import dataclasses
+import functools
+import math
 
 import jax
 import jax.numpy as jnp
@@ -38,23 +54,72 @@ from repro.serve.cost import ArtemisCostModel
 from repro.serve.paged_cache import (
     TRASH_PAGE,
     init_paged_cache,
-    pad_to_page,
 )
-from repro.serve.paged_model import make_paged_decode, make_paged_prefill
+from repro.serve.paged_model import (
+    make_paged_chunked_prefill,
+    make_paged_decode,
+)
 from repro.serve.request import Request, RequestState
-from repro.serve.scheduler import Scheduler, SchedulerConfig
+from repro.serve.scheduler import Action, Scheduler, SchedulerConfig
 from repro.serve.traffic import TraceItem
+
+
+def percentile(sorted_vals, p: float) -> float:
+    """Nearest-rank percentile over an ascending-sorted sequence:
+    element ceil(p/100 * n) of the 1-indexed list (so p50 of two values
+    is the LOWER one, and p100 is the max — no off-by-one upward)."""
+    n = len(sorted_vals)
+    if n == 0:
+        return 0.0
+    k = min(max(math.ceil(p / 100.0 * n), 1), n)
+    return float(sorted_vals[k - 1])
+
+
+@functools.lru_cache(maxsize=None)
+def _compiled_steps(cfg: ModelConfig, policy: ArithmeticPolicy):
+    """Jitted paged steps shared across engines with the same
+    (cfg, policy): a fresh jax.jit wrapper per engine would recompile
+    per instance, which both slows tests and lets compile time leak
+    into benchmark drains (the warmup engine would warm nothing)."""
+    # donate the KV pool (arg 2): both steps return the updated pool
+    # and the engine overwrites self.cache.kv with it, so XLA can
+    # update pages in place instead of copying the whole pool
+    return (jax.jit(make_paged_chunked_prefill(cfg, policy),
+                    donate_argnums=(2,)),
+            jax.jit(make_paged_decode(cfg, policy),
+                    donate_argnums=(2,)))
 
 
 @dataclasses.dataclass(frozen=True)
 class EngineConfig:
     page_size: int = 8
     n_pages: int = 128             # includes the reserved trash page 0
-    max_batch: int = 4             # decode lanes (compiled batch width)
+    max_batch: int = 4             # batch lanes (compiled batch width)
     max_pages_per_seq: int = 16    # block-table width
+    prefill_chunk: int = 32        # prompt tokens per prefill chunk
     cache_dtype: str = "float32"
     scheduler: str = "cost"        # "cost" | "fcfs"
     scheme: str = "token_PP"       # hwsim dataflow used for pricing
+
+    def __post_init__(self):
+        if self.page_size < 1:
+            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
+        if self.n_pages < 2:
+            raise ValueError(
+                f"n_pages must be >= 2 (page 0 is the reserved trash "
+                f"page), got {self.n_pages}")
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_pages_per_seq < 1:
+            raise ValueError(
+                f"max_pages_per_seq must be >= 1, got "
+                f"{self.max_pages_per_seq}")
+        if self.prefill_chunk < 1:
+            raise ValueError(
+                f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
+        if self.scheduler not in ("cost", "fcfs"):
+            raise ValueError(f"unknown scheduler {self.scheduler!r}")
+        jnp.dtype(self.cache_dtype)   # raises on nonsense dtypes
 
 
 class ServeEngine:
@@ -73,14 +138,8 @@ class ServeEngine:
         self.cost = ArtemisCostModel(cfg, scheme=ecfg.scheme)
         self.scheduler = Scheduler(
             SchedulerConfig(policy=ecfg.scheduler),
-            self.cost, ecfg.page_size)
-        # donate the KV pool (arg 2): both steps return the updated pool
-        # and the engine overwrites self.cache.kv with it, so XLA can
-        # update pages in place instead of copying the whole pool
-        self._prefill = jax.jit(make_paged_prefill(cfg, policy),
-                                donate_argnums=(2,))
-        self._decode = jax.jit(make_paged_decode(cfg, policy),
-                               donate_argnums=(2,))
+            self.cost, ecfg.page_size, ecfg.prefill_chunk)
+        self._prefill, self._decode = _compiled_steps(cfg, policy)
         self.requests: dict[int, Request] = {}
         self.lanes: list[Request | None] = [None] * ecfg.max_batch
         self.now = 0.0
@@ -137,28 +196,36 @@ class ServeEngine:
                   and r.arrival_time > self.now]
         return min(future) if future else None
 
-    def _decoding(self) -> list[Request]:
+    def _laned(self) -> list[Request]:
         return [r for r in self.lanes if r is not None]
+
+    def _decoding(self) -> list[Request]:
+        return [r for r in self.lanes
+                if r is not None and r.state is RequestState.DECODE]
+
+    def _prefilling(self) -> list[Request]:
+        pf = [r for r in self.lanes
+              if r is not None and r.state is RequestState.PREFILL]
+        return sorted(pf, key=lambda r: self._admit_order[r.rid])
 
     def step(self) -> tuple | None:
         """Execute one scheduler action; returns the event or None when
         there is nothing left to do."""
         action = self.scheduler.decide(
             self._queued_visible(), self._next_arrival(),
-            len(self._decoding()), self.lanes.count(None),
-            self.cache.allocator.n_free)
+            self._prefilling(), self._decoding(),
+            self.lanes.count(None), self.cache.allocator.n_free)
         if action.kind == "idle":
             return None
         if action.kind == "advance":
             self.now = action.next_time
             ev = ("advance", action.next_time)
-        elif action.kind == "prefill":
-            ev = self._do_prefill(self.requests[action.rid])
         else:
-            ev = self._do_decode()
+            ev = self._do_mixed(action)
         if ev is not None:
             self.events.append(ev)
-            if ev[0] != "advance":   # utilization of EXECUTED batches
+            if ev[0] not in ("advance", "preempt_all"):
+                # utilization of EXECUTED batches
                 self._util_sum += self.cache.utilization()
                 self._util_samples += 1
         return ev
@@ -168,6 +235,9 @@ class ServeEngine:
             if all(r.state is RequestState.DONE
                    for r in self.requests.values()):
                 return
+            # a ("preempt_all", ...) step executes nothing but DOES
+            # make progress (freed pages re-admit the evicted
+            # requests), so only a genuinely idle None stalls
             if self.step() is None:
                 break
         undone = [r.rid for r in self.requests.values()
@@ -177,97 +247,209 @@ class ServeEngine:
 
     # -- actions ------------------------------------------------------------
 
-    def _do_prefill(self, req: Request) -> tuple:
-        page = self.ecfg.page_size
-        prompt = req.effective_prompt()
-        s_pad = pad_to_page(len(prompt), page)
-        req.state = RequestState.PREFILL
-        req.pages = self.cache.allocator.alloc(s_pad // page, req.rid)
-        tokens = np.zeros((1, s_pad), np.int32)
-        tokens[0, :len(prompt)] = prompt
-        logits, kv = self._prefill(
-            self.params, jnp.asarray(tokens), self.cache.kv,
-            jnp.asarray(req.pages, jnp.int32))
-        self.cache.kv = kv
-        nxt = int(stepslib.greedy_sample(logits[len(prompt) - 1]))
-        req.seq_len = len(prompt)
-        self.now += self.cost.price(s_pad) * 1e-9
-        req.generated.append(nxt)
-        if req.t_first_token is None:
-            req.t_first_token = self.now
-        self._admit_order[req.rid] = self._admit_seq
-        self._admit_seq += 1
-        if req.done:
-            self._finish(req)
-        else:
-            lane = self.lanes.index(None)
-            req.lane = lane
-            self.lanes[lane] = req
-            req.state = RequestState.DECODE
-        return ("prefill", req.rid, s_pad, self.now)
-
-    def _grow(self, req: Request) -> bool:
-        """Give `req` one more page, preempting latest-admitted decode
-        requests under cache pressure. False if req itself was evicted."""
-        alloc = self.cache.allocator
-        while not alloc.can_alloc(1):
-            victims = self._decoding()
-            victim = max(victims, key=lambda r: self._admit_order[r.rid])
-            self._preempt(victim)
-            if victim is req:
-                return False
-        req.pages.extend(alloc.alloc(1, req.rid))
-        return True
+    def _newest_victim(self, exclude: Request | None) -> Request | None:
+        victims = [r for r in self._laned() if r is not exclude]
+        if not victims:
+            return None
+        return max(victims, key=lambda r: self._admit_order[r.rid])
 
     def _preempt(self, req: Request) -> None:
+        phase = "prefill" if req.state is RequestState.PREFILL else "decode"
         self.cache.allocator.free(req.pages)
         req.pages = []
         req.seq_len = 0
+        req.prefill_pos = 0
         self.lanes[req.lane] = None
         req.lane = -1
         req.state = RequestState.QUEUED
         req.n_preemptions += 1
-        self.events.append(("preempt", req.rid, self.now))
+        self.events.append(("preempt", req.rid, phase, self.now))
 
-    def _do_decode(self) -> tuple | None:
+    def _grow_decode_lanes(self) -> None:
+        """Give every decode lane at a page boundary its next page,
+        oldest admissions first so eviction pressure lands on the
+        newest request."""
         page = self.ecfg.page_size
-        # page boundary crossings first, oldest admissions first so
-        # eviction pressure lands on the newest request
         for req in sorted(self._decoding(),
                           key=lambda r: self._admit_order[r.rid]):
             if req.state is not RequestState.DECODE:
                 continue   # evicted earlier in this very loop
             if req.seq_len >= len(req.pages) * page:
                 self._grow(req)
-        batch = self._decoding()
-        if not batch:
-            return None   # everything was preempted; nothing ran
 
-        b, pmax = self.ecfg.max_batch, self.ecfg.max_pages_per_seq
-        tokens = np.zeros((b, 1), np.int32)
-        tables = np.full((b, pmax), TRASH_PAGE, np.int32)
-        seq_lens = np.zeros((b,), np.int32)
-        active = np.zeros((b,), bool)
-        for req in batch:
-            tokens[req.lane, 0] = req.generated[-1]
-            tables[req.lane, :len(req.pages)] = req.pages
-            seq_lens[req.lane] = req.seq_len
-            active[req.lane] = True
-        logits, kv = self._decode(
-            self.params, jnp.asarray(tokens), self.cache.kv,
-            jnp.asarray(tables), jnp.asarray(seq_lens),
-            jnp.asarray(active))
-        self.cache.kv = kv
-        nxt = np.asarray(stepslib.greedy_sample(logits))
-        self.now += self.cost.price(len(batch)) * 1e-9
-        rids = []
-        for req in batch:
-            req.generated.append(int(nxt[req.lane]))
+    def _grow(self, req: Request) -> bool:
+        """Give `req` one more page, preempting latest-admitted laned
+        requests under cache pressure. False if req itself was evicted."""
+        alloc = self.cache.allocator
+        while not alloc.can_alloc(1):
+            victim = self._newest_victim(exclude=None)
+            self._preempt(victim)
+            if victim is req:
+                return False
+        req.pages.extend(alloc.alloc(1, req.rid))
+        return True
+
+    def _alloc_chunk(self, req: Request, want: int) -> int:
+        """Allocate pages so `req` can write `want` more prompt tokens.
+        Under pressure, only requests admitted AFTER `req` are
+        preempted (pressure always lands on the newest, so a fresh
+        admission can never evict an older request). Returns the
+        granted token count — possibly < want, or 0, when the pool
+        cannot fund the chunk without touching older requests."""
+        page = self.ecfg.page_size
+        alloc = self.cache.allocator
+        end = req.prefill_pos + want
+        while len(req.pages) * page < end:
+            if alloc.can_alloc(1):
+                req.pages.extend(alloc.alloc(1, req.rid))
+                continue
+            victim = self._newest_victim(exclude=req)
+            if (victim is None or self._admit_order[victim.rid]
+                    < self._admit_order[req.rid]):
+                break
+            self._preempt(victim)
+        return min(want, len(req.pages) * page - req.prefill_pos)
+
+    def _do_mixed(self, action: Action) -> tuple | None:
+        """Execute a prefill / decode / mixed step: allocate all pages
+        first (decode growth, then prefill chunks — preemption between
+        the halves is resolved before anything runs), then the decode
+        and chunked-prefill forwards, then advance the clock ONCE by
+        the price of the composed token count."""
+        preempted_before = sum(r.n_preemptions
+                               for r in self.requests.values())
+
+        # 1. decode page-boundary growth, oldest admissions first so
+        #    eviction pressure lands on the newest request
+        if action.decode:
+            self._grow_decode_lanes()
+
+        page = self.ecfg.page_size
+        # 2. prefill chunk allocation (plan order = admission order,
+        #    then FCFS admissions); a request that was evicted after
+        #    the plan was made is skipped
+        chunks: list[tuple[Request, int]] = []
+        for rid, want in action.prefill:
+            req = self.requests[rid]
+            if req.state is RequestState.QUEUED and req.lane < 0:
+                if None not in self.lanes:
+                    continue   # lanes filled by an earlier admission
+                lane = self.lanes.index(None)
+                req.lane = lane
+                self.lanes[lane] = req
+                req.state = RequestState.PREFILL
+                self._admit_order[req.rid] = self._admit_seq
+                self._admit_seq += 1
+            elif req.state is not RequestState.PREFILL:
+                continue       # preempted between plan and execution
+            remaining = len(req.effective_prompt()) - req.prefill_pos
+            n = self._alloc_chunk(req, min(want, remaining))
+            if n <= 0:
+                continue
+            chunks.append((req, n))
+
+        # 3. decode forward over the lanes that survived allocation.
+        #    If the planned chunks could not be funded at all — the
+        #    missing pages are held by OLDER requests, which eviction
+        #    never touches — fall back to a decode round so those
+        #    holders keep progressing and eventually free the pages
+        #    the chunk is waiting on (drain must never stall while
+        #    runnable lanes exist)
+        run_decode = bool(action.decode)
+        if not chunks and not run_decode and self._decoding():
+            self._grow_decode_lanes()
+            run_decode = True
+        dec_batch: list[Request] = []
+        dec_next = None
+        if run_decode:
+            dec_batch = self._decoding()
+        if dec_batch:
+            b, pmax = self.ecfg.max_batch, self.ecfg.max_pages_per_seq
+            tokens = np.zeros((b, 1), np.int32)
+            tables = np.full((b, pmax), TRASH_PAGE, np.int32)
+            seq_lens = np.zeros((b,), np.int32)
+            active = np.zeros((b,), bool)
+            for req in dec_batch:
+                tokens[req.lane, 0] = req.generated[-1]
+                tables[req.lane, :len(req.pages)] = req.pages
+                seq_lens[req.lane] = req.seq_len
+                active[req.lane] = True
+            logits, kv = self._decode(
+                self.params, jnp.asarray(tokens), self.cache.kv,
+                jnp.asarray(tables), jnp.asarray(seq_lens),
+                jnp.asarray(active))
+            self.cache.kv = kv
+            dec_next = np.asarray(stepslib.greedy_sample(logits))
+
+        # 4. chunked + batched prefill forward
+        chunk_logits = None
+        if chunks:
+            b, c = self.ecfg.max_batch, self.ecfg.prefill_chunk
+            pmax = self.ecfg.max_pages_per_seq
+            tokens = np.zeros((b, c), np.int32)
+            tables = np.full((b, pmax), TRASH_PAGE, np.int32)
+            start = np.zeros((b,), np.int32)
+            lens = np.zeros((b,), np.int32)
+            active = np.zeros((b,), bool)
+            for i, (req, n) in enumerate(chunks):
+                ep = req.effective_prompt()
+                tokens[i, :n] = ep[req.prefill_pos:req.prefill_pos + n]
+                tables[i, :len(req.pages)] = req.pages
+                start[i] = req.prefill_pos
+                lens[i] = n
+                active[i] = True
+            chunk_logits, kv = self._prefill(
+                self.params, jnp.asarray(tokens), self.cache.kv,
+                jnp.asarray(tables), jnp.asarray(start),
+                jnp.asarray(lens), jnp.asarray(active))
+            self.cache.kv = kv
+
+        # 5. one clock advance for the whole composed step
+        n_total = len(dec_batch) + sum(n for _, n in chunks)
+        if n_total == 0:
+            preempted = sum(r.n_preemptions
+                            for r in self.requests.values())
+            if preempted > preempted_before:
+                # nothing ran, but freed pages make the re-queued
+                # requests immediately prefillable — progress, not
+                # a stall (drain keeps going)
+                return ("preempt_all", self.now)
+            return None
+        self.now += self.cost.price(n_total) * 1e-9
+
+        # 6. apply decode results
+        dec_rids = []
+        for req in dec_batch:
+            req.generated.append(int(dec_next[req.lane]))
             req.seq_len += 1
-            rids.append(req.rid)
+            dec_rids.append(req.rid)
             if req.done:
                 self._finish(req)
-        return ("decode", tuple(rids), self.now)
+
+        # 7. apply prefill results: advance cursors; a chunk that
+        #    completes its prompt samples the next token from the last
+        #    VALID chunk position and flips the request to DECODE
+        chunk_plan = []
+        for i, (req, n) in enumerate(chunks):
+            req.prefill_pos += n
+            req.seq_len = req.prefill_pos
+            chunk_plan.append((req.rid, n))
+            if req.prefill_pos < len(req.effective_prompt()):
+                continue
+            nxt = int(stepslib.greedy_sample(chunk_logits[i, n - 1]))
+            req.generated.append(nxt)
+            if req.t_first_token is None:
+                req.t_first_token = self.now
+            if req.done:
+                self._finish(req)
+            else:
+                req.state = RequestState.DECODE
+
+        if action.kind == "decode" or not chunk_plan:
+            return ("decode", tuple(dec_rids), self.now)
+        if action.kind == "prefill" or not dec_rids:
+            return ("prefill", tuple(chunk_plan), self.now)
+        return ("mixed", tuple(chunk_plan), tuple(dec_rids), self.now)
 
     def _finish(self, req: Request) -> None:
         if req.pages:
@@ -289,22 +471,18 @@ class ServeEngine:
         done = [r for r in self.requests.values()
                 if r.state is RequestState.DONE]
         lats = sorted(r.latency() for r in done)
+        ttfts = sorted(r.ttft() for r in done)
         n_tok = sum(len(r.generated) for r in done)
-
-        def pct(p):
-            if not lats:
-                return 0.0
-            return lats[min(int(p / 100 * len(lats)), len(lats) - 1)]
-
         return {
             "n_done": len(done),
             "n_generated_tokens": n_tok,
             "virtual_time_s": self.now,
             "virtual_tok_per_s": n_tok / max(self.now, 1e-12),
-            "p50_latency_s": pct(50),
-            "p99_latency_s": pct(99),
-            "mean_ttft_s": (float(np.mean([r.ttft() for r in done]))
-                            if done else 0.0),
+            "p50_latency_s": percentile(lats, 50),
+            "p99_latency_s": percentile(lats, 99),
+            "mean_ttft_s": (float(np.mean(ttfts)) if done else 0.0),
+            "p50_ttft_s": percentile(ttfts, 50),
+            "p99_ttft_s": percentile(ttfts, 99),
             "n_preemptions": sum(r.n_preemptions
                                  for r in self.requests.values()),
             "cache_utilization": (self._util_sum

@@ -1,24 +1,37 @@
 """Paged-attention forward passes for the serving engine.
 
-Two step builders, both jit-stable under continuous batching:
+Three step builders, all jit-stable under continuous batching:
 
   make_paged_prefill(cfg, policy) ->
       (params, tokens (1, S_pad), kv, page_ids (P_req,)) -> (logits, kv)
-    Prefill runs ONE request at a time through the standard
-    `model.apply` in-sequence attention path (so prefill numerics are
-    the dense path's by construction), then scatters the resulting
-    K/V rows into the request's pages. S_pad is the prompt length
-    padded to a page multiple — retraces once per bucket.
+    Whole-prompt prefill for ONE request through the standard
+    `model.apply` in-sequence attention path, K/V scattered into the
+    request's pages afterwards. Kept as the reference path (tests pin
+    paged numerics against it); the engine itself uses the chunked
+    builder below.
+
+  make_paged_chunked_prefill(cfg, policy) ->
+      (params, tokens (B, C), kv, block_tables (B, Pmax),
+       start_pos (B,), chunk_lens (B,), active (B,)) -> (logits, kv)
+    One fixed-size chunk of C prompt tokens for up to B requests AT
+    ONCE. Row b holds chunk_lens[b] valid tokens of request b's
+    effective prompt starting at absolute position start_pos[b]; each
+    chunk token's K/V is scattered into the row's pages first, then the
+    row's block table is gathered back so queries attend to the
+    request's whole written prefix (earlier chunks + this one) under a
+    causal mask. Shapes are (max_batch, C) constants, so chunked
+    prefill compiles exactly once — no per-bucket retraces — and a
+    prompt longer than C simply spans multiple engine steps.
 
   make_paged_decode(cfg, policy) ->
       (params, tokens (B, 1), kv, block_tables (B, Pmax),
        seq_lens (B,), active (B,)) -> (logits (B, V), kv)
-    One token for every lane of a FIXED max-batch. Each lane scatters
-    its new K/V into (its own page, seq_len % page) — inactive lanes
-    scatter into the reserved trash page 0 — then gathers its block
-    table back to a (B, Pmax*page) key/value view and attends under a
-    per-lane length mask. Shapes never depend on request state, so the
-    decode step compiles exactly once.
+    One token for every lane of a FIXED max-batch — the chunked pass
+    with C == 1 query and the position taken from seq_lens.
+
+Inactive rows / padding chunk positions scatter into the reserved
+trash page 0 and are excluded from every valid query's mask, so the
+compiled steps never see a data-dependent shape.
 
 Only attention families (dense / moe) are supported: paged KV is
 meaningless for the recurrent-state families (rwkv6 / zamba2), which
@@ -47,7 +60,7 @@ def _check_family(cfg: ModelConfig) -> None:
 
 
 # ---------------------------------------------------------------------------
-# prefill
+# whole-prompt prefill (reference path)
 # ---------------------------------------------------------------------------
 
 
@@ -57,7 +70,7 @@ def make_paged_prefill(cfg: ModelConfig,
 
     tokens: (1, S_pad) i32, S_pad a page multiple; page_ids: (S_pad/page,)
     i32 pages owned by the request, in position order. Returns logits for
-    ALL S_pad positions (the engine indexes the true last prompt position
+    ALL S_pad positions (the caller indexes the true last prompt position
     host-side) and the pool with the request's K/V written.
     """
     _check_family(cfg)
@@ -80,17 +93,18 @@ def make_paged_prefill(cfg: ModelConfig,
 
 
 # ---------------------------------------------------------------------------
-# decode
+# shared paged-attention step body (chunked prefill and decode)
 # ---------------------------------------------------------------------------
 
 
 def _paged_attn_block(lp, x, cfg: ModelConfig, policy, positions,
                       ckl, cvl, block_tables, page_idx, offset):
-    """One layer's attention with paged K/V. x: (B, 1, d).
+    """One layer's attention with paged K/V. x: (B, S, d).
 
-    ckl/cvl: this layer's page pool (P, page, KV, Dh); page_idx/offset:
-    (B,) scatter coordinates for the new token (trash page for inactive
-    lanes). Returns (attn_out, new ckl, new cvl).
+    ckl/cvl: this layer's page pool (P, page, KV, Dh); positions,
+    page_idx, offset: (B, S) — the absolute position of every query
+    token and its scatter coordinates in the pool (trash page for
+    inactive / padding tokens). Returns (attn_out, new ckl, new cvl).
     """
     b, s, _ = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
@@ -104,12 +118,14 @@ def _paged_attn_block(lp, x, cfg: ModelConfig, policy, positions,
     qh = L.apply_rope(qh, positions, cfg.rope_theta)
     kh = L.apply_rope(kh, positions, cfg.rope_theta)
 
-    # scatter the new token's K/V into each lane's current page
-    ckl = ckl.at[page_idx, offset].set(kh[:, 0].astype(ckl.dtype))
-    cvl = cvl.at[page_idx, offset].set(vh[:, 0].astype(cvl.dtype))
+    # scatter the new tokens' K/V into their (page, slot) coordinates
+    ckl = ckl.at[page_idx, offset].set(kh.astype(ckl.dtype))
+    cvl = cvl.at[page_idx, offset].set(vh.astype(cvl.dtype))
 
-    # gather each lane's block table back to a contiguous KV view:
-    # (B, Pmax, page, KV, Dh) -> (B, Smax, KV, Dh), position order
+    # gather each row's block table back to a contiguous KV view:
+    # (B, Pmax, page, KV, Dh) -> (B, Smax, KV, Dh), position order —
+    # this view already contains the K/V scattered just above, so
+    # chunk tokens attend to earlier tokens of the same chunk
     pmax, page = block_tables.shape[1], ckl.shape[1]
     smax = pmax * page
     kall = ckl[block_tables].reshape(b, smax, kvh, hd).astype(x.dtype)
@@ -120,16 +136,95 @@ def _paged_attn_block(lp, x, cfg: ModelConfig, policy, positions,
     scores = L.qeinsum("bskgd,btkd->bkgst", qg, kall, policy)
     scores = scores.astype(jnp.float32) * (hd ** -0.5)
     # page j of a block table holds positions [j*page, (j+1)*page), so
-    # the gathered view's kv position IS its index t
-    t = jnp.arange(smax, dtype=jnp.int32)[None, :]       # (1, Smax)
-    keep = t <= positions                                # (B, Smax)
+    # the gathered view's kv position IS its index t; causal within the
+    # chunk because each query's own position bounds the mask
+    t = jnp.arange(smax, dtype=jnp.int32)[None, None, :]  # (1, 1, Smax)
+    keep = t <= positions[:, :, None]                     # (B, S, Smax)
     if cfg.attn_window:
-        keep = keep & (t > positions - cfg.attn_window)
-    scores = jnp.where(keep[:, None, None, None, :], scores, -1e30)
+        keep = keep & (t > positions[:, :, None] - cfg.attn_window)
+    scores = jnp.where(keep[:, None, None, :, :], scores, -1e30)
     probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
     ctx = L.qeinsum("bkgst,btkd->bskgd", probs, vall, policy)
     ctx = ctx.reshape(b, s, h * hd)
     return L.mm(ctx, p["wo"], policy), ckl, cvl
+
+
+def _paged_forward(params, cfg: ModelConfig, policy, tokens, kv,
+                   block_tables, positions, page_idx, offset):
+    """Full-model paged step: embed -> layers -> logits (B, S, V)."""
+    dtype = jnp.dtype(cfg.compute_dtype)
+    x = transformer._embed_tokens(params, cfg, tokens, dtype)   # (B, S, d)
+
+    def ln(lnp, y):
+        return L.rmsnorm(lnp, y, cfg.norm_eps)
+
+    def body(carry, lp):
+        x, ck, cv, li = carry
+        ckl = jax.lax.dynamic_index_in_dim(ck, li, 0, False)
+        cvl = jax.lax.dynamic_index_in_dim(cv, li, 0, False)
+        h, ckl, cvl = _paged_attn_block(
+            lp, ln(lp["ln1"], x), cfg, policy, positions,
+            ckl, cvl, block_tables, page_idx, offset)
+        x = x + h
+        if cfg.family == "moe":
+            f, _ = M.moe_ffn(lp["moe"], ln(lp["ln2"], x), cfg, policy)
+        else:
+            f = L.ffn(lp["ffn"], ln(lp["ln2"], x),
+                      cfg.act, cfg.glu, policy)
+        x = x + f
+        ck = jax.lax.dynamic_update_index_in_dim(ck, ckl, li, 0)
+        cv = jax.lax.dynamic_update_index_in_dim(cv, cvl, li, 0)
+        return (x, ck, cv, li + 1), None
+
+    (x, ck, cv, _), _ = jax.lax.scan(
+        body, (x, kv["k"], kv["v"], jnp.zeros((), jnp.int32)),
+        params["layers"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = transformer._logits(params, cfg, x)                # (B, S, V)
+    return logits, {"k": ck, "v": cv}
+
+
+# ---------------------------------------------------------------------------
+# chunked + batched prefill
+# ---------------------------------------------------------------------------
+
+
+def make_paged_chunked_prefill(cfg: ModelConfig,
+                               policy: ArithmeticPolicy = ArithmeticPolicy()):
+    """Returns chunked_prefill(params, tokens, kv, block_tables,
+    start_pos, chunk_lens, active) -> (logits (B, C, V), kv).
+
+    Row b carries chunk_lens[b] valid prompt tokens of one request,
+    starting at absolute position start_pos[b]; block_tables[b] must
+    already contain the pages covering [0, start_pos[b] + chunk_lens[b])
+    (unused slots: trash page). Logits are returned for every chunk
+    position; the engine indexes the last VALID position host-side when
+    a chunk completes its prompt. Padding positions and inactive rows
+    scatter to the trash page and never enter a valid query's mask.
+    """
+    _check_family(cfg)
+
+    def chunked_prefill(params, tokens, kv, block_tables, start_pos,
+                        chunk_lens, active):
+        b, c = tokens.shape
+        page = kv["k"].shape[2]
+        pmax = block_tables.shape[1]
+        idx = jnp.arange(c, dtype=jnp.int32)[None, :]           # (1, C)
+        positions = start_pos[:, None] + idx                    # (B, C)
+        valid = active[:, None] & (idx < chunk_lens[:, None])
+        slot = jnp.take_along_axis(
+            block_tables, jnp.clip(positions // page, 0, pmax - 1), axis=1)
+        page_idx = jnp.where(valid, slot, TRASH_PAGE)
+        offset = jnp.where(valid, positions % page, 0)
+        return _paged_forward(params, cfg, policy, tokens, kv,
+                              block_tables, positions, page_idx, offset)
+
+    return chunked_prefill
+
+
+# ---------------------------------------------------------------------------
+# decode
+# ---------------------------------------------------------------------------
 
 
 def make_paged_decode(cfg: ModelConfig,
@@ -139,44 +234,17 @@ def make_paged_decode(cfg: ModelConfig,
     _check_family(cfg)
 
     def decode(params, tokens, kv, block_tables, seq_lens, active):
-        dtype = jnp.dtype(cfg.compute_dtype)
         page = kv["k"].shape[2]
-        x = transformer._embed_tokens(params, cfg, tokens, dtype)  # (B,1,d)
-        b = x.shape[0]
-        positions = seq_lens[:, None]                              # (B, 1)
+        positions = seq_lens[:, None]                           # (B, 1)
 
         # scatter coordinates; inactive lanes write to the trash page
         page_slot = jnp.take_along_axis(
             block_tables, (seq_lens // page)[:, None], axis=1)[:, 0]
-        page_idx = jnp.where(active, page_slot, TRASH_PAGE)
-        offset = jnp.where(active, seq_lens % page, 0)
-
-        def ln(lnp, y):
-            return L.rmsnorm(lnp, y, cfg.norm_eps)
-
-        def body(carry, lp):
-            x, ck, cv, li = carry
-            ckl = jax.lax.dynamic_index_in_dim(ck, li, 0, False)
-            cvl = jax.lax.dynamic_index_in_dim(cv, li, 0, False)
-            h, ckl, cvl = _paged_attn_block(
-                lp, ln(lp["ln1"], x), cfg, policy, positions,
-                ckl, cvl, block_tables, page_idx, offset)
-            x = x + h
-            if cfg.family == "moe":
-                f, _ = M.moe_ffn(lp["moe"], ln(lp["ln2"], x), cfg, policy)
-            else:
-                f = L.ffn(lp["ffn"], ln(lp["ln2"], x),
-                          cfg.act, cfg.glu, policy)
-            x = x + f
-            ck = jax.lax.dynamic_update_index_in_dim(ck, ckl, li, 0)
-            cv = jax.lax.dynamic_update_index_in_dim(cv, cvl, li, 0)
-            return (x, ck, cv, li + 1), None
-
-        (x, ck, cv, _), _ = jax.lax.scan(
-            body, (x, kv["k"], kv["v"], jnp.zeros((), jnp.int32)),
-            params["layers"])
-        x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
-        logits = transformer._logits(params, cfg, x)   # (B, 1, V)
-        return logits[:, 0], {"k": ck, "v": cv}
+        page_idx = jnp.where(active, page_slot, TRASH_PAGE)[:, None]
+        offset = jnp.where(active, seq_lens % page, 0)[:, None]
+        logits, kv = _paged_forward(params, cfg, policy, tokens, kv,
+                                    block_tables, positions, page_idx,
+                                    offset)
+        return logits[:, 0], kv
 
     return decode

@@ -6,10 +6,14 @@ State machine:
        ^                   |
        +---- (preempt) ----+
 
-A preempted request is re-queued in *recompute* style: its prompt
-becomes original-prompt + tokens-generated-so-far, its pages are freed,
-and a later prefill rebuilds the cache — for greedy sampling this is
-token-identical to never having been preempted.
+Prefill is CHUNKED: a request can sit in PREFILL across many engine
+steps, `prefill_pos` marking how many tokens of its effective prompt
+are already written to the paged cache. A preempted request (from
+either PREFILL or DECODE) is re-queued in *recompute* style: its
+prompt becomes original-prompt + tokens-generated-so-far, its pages
+are freed, `prefill_pos` resets to 0, and a later prefill rebuilds the
+cache — for greedy sampling this is token-identical to never having
+been preempted.
 """
 from __future__ import annotations
 
@@ -36,7 +40,8 @@ class Request:
     generated: list[int] = dataclasses.field(default_factory=list)
     pages: list[int] = dataclasses.field(default_factory=list)
     seq_len: int = 0                 # tokens currently in the paged cache
-    lane: int = -1                   # decode batch lane, -1 = none
+    prefill_pos: int = 0             # effective-prompt tokens prefilled
+    lane: int = -1                   # batch lane (prefill or decode), -1 = none
     n_preemptions: int = 0
     # metrics (virtual-clock seconds)
     t_first_token: float | None = None

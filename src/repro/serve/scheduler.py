@@ -1,48 +1,65 @@
-"""Continuous-batching scheduler — admission control + action choice.
+"""Continuous-batching scheduler — admission control + step composition.
 
-Each engine step the scheduler picks ONE action from the feasible set:
+Each engine step the scheduler composes ONE action:
 
-  prefill(r) — admit the head-of-line queued request (strict FCFS within
-               the queue): needs a free decode lane and enough free
-               pages for its padded prompt.
-  decode     — run one token for every active decode lane.
-  advance(t) — nothing runnable now; jump the virtual clock to the next
-               arrival.
+  prefill — run one fixed-size chunk (<= prefill_chunk tokens) for a
+            BATCH of requests: every request already mid-prefill
+            continues its next chunk, and head-of-line queued requests
+            (strict FCFS) are admitted into free lanes while the page
+            budget lasts. A prompt longer than the chunk size spans
+            multiple steps instead of stalling the decode lanes.
+  decode  — one token for every active decode lane.
+  mixed   — prefill chunks AND decode composed into a single step,
+            priced as one pass over the combined token count — the
+            ARTEMIS token-parallel dataflow spreads all concurrent
+            tokens over the banks, so heterogeneous compositions are
+            exactly what the hardware model rewards.
+  advance — nothing runnable now; jump the virtual clock to the next
+            arrival.
 
 Two policies:
 
-  fcfs — prefill whenever admissible, else decode (vLLM's default
-         prompt-first ordering).
-  cost — price both candidates with the ARTEMIS cost model
-         (`serve.cost.ArtemisCostModel`, hwsim token_PP dataflow) and
-         take the cheaper per token. The simulated per-token price is
-         U-shaped in tokens-per-pass: falling while token-based
-         sharding amortizes the K/V ring broadcast (so short prefills
-         are admitted eagerly — here cost coincides with fcfs), then
-         rising once the O(N^2) attention terms dominate. The policies
-         diverge on LONG prompts: cost keeps the decode lanes running
-         rather than stalling them behind a multi-thousand-token
-         prefill whose per-token price exceeds the decode batch's
-         (pinned by tests/test_serve.py::test_cost_policy_defers_long_
-         prefill_while_decoding).
+  fcfs — prefill chunks whenever any exist, else decode (vLLM's
+         default prompt-first ordering, never mixing).
+  cost — price every candidate composition (decode-only, prefill-only,
+         mixed) with the ARTEMIS cost model over its TOTAL token count
+         and take the cheapest per token; exact latency ties (the
+         simulator's round-based latency plateaus make them real) break
+         toward lower simulated energy per token, then toward the
+         composition that makes more progress. The simulated per-token
+         price is U-shaped in tokens-per-pass, so small chunks ride the
+         falling edge and mixing usually wins — while an UNCHUNKED
+         giant prompt (prefill_chunk >= prompt) still prices worse per
+         token than a busy decode batch and is deferred, preserving
+         the original head-of-line guarantee when chunking is off.
 
 The scheduler is a pure function of its inputs — determinism under a
-fixed trace is a test invariant, and eviction (cache pressure during
-decode) lives in the engine, not here.
+fixed trace is a test invariant. It plans page usage against the free
+count but never touches the allocator; eviction under cache pressure
+lives in the engine. One exception to the page budget: the OLDEST
+mid-prefill request is always planned, because the engine funds it by
+preempting newer requests (mirroring decode-growth eviction order), so
+a tight pool can never deadlock a half-prefilled request. When even
+that fails — the missing pages are held by requests OLDER than the
+prefiller, which eviction never touches — the engine executes a decode
+round in the chunk batch's place so the holders keep progressing.
 """
 from __future__ import annotations
 
 import dataclasses
 
 from repro.serve.cost import ArtemisCostModel
-from repro.serve.paged_cache import pad_to_page
 from repro.serve.request import Request
 
 
 @dataclasses.dataclass(frozen=True)
 class Action:
-    kind: str                  # "prefill" | "decode" | "advance" | "idle"
-    rid: int | None = None
+    kind: str            # "prefill" | "decode" | "mixed" | "advance" | "idle"
+    # (rid, n_tokens) chunk plan, in execution order: continuing
+    # mid-prefill requests first (oldest admission first), then new
+    # FCFS admissions
+    prefill: tuple[tuple[int, int], ...] = ()
+    decode: bool = False
     next_time: float | None = None
 
 
@@ -57,39 +74,88 @@ class SchedulerConfig:
 
 class Scheduler:
     def __init__(self, sched_cfg: SchedulerConfig,
-                 cost: ArtemisCostModel | None, page_size: int):
+                 cost: ArtemisCostModel | None, page_size: int,
+                 prefill_chunk: int = 32):
         if sched_cfg.policy == "cost" and cost is None:
             raise ValueError("cost policy needs a cost model")
+        if prefill_chunk < 1:
+            raise ValueError("prefill_chunk must be >= 1")
         self.cfg = sched_cfg
         self.cost = cost
         self.page_size = page_size
+        self.prefill_chunk = prefill_chunk
 
-    def admissible(self, req: Request, free_lanes: int,
-                   free_pages: int) -> bool:
-        n_pages = pad_to_page(len(req.effective_prompt()),
-                              self.page_size) // self.page_size
-        return free_lanes > 0 and n_pages <= free_pages
+    def _plan_chunks(self, queued: list[Request],
+                     prefilling: list[Request], free_lanes: int,
+                     free_pages: int) -> tuple[tuple[int, int], ...]:
+        """Compose this step's prefill chunk batch within the page and
+        lane budgets. Continuing requests already own a lane; queued
+        admissions consume one free lane each."""
+        page, chunk = self.page_size, self.prefill_chunk
+        budget = free_pages
+        plan: list[tuple[int, int]] = []
+        for i, r in enumerate(prefilling):
+            pos = r.prefill_pos
+            remaining = len(r.effective_prompt()) - pos
+            held = -(-pos // page)           # pages already allocated
+            headroom = held * page - pos     # free slots in held pages
+            if i == 0:
+                n = min(chunk, remaining)    # engine preempts to fund it
+            else:
+                n = min(chunk, remaining, headroom + budget * page)
+            if n <= 0:
+                continue
+            budget -= max(0, -(-(pos + n) // page) - held)
+            budget = max(budget, 0)
+            plan.append((r.rid, n))
+        lanes_left = free_lanes
+        for r in queued:
+            if lanes_left <= 0:
+                break
+            n = min(chunk, len(r.effective_prompt()), budget * page)
+            if n <= 0:
+                break   # strict FCFS: never skip the head to admit later
+            budget -= -(-n // page)
+            lanes_left -= 1
+            plan.append((r.rid, n))
+        return tuple(plan)
 
     def decide(self, queued: list[Request], next_arrival: float | None,
-               n_decoding: int, free_lanes: int,
-               free_pages: int) -> Action:
-        """queued: arrived, FCFS-ordered QUEUED requests."""
-        head = queued[0] if queued else None
-        can_prefill = head is not None and self.admissible(
-            head, free_lanes, free_pages)
-        can_decode = n_decoding > 0
+               prefilling: list[Request], decoding: list[Request],
+               free_lanes: int, free_pages: int) -> Action:
+        """queued: arrived, FCFS-ordered QUEUED requests; prefilling:
+        mid-prefill requests in admission order; decoding: active
+        decode-lane requests."""
+        plan = self._plan_chunks(queued, prefilling, free_lanes,
+                                 free_pages)
+        n_chunk = sum(n for _, n in plan)
+        n_dec = len(decoding)
 
-        if can_prefill and can_decode and self.cfg.policy == "cost":
-            prefill_tokens = pad_to_page(len(head.effective_prompt()),
-                                         self.page_size)
-            if (self.cost.price_per_token(n_decoding)
-                    < self.cost.price_per_token(prefill_tokens)):
-                return Action("decode")
-            return Action("prefill", rid=head.rid)
-        if can_prefill:
-            return Action("prefill", rid=head.rid)
-        if can_decode:
-            return Action("decode")
-        if next_arrival is not None:
-            return Action("advance", next_time=next_arrival)
-        return Action("idle")
+        if not n_chunk and not n_dec:
+            if next_arrival is not None:
+                return Action("advance", next_time=next_arrival)
+            return Action("idle")
+
+        if self.cfg.policy == "fcfs":
+            if n_chunk:
+                return Action("prefill", prefill=plan)
+            return Action("decode", decode=True)
+
+        # cost: rank candidate compositions by simulated price per
+        # token, tie-broken by energy per token, then by progress
+        candidates = []
+        if n_chunk and n_dec:
+            candidates.append((0, "mixed", n_chunk + n_dec))
+        if n_chunk:
+            candidates.append((1, "prefill", n_chunk))
+        if n_dec:
+            candidates.append((2, "decode", n_dec))
+        kind = min(
+            candidates,
+            key=lambda c: (self.cost.price_per_token(c[2]),
+                           self.cost.energy_per_token(c[2]), c[0]))[1]
+        if kind == "mixed":
+            return Action("mixed", prefill=plan, decode=True)
+        if kind == "prefill":
+            return Action("prefill", prefill=plan)
+        return Action("decode", decode=True)

@@ -1,12 +1,13 @@
 """Tests for the continuous-batching serving engine (repro.serve).
 
 Covers the ISSUE acceptance points: paged-cache allocator invariants
-(no aliasing, full free on completion), paged-attention decode
-equivalence vs the dense-cache reference, scheduler determinism under a
-fixed seed/trace, and the headline guarantee — engine-mode serving with
-mixed prompt/gen lengths is token-identical to sequential
-single-request dense decoding under greedy sampling, including through
-cache-pressure preemptions.
+(no aliasing, full free on completion), paged-attention decode and
+chunked-prefill equivalence vs the dense-cache reference, scheduler
+determinism under a fixed seed/trace (including mixed prefill+decode
+actions), and the headline guarantee — engine-mode serving with mixed
+prompt/gen lengths and chunked+batched prefill is token-identical to
+sequential single-request dense decoding under greedy sampling,
+including through cache-pressure preemptions landing mid-prefill.
 """
 import dataclasses
 import functools
@@ -26,11 +27,15 @@ from repro.serve import (
     ServeEngine,
     TrafficConfig,
     init_paged_cache,
+    make_paged_chunked_prefill,
     make_paged_decode,
     make_paged_prefill,
     pad_to_page,
+    percentile,
     synth_trace,
 )
+from repro.serve.paged_cache import TRASH_PAGE
+from repro.serve.request import RequestState
 
 
 @pytest.fixture(scope="module")
@@ -49,8 +54,15 @@ def _dense_steps(cfg):
             jax.jit(stepslib.make_decode_step(cfg)))
 
 
+_REF_CACHE: dict = {}
+
+
 def _sequential_reference(cfg, params, prompt, n_new):
-    """Greedy decode of one request alone on the dense-cache path."""
+    """Greedy decode of one request alone on the dense-cache path.
+    Memoized: the chunk-size parametrizations replay the same trace."""
+    key = (cfg.name, prompt.tobytes(), n_new)
+    if key in _REF_CACHE:
+        return _REF_CACHE[key]
     prefill, decode = _dense_steps(cfg)
     cache = model.init_cache(cfg, 1, len(prompt) + n_new,
                              dtype=jnp.float32)
@@ -61,6 +73,7 @@ def _sequential_reference(cfg, params, prompt, n_new):
         logits, cache = decode(
             params, jnp.asarray([[out[-1]]], jnp.int32), cache)
         out.append(int(stepslib.greedy_sample(logits)[0]))
+    _REF_CACHE[key] = out
     return out
 
 
@@ -169,10 +182,48 @@ def test_paged_decode_logits_match_dense(dense_setup):
         seq_len += 1
 
 
+def test_chunked_prefill_logits_match_dense(dense_setup):
+    """Chunk-by-chunk prefill over the paged pool reproduces the dense
+    prefill's last-position logits — chunks straddle page boundaries
+    (13 tokens, chunks of 8, pages of 4)."""
+    cfg, params = dense_setup
+    prompt = np.arange(2, 15, dtype=np.int32)          # 13 tokens
+    page, chunk_c, b, pmax = 4, 8, 2, 6
+    cache = init_paged_cache(cfg, n_pages=16, page_size=page)
+    cp = make_paged_chunked_prefill(cfg)
+
+    pages, pos, last = [], 0, None
+    while pos < len(prompt):
+        n = min(chunk_c, len(prompt) - pos)
+        while len(pages) * page < pos + n:
+            pages += cache.allocator.alloc(1, owner=0)
+        tokens = np.zeros((b, chunk_c), np.int32)
+        tokens[0, :n] = prompt[pos:pos + n]
+        tables = np.full((b, pmax), TRASH_PAGE, np.int32)
+        tables[0, :len(pages)] = pages
+        start = np.array([pos, 0], np.int32)
+        lens = np.array([n, 0], np.int32)
+        active = np.array([True, False])
+        logits, kv = cp(params, jnp.asarray(tokens), cache.kv,
+                        jnp.asarray(tables), jnp.asarray(start),
+                        jnp.asarray(lens), jnp.asarray(active))
+        cache.kv = kv
+        last = np.asarray(logits[0, n - 1])
+        pos += n
+
+    dcache = model.init_cache(cfg, 1, len(prompt), dtype=jnp.float32)
+    logits_d, _ = stepslib.make_prefill_step(cfg)(
+        params, {"tokens": jnp.asarray(prompt[None])}, dcache)
+    np.testing.assert_allclose(last, np.asarray(logits_d[0]),
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_paged_model_rejects_recurrent_families():
     cfg = configs.get_config("rwkv6_3b", smoke=True)
     with pytest.raises(ValueError, match="dense/moe"):
         make_paged_decode(cfg)
+    with pytest.raises(ValueError, match="dense/moe"):
+        make_paged_chunked_prefill(cfg)
     with pytest.raises(ValueError, match="attention family"):
         init_paged_cache(cfg, 8, 4)
 
@@ -182,10 +233,14 @@ def test_paged_model_rejects_recurrent_families():
 # ---------------------------------------------------------------------------
 
 
-def test_engine_token_identical_to_sequential(dense_setup):
+# chunk sizes that divide (4 | 8, 12, 16, 20), straddle (7), and
+# exceed (32) the trace's prompt lengths (3..20)
+@pytest.mark.parametrize("prefill_chunk", [4, 7, 32])
+def test_engine_token_identical_to_sequential(dense_setup, prefill_chunk):
     cfg, params = dense_setup
     ecfg = EngineConfig(page_size=8, n_pages=64, max_batch=3,
-                        max_pages_per_seq=8)
+                        max_pages_per_seq=8,
+                        prefill_chunk=prefill_chunk)
     eng = ServeEngine(cfg, params=params, ecfg=ecfg)
     trace = synth_trace(TrafficConfig(
         n_requests=5, arrival_rate=1e4, prompt_len_min=3,
@@ -197,16 +252,40 @@ def test_engine_token_identical_to_sequential(dense_setup):
     for i, it in enumerate(trace):
         ref = _sequential_reference(cfg, params, it.prompt,
                                     it.max_new_tokens)
-        assert got[i].tolist() == ref, f"request {i} diverged"
+        assert got[i].tolist() == ref, \
+            f"request {i} diverged at chunk={prefill_chunk}"
     eng.cache.allocator.check_invariants()
     assert eng.cache.allocator.n_used == 0, "pages leaked after drain"
 
 
+def test_engine_batched_prefill_shares_a_step(dense_setup):
+    """Simultaneous arrivals prefill as ONE batched chunk step, not one
+    request per step."""
+    cfg, params = dense_setup
+    ecfg = EngineConfig(page_size=8, n_pages=64, max_batch=3,
+                        max_pages_per_seq=8, prefill_chunk=32)
+    eng = ServeEngine(cfg, params=params, ecfg=ecfg)
+    rng = np.random.default_rng(5)
+    for plen in (6, 11, 17):
+        eng.submit(rng.integers(2, cfg.vocab_size, plen).astype(np.int32),
+                   max_new_tokens=3)
+    ev = eng.step()
+    assert ev[0] == "prefill"
+    assert sorted(rid for rid, _ in ev[1]) == [0, 1, 2]
+    assert [n for _, n in sorted(ev[1])] == [6, 11, 17]
+    eng.drain()
+    for i, r in eng.results().items():
+        assert len(r) == 3
+
+
 def test_engine_preemption_under_cache_pressure(dense_setup):
     cfg, params = dense_setup
-    # 9 usable pages of 4 tokens, simultaneous arrivals: forced eviction
+    # 9 usable pages of 4 tokens, simultaneous arrivals, chunked
+    # prefill: forced eviction, including preemptions landing
+    # MID-PREFILL (a half-prefilled request loses its pages, requeues,
+    # and restarts its cursor from 0)
     ecfg = EngineConfig(page_size=4, n_pages=10, max_batch=3,
-                        max_pages_per_seq=8)
+                        max_pages_per_seq=8, prefill_chunk=6)
     eng = ServeEngine(cfg, params=params, ecfg=ecfg)
     trace = synth_trace(TrafficConfig(
         n_requests=6, arrival_rate=1e9, prompt_len_min=3,
@@ -216,6 +295,8 @@ def test_engine_preemption_under_cache_pressure(dense_setup):
     eng.drain()
     m = eng.metrics()
     assert m["n_preemptions"] > 0, "pressure scenario never preempted"
+    assert any(e[0] == "preempt" and e[2] == "prefill"
+               for e in eng.events), "no preemption landed mid-prefill"
     assert m["n_done"] == 6
     eng.cache.allocator.check_invariants()
     assert eng.cache.allocator.n_used == 0
@@ -227,13 +308,66 @@ def test_engine_preemption_under_cache_pressure(dense_setup):
         assert got[i].tolist() == ref, f"request {i} diverged"
 
 
+def test_engine_drain_survives_all_lanes_preempted(dense_setup):
+    """Regression: when every lane is preempted in one step (page pool
+    dry at a page boundary), step() must report ("preempt_all", ...)
+    progress rather than None — the freed pages make the re-queued
+    request immediately prefillable, so drain() must NOT raise."""
+    cfg, params = dense_setup
+    ecfg = EngineConfig(page_size=4, n_pages=4, max_batch=1,
+                        max_pages_per_seq=3, prefill_chunk=8)
+    eng = ServeEngine(cfg, params=params, ecfg=ecfg)
+    prompt = np.arange(2, 6, dtype=np.int32)
+    rid = eng.submit(prompt, max_new_tokens=6)
+    ev = eng.step()
+    assert ev[0] == "prefill"          # whole prompt in one chunk
+    # external pressure: hog every free page so the decode lane's
+    # page-boundary growth can only preempt the lane itself
+    hog = eng.cache.allocator.alloc(eng.cache.allocator.n_free, owner=-1)
+    ev = eng.step()
+    assert ev is not None and ev[0] == "preempt_all", ev
+    assert eng.requests[rid].state is RequestState.QUEUED
+    eng.cache.allocator.free(hog)
+    eng.drain()                         # must not raise "drain stalled"
+    assert eng.metrics()["n_done"] == 1
+    ref = _sequential_reference(cfg, params, prompt, 6)
+    assert eng.results()[rid].tolist() == ref
+
+
+@pytest.mark.parametrize("scheduler", ["cost", "fcfs"])
+def test_engine_unfundable_chunk_falls_back_to_decode(dense_setup,
+                                                      scheduler):
+    """Regression: a planned prefill chunk whose missing pages are held
+    by OLDER requests (which eviction never touches) must not stall
+    drain — the engine runs a decode round in its place so the holders
+    keep progressing and eventually free the pages."""
+    cfg, params = dense_setup
+    ecfg = EngineConfig(page_size=4, n_pages=8, max_batch=3,
+                        max_pages_per_seq=5, prefill_chunk=4,
+                        scheduler=scheduler)
+    eng = ServeEngine(cfg, params=params, ecfg=ecfg)
+    reqs = [(np.arange(2, 10, dtype=np.int32), 8),    # A: 8 prompt / 8 gen
+            (np.arange(2, 6, dtype=np.int32), 4),     # B: 4 / 4
+            (np.arange(2, 14, dtype=np.int32), 2)]    # C: 12 / 2
+    for prompt, glen in reqs:
+        eng.submit(prompt, max_new_tokens=glen)
+    eng.drain()                         # must not raise "drain stalled"
+    assert eng.metrics()["n_done"] == 3
+    eng.cache.allocator.check_invariants()
+    assert eng.cache.allocator.n_used == 0
+    for i, (prompt, glen) in enumerate(reqs):
+        ref = _sequential_reference(cfg, params, prompt, glen)
+        assert eng.results()[i].tolist() == ref, f"request {i} diverged"
+
+
 @pytest.mark.parametrize("scheduler", ["cost", "fcfs"])
 def test_engine_deterministic_under_fixed_trace(dense_setup, scheduler):
     cfg, params = dense_setup
     ecfg = EngineConfig(page_size=8, n_pages=32, max_batch=2,
-                        max_pages_per_seq=6, scheduler=scheduler)
+                        max_pages_per_seq=6, prefill_chunk=8,
+                        scheduler=scheduler)
     trace = synth_trace(TrafficConfig(
-        n_requests=4, arrival_rate=1e5, prompt_len_min=3,
+        n_requests=4, arrival_rate=1e9, prompt_len_min=3,
         prompt_len_max=16, gen_len_min=2, gen_len_max=8,
         vocab_size=cfg.vocab_size, seed=7))
     runs = []
@@ -245,6 +379,40 @@ def test_engine_deterministic_under_fixed_trace(dense_setup, scheduler):
     assert runs[0][0] == runs[1][0], "scheduler event order diverged"
     for rid in runs[0][1]:
         np.testing.assert_array_equal(runs[0][1][rid], runs[1][1][rid])
+    if scheduler == "cost":
+        # the saturating trace must exercise mixed composition, and the
+        # mixed event stream itself must be deterministic (asserted by
+        # the event equality above)
+        assert any(e[0] == "mixed" for e in runs[0][0]), \
+            "cost policy never composed a mixed step"
+
+
+def test_engine_chunked_cost_beats_unchunked_fcfs_ttft(dense_setup):
+    """The head-of-line-blocking acceptance criterion: on a long-prompt
+    trace, chunked prefill + mixed cost scheduling yields lower p99 and
+    mean TTFT (virtual clock, deterministic) than the seed engine's
+    behavior (whole-prompt prefill, prompt-first fcfs)."""
+    cfg, params = dense_setup
+    rng = np.random.default_rng(0)
+    long_p = rng.integers(2, cfg.vocab_size, 256).astype(np.int32)
+    shorts = [rng.integers(2, cfg.vocab_size,
+                           int(rng.integers(4, 10))).astype(np.int32)
+              for _ in range(4)]
+    ttft = {}
+    for label, sched, chunk in (("chunked_cost", "cost", 64),
+                                ("unchunked_fcfs", "fcfs", 256)):
+        eng = ServeEngine(cfg, params=params, ecfg=EngineConfig(
+            page_size=8, n_pages=64, max_batch=4, max_pages_per_seq=36,
+            prefill_chunk=chunk, scheduler=sched), seed=0)
+        eng.submit(long_p, max_new_tokens=4, arrival_time=0.0)
+        for i, s in enumerate(shorts):
+            eng.submit(s, max_new_tokens=6, arrival_time=1e-7 * (i + 1))
+        eng.drain()
+        m = eng.metrics()
+        assert m["n_done"] == 5
+        ttft[label] = (m["p99_ttft_s"], m["mean_ttft_s"])
+    assert ttft["chunked_cost"][0] < ttft["unchunked_fcfs"][0], ttft
+    assert ttft["chunked_cost"][1] < ttft["unchunked_fcfs"][1], ttft
 
 
 def test_engine_moe_family_smoke():
@@ -295,10 +463,23 @@ def test_cost_model_price_per_token_is_u_shaped(dense_setup):
     assert cm.price(16) > 0
 
 
-def test_cost_policy_defers_long_prefill_while_decoding(dense_setup):
-    """The cost policy's real decision boundary: a multi-thousand-token
-    prefill prices worse per token than a busy decode batch, so decode
-    runs first; fcfs stalls the lanes behind the prefill instead."""
+def _dummy_requests(n, plen=12, state=RequestState.DECODE):
+    from repro.serve import Request
+    reqs = []
+    for i in range(n):
+        r = Request(rid=100 + i, prompt=np.zeros(plen, np.int32),
+                    max_new_tokens=4)
+        r.state = state
+        reqs.append(r)
+    return reqs
+
+
+def test_cost_policy_defers_unchunked_long_prefill_while_decoding(
+        dense_setup):
+    """With chunking DISABLED (chunk >= prompt) the original decision
+    boundary survives: a multi-thousand-token prefill prices worse per
+    token than a busy decode batch, so the cost policy runs decode
+    first; fcfs stalls the lanes behind the prefill instead."""
     from repro.serve import Request, Scheduler, SchedulerConfig
     cfg, _ = dense_setup
     cm = ArtemisCostModel(cfg)
@@ -307,12 +488,93 @@ def test_cost_policy_defers_long_prefill_while_decoding(dense_setup):
                    max_new_tokens=4)
     small = Request(rid=1, prompt=np.zeros(12, np.int32),
                     max_new_tokens=4)
-    cost = Scheduler(SchedulerConfig(policy="cost"), cm, page)
-    fcfs = Scheduler(SchedulerConfig(policy="fcfs"), cm, page)
-    common = dict(next_arrival=None, n_decoding=8, free_lanes=2,
-                  free_pages=4096)
+    decoding = _dummy_requests(8)
+    cost = Scheduler(SchedulerConfig(policy="cost"), cm, page,
+                     prefill_chunk=8192)
+    fcfs = Scheduler(SchedulerConfig(policy="fcfs"), cm, page,
+                     prefill_chunk=8192)
+    common = dict(next_arrival=None, prefilling=[], decoding=decoding,
+                  free_lanes=2, free_pages=4096)
     assert cost.decide([huge], **common).kind == "decode"
     assert fcfs.decide([huge], **common).kind == "prefill"
-    # short prompts: both policies admit eagerly (prefill-first)
-    assert cost.decide([small], **common).kind == "prefill"
+    # short prompts ride the falling edge of the per-token price curve:
+    # cost composes them WITH the decode batch; fcfs stays prompt-first
+    a = cost.decide([small], **common)
+    assert a.kind == "mixed" and a.prefill == ((1, 12),) and a.decode
     assert fcfs.decide([small], **common).kind == "prefill"
+
+
+def test_cost_policy_chunks_long_prefill_into_mixed_steps(dense_setup):
+    """With chunking ON, the same long prompt no longer blocks: the
+    scheduler plans one chunk and composes it with the decode batch."""
+    from repro.serve import Request, Scheduler, SchedulerConfig
+    cfg, _ = dense_setup
+    cm = ArtemisCostModel(cfg)
+    huge = Request(rid=0, prompt=np.zeros(8192, np.int32),
+                   max_new_tokens=4)
+    sched = Scheduler(SchedulerConfig(policy="cost"), cm, 8,
+                      prefill_chunk=64)
+    a = sched.decide([huge], next_arrival=None, prefilling=[],
+                     decoding=_dummy_requests(8), free_lanes=2,
+                     free_pages=4096)
+    assert a.kind == "mixed" and a.prefill == ((0, 64),) and a.decode
+
+
+def test_scheduler_plans_batched_and_continuing_chunks(dense_setup):
+    """Chunk planning: mid-prefill requests continue first (oldest
+    admission uncapped by the page budget), then FCFS admissions fill
+    free lanes while the budget lasts."""
+    from repro.serve import Request, Scheduler, SchedulerConfig
+    cfg, _ = dense_setup
+    cm = ArtemisCostModel(cfg)
+    sched = Scheduler(SchedulerConfig(policy="fcfs"), cm, page_size=4,
+                      prefill_chunk=8)
+    mid = Request(rid=0, prompt=np.zeros(20, np.int32), max_new_tokens=2)
+    mid.state = RequestState.PREFILL
+    mid.prefill_pos = 8
+    q1 = Request(rid=1, prompt=np.zeros(6, np.int32), max_new_tokens=2)
+    q2 = Request(rid=2, prompt=np.zeros(9, np.int32), max_new_tokens=2)
+    a = sched.decide([q1, q2], next_arrival=None, prefilling=[mid],
+                     decoding=[], free_lanes=2, free_pages=100)
+    assert a.kind == "prefill"
+    assert a.prefill == ((0, 8), (1, 6), (2, 8))
+    # tight page budget: 3 free pages — the continuing request is
+    # planned anyway and charged 2 pages, the first admission is
+    # clipped to the 1 remaining page (4 tokens), the second starved
+    a = sched.decide([q1, q2], next_arrival=None, prefilling=[mid],
+                     decoding=[], free_lanes=2, free_pages=3)
+    assert a.prefill == ((0, 8), (1, 4))
+    # budget exhausted by the forced continuation -> no admissions
+    a = sched.decide([q1, q2], next_arrival=None, prefilling=[mid],
+                     decoding=[], free_lanes=2, free_pages=1)
+    assert a.prefill == ((0, 8),)
+    # no lanes -> no admissions, continuation only
+    a = sched.decide([q1, q2], next_arrival=None, prefilling=[mid],
+                     decoding=[], free_lanes=0, free_pages=100)
+    assert a.prefill == ((0, 8),)
+
+
+def test_percentile_nearest_rank():
+    """Regression for the metrics off-by-one: int(p/100*n) indexed one
+    element high at exact-multiple ranks (p50 of two latencies returned
+    the LARGER one); nearest-rank is ceil(p/100*n)-1."""
+    assert percentile([1.0, 2.0], 50) == 1.0
+    assert percentile([1.0, 2.0], 100) == 2.0
+    vals = [float(i) for i in range(1, 101)]
+    assert percentile(vals, 99) == 99.0
+    assert percentile(vals, 50) == 50.0
+    assert percentile(vals, 1) == 1.0
+    assert percentile([5.0], 99) == 5.0
+    assert percentile([], 50) == 0.0
+    assert percentile([3.0, 4.0, 5.0], 0) == 3.0   # clamps to first
+
+
+def test_engine_config_validation():
+    for bad in (dict(page_size=0), dict(n_pages=1), dict(max_batch=0),
+                dict(max_pages_per_seq=0), dict(prefill_chunk=0),
+                dict(scheduler="lifo")):
+        with pytest.raises(ValueError):
+            EngineConfig(**bad)
+    with pytest.raises(TypeError):
+        EngineConfig(cache_dtype="not-a-dtype")
+    EngineConfig()   # defaults stay valid
