@@ -5,7 +5,12 @@ trace and emits one BENCH JSON line (plus a sidecar file) with
 wall-clock tok/s, virtual p50/p99 request latency and TTFT, cache
 utilization and preemption count, for both scheduler policies — plus a
 long-prompt head-of-line-blocking trace comparing the chunked+mixed
-cost scheduler against the unchunked prompt-first baseline.
+cost scheduler against the unchunked prompt-first baseline, and a
+shared-prefix trace (N prefix groups x per-request suffixes) comparing
+copy-on-write prefix sharing against the same engine with sharing
+disabled: prefix hit rate, physical pages allocated, COW forks, and
+physical vs logical cache utilization land in the JSON so CI captures
+the hit-rate trajectory per PR.
 
 Timing: an UNTIMED warmup drain (a throwaway engine over the same
 compiled steps — they are shared per (cfg, policy), see
@@ -121,6 +126,49 @@ def _bench_long_prompt(cfg, params, seed: int) -> dict:
     return row
 
 
+def _bench_shared_prefix(cfg, params, seed: int) -> dict:
+    """Shared-prefix trace: 4 prefix groups, each prefix 20 tokens
+    (2.5 pages of 8), per-request random suffixes — the few-shot /
+    system-prompt traffic shape. COW prefix sharing should report a
+    positive hit rate and allocate strictly fewer physical pages than
+    the no-sharing baseline, at bit-identical outputs (the equality is
+    pinned in tests; here both sides are reported for the trajectory)."""
+    tcfg = TrafficConfig(
+        n_requests=16, arrival_rate=2e6, prompt_len_min=2,
+        prompt_len_max=10, gen_len_min=2, gen_len_max=8,
+        vocab_size=cfg.vocab_size, seed=seed,
+        n_prefix_groups=4, prefix_len=20)
+    trace = synth_trace(tcfg)
+    row = {"trace": "shared_prefix",
+           "n_prefix_groups": tcfg.n_prefix_groups,
+           "prefix_len": tcfg.prefix_len,
+           "n_requests": tcfg.n_requests}
+    for label, sharing in (("sharing", True), ("no_sharing", False)):
+        eng = ServeEngine(cfg, params=params, ecfg=EngineConfig(
+            **ECFG, prefill_chunk=16, prefix_sharing=sharing), seed=seed)
+        eng.submit_trace(trace)
+        t0 = time.time()
+        eng.drain()
+        wall = time.time() - t0
+        m = eng.metrics()
+        row[label] = {
+            "wall_s": wall,
+            "tok_per_s": m["n_generated_tokens"] / max(wall, 1e-9),
+            "prefix_hit_rate": m["prefix_hit_rate"],
+            "n_prefix_hits": m["n_prefix_hits"],
+            "n_cow_forks": m["n_cow_forks"],
+            "physical_pages_allocated": m["physical_pages_allocated"],
+            "cache_utilization": m["cache_utilization"],
+            "logical_cache_utilization": m["logical_cache_utilization"],
+            "p99_ttft_s": m["p99_ttft_s"],
+            "n_preemptions": m["n_preemptions"],
+        }
+    row["physical_pages_saved"] = (
+        row["no_sharing"]["physical_pages_allocated"]
+        - row["sharing"]["physical_pages_allocated"])
+    return row
+
+
 def run(smoke: bool = True, arch: str = "qwen3_8b",
         n_requests: int = 12, seed: int = 0) -> list[dict]:
     cfg = configs.get_config(arch, smoke=smoke)
@@ -142,9 +190,16 @@ def run(smoke: bool = True, arch: str = "qwen3_8b",
           f"{lp['chunked_cost']['p99_ttft_s']*1e3:.3f} ms vs "
           f"unchunked+fcfs {lp['unchunked_fcfs']['p99_ttft_s']*1e3:.3f} ms "
           f"({lp['p99_ttft_speedup']:.2f}x)")
+    sp = _bench_shared_prefix(cfg, params, seed)
+    print(f"  shared-prefix: hit rate "
+          f"{sp['sharing']['prefix_hit_rate']:.2f} | physical pages "
+          f"{sp['sharing']['physical_pages_allocated']} vs "
+          f"{sp['no_sharing']['physical_pages_allocated']} no-sharing "
+          f"({sp['physical_pages_saved']} saved) | "
+          f"{sp['sharing']['n_cow_forks']} COW forks")
     bench = {"bench": "serve_throughput", "arch": cfg.name,
              "smoke": smoke, "seed": seed, "compile_s": compile_s,
-             "rows": rows, "long_prompt": lp}
+             "rows": rows, "long_prompt": lp, "shared_prefix": sp}
     with open(OUT_PATH, "w") as f:
         json.dump(bench, f, indent=2)
     print("BENCH " + json.dumps(bench))

@@ -34,12 +34,25 @@ def main():
         prefill_chunk=args.prefill_chunk, scheduler=args.scheduler))
 
     rng = np.random.default_rng(0)
-    print(f"submitting 5 requests with mixed prompt/gen lengths "
+    print(f"submitting 7 requests with mixed prompt/gen lengths "
           f"({args.scheduler} scheduler)")
+    prefix = rng.integers(2, cfg.vocab_size, 17).astype(np.int32)
     for plen, glen in ((5, 8), (17, 4), (9, 12), (3, 6), (24, 5)):
-        prompt = rng.integers(2, cfg.vocab_size, plen).astype(np.int32)
+        if plen == 17:
+            prompt = prefix                # resident prefix for 5 and 6
+        else:
+            prompt = rng.integers(2, cfg.vocab_size, plen).astype(np.int32)
         rid = eng.submit(prompt, max_new_tokens=glen)
         print(f"  request {rid}: prompt {plen} tokens, gen {glen}")
+    # two late arrivals extend request 1's prompt: admission matches
+    # its resident full pages and shares them copy-on-write (watch for
+    # "share" events and a prefix hit rate > 0 in the metrics)
+    for _ in range(2):
+        prompt = np.concatenate(
+            [prefix, rng.integers(2, cfg.vocab_size, 4).astype(np.int32)])
+        rid = eng.submit(prompt, max_new_tokens=4, arrival_time=1e-6)
+        print(f"  request {rid}: prompt {len(prompt)} tokens (shares "
+              f"request 1's 17-token prompt as a prefix), gen 4")
 
     print("\nfirst 10 engine steps:")
     for _ in range(10):
@@ -60,14 +73,24 @@ def main():
             print(f"  {kind}")
     eng.drain()
 
+    shares = [e for e in eng.events if e[0] == "share"]
+    if shares:
+        print("\nprefix sharing (from the event log):")
+        for _, rid, matched, _t in shares:
+            print(f"  request {rid} admitted over {matched} resident "
+                  f"prefix tokens (pages shared copy-on-write)")
+
     print("\nresults:")
     for rid, toks in eng.results().items():
         print(f"  request {rid}: {toks[:10].tolist()}"
               f"{' ...' if len(toks) > 10 else ''}")
     m = eng.metrics()
     print(f"\n{m['n_generated_tokens']} tokens | cache utilization "
-          f"{m['cache_utilization']:.2f} | {m['n_preemptions']} "
-          f"preemptions | {len(eng.events)} engine steps")
+          f"{m['cache_utilization']:.2f} (logical "
+          f"{m['logical_cache_utilization']:.2f}) | prefix hit rate "
+          f"{m['prefix_hit_rate']:.2f} | {m['n_cow_forks']} COW forks | "
+          f"{m['n_preemptions']} preemptions | {len(eng.events)} "
+          f"engine steps")
 
 
 if __name__ == "__main__":

@@ -88,24 +88,28 @@ def serve_engine(arch: str = "qwen3_8b", smoke: bool = True,
                  policy_mode: str = "exact", seed: int = 0,
                  page_size: int = 8, n_pages: int = 256,
                  max_batch: int = 8, scheduler: str = "cost",
-                 prefill_chunk: int = 32, params=None) -> dict:
+                 prefill_chunk: int = 32, prefix_sharing: bool = True,
+                 prefix_groups: int = 0, prefix_len: int = 0,
+                 params=None) -> dict:
     """Continuous-batching serving over a synthetic Poisson trace."""
     from repro.serve import (EngineConfig, ServeEngine, TrafficConfig,
                              synth_trace)
     cfg = configs.get_config(arch, smoke=smoke)
     policy = ArithmeticPolicy(mode=policy_mode)
-    max_len = prompt_len + gen_len
+    max_len = prefix_len + prompt_len + gen_len
     ecfg = EngineConfig(
         page_size=page_size, n_pages=n_pages, max_batch=max_batch,
         max_pages_per_seq=max(1, -(-max_len // page_size)) + 1,
-        prefill_chunk=prefill_chunk, scheduler=scheduler)
+        prefill_chunk=prefill_chunk, scheduler=scheduler,
+        prefix_sharing=prefix_sharing)
     eng = ServeEngine(cfg, params=params, policy=policy, ecfg=ecfg,
                       seed=seed)
     trace = synth_trace(TrafficConfig(
         n_requests=n_requests, arrival_rate=arrival_rate,
         prompt_len_min=max(1, prompt_len // 2), prompt_len_max=prompt_len,
         gen_len_min=max(1, gen_len // 2), gen_len_max=gen_len,
-        vocab_size=cfg.vocab_size, seed=seed))
+        vocab_size=cfg.vocab_size, seed=seed,
+        n_prefix_groups=prefix_groups, prefix_len=prefix_len))
     eng.submit_trace(trace)
     t0 = time.time()
     eng.drain()
@@ -138,6 +142,13 @@ def main() -> None:
                     help="engine: prompt tokens per prefill chunk")
     ap.add_argument("--scheduler", default="cost",
                     choices=["cost", "fcfs"])
+    ap.add_argument("--no-prefix-sharing", action="store_true",
+                    help="engine: disable COW prefix/page sharing")
+    ap.add_argument("--prefix-groups", type=int, default=0,
+                    help="engine: shared-prefix trace groups (0 = "
+                         "independent prompts)")
+    ap.add_argument("--prefix-len", type=int, default=0,
+                    help="engine: tokens shared within a prefix group")
     ap.add_argument("--seed", type=int, default=0,
                     help="params + synthetic trace seed")
     args = ap.parse_args()
@@ -157,7 +168,9 @@ def main() -> None:
         gen_len=args.gen_len, policy_mode=args.policy, seed=args.seed,
         page_size=args.page_size, n_pages=args.n_pages,
         max_batch=args.batch, scheduler=args.scheduler,
-        prefill_chunk=args.prefill_chunk)
+        prefill_chunk=args.prefill_chunk,
+        prefix_sharing=not args.no_prefix_sharing,
+        prefix_groups=args.prefix_groups, prefix_len=args.prefix_len)
     m = out["metrics"]
     print(f"engine: {m['n_done']} requests, "
           f"{m['n_generated_tokens']} tokens | "
@@ -165,7 +178,11 @@ def main() -> None:
           f"p50 {m['p50_latency_s']*1e3:.3f}ms "
           f"p99 {m['p99_latency_s']*1e3:.3f}ms "
           f"p99-ttft {m['p99_ttft_s']*1e3:.3f}ms (virtual) | "
-          f"cache util {m['cache_utilization']:.2f} | "
+          f"cache util {m['cache_utilization']:.2f} "
+          f"(logical {m['logical_cache_utilization']:.2f}) | "
+          f"prefix hits {m['n_prefix_hits']} "
+          f"(rate {m['prefix_hit_rate']:.2f}) | "
+          f"{m['n_cow_forks']} COW forks | "
           f"{m['n_preemptions']} preemptions")
 
 

@@ -1,11 +1,12 @@
 """repro.serve — continuous-batching serving engine.
 
 A layer between the kernels and the launch CLI: request lifecycle
-(`request`), block-based paged KV cache (`paged_cache`), jit-stable
-chunked+batched prefill and decode forwards (`paged_model`),
-ARTEMIS-cost-aware mixed-step scheduling (`scheduler` + `cost`, priced
-by `repro.hwsim` over the composed token count), synthetic Poisson
-traffic (`traffic`), and the engine driver (`engine`).
+(`request`), block-based paged KV cache with refcounted copy-on-write
+prefix sharing (`paged_cache`), jit-stable chunked+batched prefill and
+decode forwards (`paged_model`), ARTEMIS-cost-aware mixed-step
+scheduling (`scheduler` + `cost`, priced by `repro.hwsim` over the
+composed token count), synthetic Poisson traffic with a shared-prefix
+mode (`traffic`), and the engine driver (`engine`).
 
 Entry point: `python -m repro.launch.serve --mode engine`.
 """
@@ -14,6 +15,8 @@ from repro.serve.engine import EngineConfig, ServeEngine, percentile
 from repro.serve.paged_cache import (
     PageAllocator,
     PagedKVCache,
+    PrefixIndex,
+    cow_copy_page,
     init_paged_cache,
     pad_to_page,
 )
@@ -28,7 +31,8 @@ from repro.serve.traffic import TraceItem, TrafficConfig, synth_trace
 
 __all__ = [
     "ArtemisCostModel", "EngineConfig", "ServeEngine", "percentile",
-    "PageAllocator", "PagedKVCache", "init_paged_cache", "pad_to_page",
+    "PageAllocator", "PagedKVCache", "PrefixIndex", "cow_copy_page",
+    "init_paged_cache", "pad_to_page",
     "make_paged_chunked_prefill", "make_paged_decode", "make_paged_prefill",
     "Request", "RequestState",
     "Action", "Scheduler", "SchedulerConfig",

@@ -42,11 +42,16 @@ class ArtemisCostModel:
                                       + cfg.n_shared_experts)
         return Workload(
             name=f"serve-{cfg.name}", params=float(cfg.param_count()),
-            n_layers=cfg.n_layers, n_tokens=max(int(n_tokens), 1),
+            n_layers=cfg.n_layers, n_tokens=int(n_tokens),
             n_heads=cfg.n_heads, d_model=cfg.d_model, d_ff=max(d_ff, 1))
 
     def _simulate(self, n_tokens: int):
-        n = max(int(n_tokens), 1)
+        n = int(n_tokens)
+        if n < 1:
+            # an empty composition has no price; silently clamping to a
+            # 1-token pass used to mask scheduler bugs that priced
+            # nothing-to-run candidates
+            raise ValueError(f"n_tokens must be >= 1, got {n_tokens}")
         if n not in self._memo:
             self._memo[n] = simulate_model(
                 self._workload(n), DataflowConfig(scheme=self.scheme))
@@ -64,7 +69,7 @@ class ArtemisCostModel:
         return self._simulate(n_tokens).energy_pj
 
     def price_per_token(self, n_tokens: int) -> float:
-        return self.price(n_tokens) / max(int(n_tokens), 1)
+        return self.price(n_tokens) / int(n_tokens)
 
     def energy_per_token(self, n_tokens: int) -> float:
-        return self.energy(n_tokens) / max(int(n_tokens), 1)
+        return self.energy(n_tokens) / int(n_tokens)

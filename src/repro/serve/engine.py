@@ -26,6 +26,22 @@ One `step()` executes one scheduler action on the device:
             so execution order inside the step is irrelevant to the
             results.
 
+PREFIX SHARING (copy-on-write): at admission the engine matches the
+request's prompt against the `PrefixIndex` of already-resident pages.
+Matched pages are SHARED (allocator refcount + 1) instead of
+re-allocated and re-prefilled: `prefill_pos` starts past the shared
+prefix (capped at prompt_len - 1 — the last prompt token always reruns
+so its logits can seed decode, with its K/V write skipped via the
+chunk's write_from mask) and `seq_len` covers the resident tokens.
+Full pages completed by prefill are registered in the index; pages
+drop out when their last owner releases them. Divergence — a write
+landing in a page whose refcount is > 1, which in practice is a
+sharer's first decode token into a partially-covered shared last
+page — triggers a COW fork: allocate a private page, copy the K/V
+slice on device, swap the page-table entry, drop the shared ref.
+Preempting a sharer only releases its references (pages other
+requests still own stay resident and indexed).
+
 The engine keeps a VIRTUAL clock priced by the ARTEMIS cost model
 (`hwsim.simulate_model`, token_PP dataflow): every executed step
 advances time by the simulated latency of its composed batch, so
@@ -34,7 +50,8 @@ decisions are deterministic functions of (trace, seed) — wall-clock
 throughput is measured separately by the benchmark. Greedy sampling
 end-to-end: the engine's outputs are token-identical to decoding each
 request alone on the dense-cache path, including through preemption
-landing mid-prefill (tests/test_serve.py pins this).
+landing mid-prefill and through prefix sharing, COW forks, and
+preemption of sharers (tests/test_serve.py pins this).
 """
 from __future__ import annotations
 
@@ -53,6 +70,8 @@ from repro.models.config import ModelConfig
 from repro.serve.cost import ArtemisCostModel
 from repro.serve.paged_cache import (
     TRASH_PAGE,
+    PrefixIndex,
+    cow_copy_page,
     init_paged_cache,
 )
 from repro.serve.paged_model import (
@@ -100,6 +119,7 @@ class EngineConfig:
     cache_dtype: str = "float32"
     scheduler: str = "cost"        # "cost" | "fcfs"
     scheme: str = "token_PP"       # hwsim dataflow used for pricing
+    prefix_sharing: bool = True    # COW page sharing for common prefixes
 
     def __post_init__(self):
         if self.page_size < 1:
@@ -136,9 +156,11 @@ class ServeEngine:
             cfg, ecfg.n_pages, ecfg.page_size,
             dtype=jnp.dtype(ecfg.cache_dtype))
         self.cost = ArtemisCostModel(cfg, scheme=ecfg.scheme)
+        self.prefix = PrefixIndex(ecfg.page_size)
         self.scheduler = Scheduler(
             SchedulerConfig(policy=ecfg.scheduler),
-            self.cost, ecfg.page_size, ecfg.prefill_chunk)
+            self.cost, ecfg.page_size, ecfg.prefill_chunk,
+            prefix_probe=self._probe_prefix)
         self._prefill, self._decode = _compiled_steps(cfg, policy)
         self.requests: dict[int, Request] = {}
         self.lanes: list[Request | None] = [None] * ecfg.max_batch
@@ -148,7 +170,17 @@ class ServeEngine:
         self._admit_seq = 0
         self._admit_order: dict[int, int] = {}   # rid -> admission counter
         self._util_sum = 0.0
+        self._logical_util_sum = 0.0
         self._util_samples = 0
+        self._n_prefix_hits = 0      # admissions that shared >= 1 token
+        self._shared_tokens = 0      # prompt tokens covered by sharing
+        self._prompt_tokens = 0      # prompt tokens over all admissions
+        self._n_cow = 0              # copy-on-write page forks
+        # rid -> (index generation, matched, pages): the scheduler
+        # probes every visible queued request each decide(), so match
+        # results are memoized until the index mutates (a queued
+        # request's effective prompt is fixed; invalidated on preempt)
+        self._match_memo: dict[int, tuple[int, int, list[int]]] = {}
 
     # -- submission ---------------------------------------------------------
 
@@ -227,6 +259,7 @@ class ServeEngine:
             if ev[0] not in ("advance", "preempt_all"):
                 # utilization of EXECUTED batches
                 self._util_sum += self.cache.utilization()
+                self._logical_util_sum += self.cache.logical_utilization()
                 self._util_samples += 1
         return ev
 
@@ -253,22 +286,54 @@ class ServeEngine:
             return None
         return max(victims, key=lambda r: self._admit_order[r.rid])
 
+    def _release(self, pages: list[int], rid: int) -> None:
+        """Drop `rid`'s ownership of `pages`; pages whose last owner
+        left go back to the pool AND out of the prefix index."""
+        released = self.cache.allocator.free(pages, owner=rid)
+        self.prefix.forget(released)
+
+    def _match_prefix(self, req: Request) -> tuple[int, list[int]]:
+        """Memoized PrefixIndex.match for a queued request (one match
+        serves both the scheduler's budget probe and admission)."""
+        gen = self.prefix.generation
+        hit = self._match_memo.get(req.rid)
+        if hit is None or hit[0] != gen:
+            matched, pages = self.prefix.match(req.effective_prompt())
+            hit = (gen, matched, pages)
+            self._match_memo[req.rid] = hit
+        return hit[1], hit[2]
+
+    def _probe_prefix(self, req: Request) -> int:
+        """Scheduler hook: leading effective-prompt tokens already
+        resident in shareable pages (read-only, no side effects)."""
+        if not self.ecfg.prefix_sharing:
+            return 0
+        return self._match_prefix(req)[0]
+
     def _preempt(self, req: Request) -> None:
         phase = "prefill" if req.state is RequestState.PREFILL else "decode"
-        self.cache.allocator.free(req.pages)
+        # a sharer's pages may be co-owned: only this request's
+        # references are dropped, co-owned pages stay resident
+        self._release(req.pages, req.rid)
         req.pages = []
         req.seq_len = 0
         req.prefill_pos = 0
+        req.shared_len = 0
         self.lanes[req.lane] = None
         req.lane = -1
         req.state = RequestState.QUEUED
         req.n_preemptions += 1
+        # its effective prompt grew by the generated tokens, so any
+        # memoized prefix match is stale even at the same generation
+        self._match_memo.pop(req.rid, None)
         self.events.append(("preempt", req.rid, phase, self.now))
 
     def _grow_decode_lanes(self) -> None:
-        """Give every decode lane at a page boundary its next page,
-        oldest admissions first so eviction pressure lands on the
-        newest request."""
+        """Prepare every decode lane's write target, oldest admissions
+        first so eviction pressure lands on the newest request: lanes
+        at a page boundary get a fresh page; lanes about to write into
+        a SHARED page (another request references it) COW-fork it to a
+        private copy first."""
         page = self.ecfg.page_size
         for req in sorted(self._decoding(),
                           key=lambda r: self._admit_order[r.rid]):
@@ -276,17 +341,68 @@ class ServeEngine:
                 continue   # evicted earlier in this very loop
             if req.seq_len >= len(req.pages) * page:
                 self._grow(req)
+            else:
+                self._divert_write(req, req.seq_len // page)
+
+    def _make_room(self, req: Request) -> bool:
+        """Free at least one page by preempting latest-admitted laned
+        requests (evicting a sharer may release nothing physical, so
+        keep going). False if req itself was evicted."""
+        alloc = self.cache.allocator
+        while not alloc.can_alloc(1):
+            victim = self._newest_victim(exclude=None)
+            if victim is None:
+                # unreachable from engine flow (req itself is laned),
+                # but external allocator users can drain the pool
+                raise MemoryError(
+                    "page pool dry with no evictable lane")
+            self._preempt(victim)
+            if victim is req:
+                return False
+        return True
 
     def _grow(self, req: Request) -> bool:
         """Give `req` one more page, preempting latest-admitted laned
         requests under cache pressure. False if req itself was evicted."""
+        if not self._make_room(req):
+            return False
+        req.pages.extend(self.cache.allocator.alloc(1, req.rid))
+        return True
+
+    def _divert_write(self, req: Request, j: int) -> bool:
+        """req is about to write into its page j, whose content other
+        places may still rely on. Two cases: co-owned (refcount > 1) —
+        COW-fork to a private device copy so the write cannot clobber
+        co-owners' K/V; sole-owned but still in the prefix index (the
+        co-owners left, e.g. the original writer finished) — the write
+        diverges the page from its indexed content, so the index entry
+        is dropped before a future admission can match stale K/V.
+        False if req itself was evicted while making room for a fork."""
+        if self.cache.allocator.refcount(req.pages[j]) <= 1:
+            self.prefix.forget([req.pages[j]])
+            return True
+        return self._cow_fork(req, j)
+
+    def _cow_fork(self, req: Request, j: int) -> bool:
+        """Copy-on-write: replace `req`'s shared page j with a private
+        device copy so its next write cannot clobber co-owners' K/V.
+        False if req itself was evicted while making room."""
+        if not self._make_room(req):
+            return False
         alloc = self.cache.allocator
-        while not alloc.can_alloc(1):
-            victim = self._newest_victim(exclude=None)
-            self._preempt(victim)
-            if victim is req:
-                return False
-        req.pages.extend(alloc.alloc(1, req.rid))
+        old = req.pages[j]
+        if alloc.refcount(old) <= 1:
+            # co-owners were evicted while making room; the page may
+            # still be indexed, and the write is about to diverge it
+            self.prefix.forget([old])
+            return True
+        [new] = alloc.alloc(1, req.rid)
+        self.cache.kv = cow_copy_page(
+            self.cache.kv, jnp.int32(old), jnp.int32(new))
+        req.pages[j] = new
+        self._release([old], req.rid)
+        self._n_cow += 1
+        self.events.append(("cow", req.rid, old, new, self.now))
         return True
 
     def _alloc_chunk(self, req: Request, want: int) -> int:
@@ -308,7 +424,54 @@ class ServeEngine:
                     < self._admit_order[req.rid]):
                 break
             self._preempt(victim)
-        return min(want, len(req.pages) * page - req.prefill_pos)
+        n = min(want, len(req.pages) * page - req.prefill_pos)
+        if n <= 0:
+            return 0
+        # copy-on-write: this chunk WRITES positions [ws, we) (rerun
+        # positions below shared_len only read); any of those pages
+        # still co-owned must be forked before the scatter runs
+        ws = max(req.prefill_pos, req.shared_len)
+        we = req.prefill_pos + n
+        if ws < we:
+            for j in range(ws // page, -(-we // page)):
+                if not self._divert_write(req, j):
+                    return 0       # req itself evicted making room
+        return n
+
+    def _admit_shared(self, req: Request) -> None:
+        """Admission-time prefix matching: share every resident page
+        covering a leading run of the request's effective prompt, start
+        the prefill cursor past the shared tokens (capped so the last
+        prompt token always reruns for its logits), and count the hit."""
+        ep = req.effective_prompt()
+        self._prompt_tokens += len(ep)
+        if not self.ecfg.prefix_sharing:
+            return
+        matched, spages = self._match_prefix(req)
+        self._match_memo.pop(req.rid, None)   # ep changes once laned
+        if matched <= 0:
+            return
+        self.cache.allocator.share(spages, req.rid)
+        req.pages = list(spages)
+        req.shared_len = matched
+        req.seq_len = matched
+        req.prefill_pos = min(matched, len(ep) - 1)
+        self._n_prefix_hits += 1
+        self._shared_tokens += matched
+        self.events.append(("share", req.rid, matched, self.now))
+
+    def _register_full_pages(self, req: Request, from_seq: int) -> None:
+        """Index every page that BECAME full while req's resident
+        coverage grew from from_seq to req.seq_len (prefill only —
+        decode-filled pages hold generated tokens no other prompt is
+        likely to revisit, and keeping them out keeps forgetting
+        simple)."""
+        if not self.ecfg.prefix_sharing:
+            return
+        page = self.ecfg.page_size
+        ep = req.effective_prompt()
+        for j in range(from_seq // page, req.seq_len // page):
+            self.prefix.register(ep[:(j + 1) * page], req.pages[j])
 
     def _do_mixed(self, action: Action) -> tuple | None:
         """Execute a prefill / decode / mixed step: allocate all pages
@@ -340,6 +503,7 @@ class ServeEngine:
                 req.state = RequestState.PREFILL
                 self._admit_order[req.rid] = self._admit_seq
                 self._admit_seq += 1
+                self._admit_shared(req)
             elif req.state is not RequestState.PREFILL:
                 continue       # preempted between plan and execution
             remaining = len(req.effective_prompt()) - req.prefill_pos
@@ -347,6 +511,10 @@ class ServeEngine:
             if n <= 0:
                 continue
             chunks.append((req, n))
+        # a COW fork funding a later chunk may have evicted an earlier
+        # member of this very batch — never run a chunk on freed pages
+        chunks = [(r, n) for r, n in chunks
+                  if r.state is RequestState.PREFILL]
 
         # 3. decode forward over the lanes that survived allocation.
         #    If the planned chunks could not be funded at all — the
@@ -391,6 +559,7 @@ class ServeEngine:
             start = np.zeros((b,), np.int32)
             lens = np.zeros((b,), np.int32)
             active = np.zeros((b,), bool)
+            wfrom = np.zeros((b,), np.int32)
             for i, (req, n) in enumerate(chunks):
                 ep = req.effective_prompt()
                 tokens[i, :n] = ep[req.prefill_pos:req.prefill_pos + n]
@@ -398,10 +567,14 @@ class ServeEngine:
                 start[i] = req.prefill_pos
                 lens[i] = n
                 active[i] = True
+                # positions below shared_len are resident in (possibly
+                # shared) pages: rerun the query, skip the write
+                wfrom[i] = req.shared_len
             chunk_logits, kv = self._prefill(
                 self.params, jnp.asarray(tokens), self.cache.kv,
                 jnp.asarray(tables), jnp.asarray(start),
-                jnp.asarray(lens), jnp.asarray(active))
+                jnp.asarray(lens), jnp.asarray(active),
+                jnp.asarray(wfrom))
             self.cache.kv = kv
 
         # 5. one clock advance for the whole composed step
@@ -431,8 +604,12 @@ class ServeEngine:
         #    VALID chunk position and flips the request to DECODE
         chunk_plan = []
         for i, (req, n) in enumerate(chunks):
+            old_seq = req.seq_len
             req.prefill_pos += n
-            req.seq_len = req.prefill_pos
+            # a sharer rerunning inside its shared prefix already has
+            # seq_len past the cursor — coverage never shrinks
+            req.seq_len = max(req.seq_len, req.prefill_pos)
+            self._register_full_pages(req, old_seq)
             chunk_plan.append((req.rid, n))
             if req.prefill_pos < len(req.effective_prompt()):
                 continue
@@ -453,7 +630,7 @@ class ServeEngine:
 
     def _finish(self, req: Request) -> None:
         if req.pages:
-            self.cache.allocator.free(req.pages)
+            self._release(req.pages, req.rid)
             req.pages = []
         if req.lane >= 0:
             self.lanes[req.lane] = None
@@ -471,7 +648,12 @@ class ServeEngine:
         done = [r for r in self.requests.values()
                 if r.state is RequestState.DONE]
         lats = sorted(r.latency() for r in done)
-        ttfts = sorted(r.ttft() for r in done)
+        # every request the engine admits generates >= 1 token (submit
+        # rejects max_new_tokens < 1), so done requests always have a
+        # first-token time — but never let a None skew the percentile
+        # sort if an external driver bypasses submit()
+        ttfts = sorted(t for t in (r.ttft() for r in done)
+                       if t is not None)
         n_tok = sum(len(r.generated) for r in done)
         return {
             "n_done": len(done),
@@ -480,11 +662,19 @@ class ServeEngine:
             "virtual_tok_per_s": n_tok / max(self.now, 1e-12),
             "p50_latency_s": percentile(lats, 50),
             "p99_latency_s": percentile(lats, 99),
-            "mean_ttft_s": (float(np.mean(ttfts)) if done else 0.0),
+            "mean_ttft_s": (float(np.mean(ttfts)) if ttfts else 0.0),
             "p50_ttft_s": percentile(ttfts, 50),
             "p99_ttft_s": percentile(ttfts, 99),
             "n_preemptions": sum(r.n_preemptions
                                  for r in self.requests.values()),
             "cache_utilization": (self._util_sum
                                   / max(self._util_samples, 1)),
+            "logical_cache_utilization": (self._logical_util_sum
+                                          / max(self._util_samples, 1)),
+            "n_prefix_hits": self._n_prefix_hits,
+            "prefix_hit_rate": (self._shared_tokens
+                                / max(self._prompt_tokens, 1)),
+            "n_cow_forks": self._n_cow,
+            "physical_pages_allocated":
+                self.cache.allocator.total_allocated,
         }

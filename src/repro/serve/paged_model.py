@@ -12,7 +12,8 @@ Three step builders, all jit-stable under continuous batching:
 
   make_paged_chunked_prefill(cfg, policy) ->
       (params, tokens (B, C), kv, block_tables (B, Pmax),
-       start_pos (B,), chunk_lens (B,), active (B,)) -> (logits, kv)
+       start_pos (B,), chunk_lens (B,), active (B,),
+       write_from (B,)) -> (logits, kv)
     One fixed-size chunk of C prompt tokens for up to B requests AT
     ONCE. Row b holds chunk_lens[b] valid tokens of request b's
     effective prompt starting at absolute position start_pos[b]; each
@@ -22,6 +23,11 @@ Three step builders, all jit-stable under continuous batching:
     causal mask. Shapes are (max_batch, C) constants, so chunked
     prefill compiles exactly once — no per-bucket retraces — and a
     prompt longer than C simply spans multiple engine steps.
+    write_from[b] masks the SCATTER (not the queries) for positions
+    below it: a prefix-sharing hit already has those positions' K/V
+    resident in shared pages, so the chunk recomputes the query (its
+    logits are needed to sample when the chunk completes a prompt) but
+    must not write into pages other requests reference.
 
   make_paged_decode(cfg, policy) ->
       (params, tokens (B, 1), kv, block_tables (B, Pmax),
@@ -192,30 +198,34 @@ def _paged_forward(params, cfg: ModelConfig, policy, tokens, kv,
 def make_paged_chunked_prefill(cfg: ModelConfig,
                                policy: ArithmeticPolicy = ArithmeticPolicy()):
     """Returns chunked_prefill(params, tokens, kv, block_tables,
-    start_pos, chunk_lens, active) -> (logits (B, C, V), kv).
+    start_pos, chunk_lens, active, write_from) -> (logits (B, C, V), kv).
 
     Row b carries chunk_lens[b] valid prompt tokens of one request,
     starting at absolute position start_pos[b]; block_tables[b] must
     already contain the pages covering [0, start_pos[b] + chunk_lens[b])
     (unused slots: trash page). Logits are returned for every chunk
     position; the engine indexes the last VALID position host-side when
-    a chunk completes its prompt. Padding positions and inactive rows
-    scatter to the trash page and never enter a valid query's mask.
+    a chunk completes its prompt. Padding positions, inactive rows, and
+    positions below write_from[b] (already resident via prefix sharing)
+    scatter to the trash page and never enter a valid query's mask —
+    rerun positions still attend to their OWN K/V through the resident
+    shared pages, which hold identical values by construction.
     """
     _check_family(cfg)
 
     def chunked_prefill(params, tokens, kv, block_tables, start_pos,
-                        chunk_lens, active):
+                        chunk_lens, active, write_from):
         b, c = tokens.shape
         page = kv["k"].shape[2]
         pmax = block_tables.shape[1]
         idx = jnp.arange(c, dtype=jnp.int32)[None, :]           # (1, C)
         positions = start_pos[:, None] + idx                    # (B, C)
         valid = active[:, None] & (idx < chunk_lens[:, None])
+        do_write = valid & (positions >= write_from[:, None])
         slot = jnp.take_along_axis(
             block_tables, jnp.clip(positions // page, 0, pmax - 1), axis=1)
-        page_idx = jnp.where(valid, slot, TRASH_PAGE)
-        offset = jnp.where(valid, positions % page, 0)
+        page_idx = jnp.where(do_write, slot, TRASH_PAGE)
+        offset = jnp.where(do_write, positions % page, 0)
         return _paged_forward(params, cfg, policy, tokens, kv,
                               block_tables, positions, page_idx, offset)
 

@@ -8,12 +8,17 @@ State machine:
 
 Prefill is CHUNKED: a request can sit in PREFILL across many engine
 steps, `prefill_pos` marking how many tokens of its effective prompt
-are already written to the paged cache. A preempted request (from
-either PREFILL or DECODE) is re-queued in *recompute* style: its
-prompt becomes original-prompt + tokens-generated-so-far, its pages
-are freed, `prefill_pos` resets to 0, and a later prefill rebuilds the
-cache — for greedy sampling this is token-identical to never having
-been preempted.
+are already written to the paged cache. With prefix sharing, admission
+may find a leading run of the prompt already resident: `shared_len`
+counts those tokens, `seq_len` covers them, and `prefill_pos` starts
+past them (capped at prompt length - 1 so the last prompt token reruns
+for its logits). A preempted request (from either PREFILL or DECODE)
+is re-queued in *recompute* style: its prompt becomes original-prompt
++ tokens-generated-so-far, its page references are released (pages
+other requests still share stay resident), `prefill_pos` and
+`shared_len` reset to 0, and a later admission re-matches and
+re-prefills — for greedy sampling this is token-identical to never
+having been preempted.
 """
 from __future__ import annotations
 
@@ -41,6 +46,9 @@ class Request:
     pages: list[int] = dataclasses.field(default_factory=list)
     seq_len: int = 0                 # tokens currently in the paged cache
     prefill_pos: int = 0             # effective-prompt tokens prefilled
+    shared_len: int = 0              # leading tokens resident via prefix
+    #                                  sharing at admission: prefill skips
+    #                                  their writes, seq_len covers them
     lane: int = -1                   # batch lane (prefill or decode), -1 = none
     n_preemptions: int = 0
     # metrics (virtual-clock seconds)

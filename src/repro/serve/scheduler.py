@@ -36,7 +36,12 @@ Two policies:
 The scheduler is a pure function of its inputs — determinism under a
 fixed trace is a test invariant. It plans page usage against the free
 count but never touches the allocator; eviction under cache pressure
-lives in the engine. One exception to the page budget: the OLDEST
+lives in the engine. Admission budgeting is PREFIX-SHARING AWARE: the
+engine passes a `prefix_probe` that reports how many leading prompt
+tokens of a queued candidate are already resident in shareable pages,
+and the plan charges the free-page budget only for the UNSHARED pages
+of the candidate's first chunk (a fully-resident prompt admits at zero
+page cost — it only reruns its last token for logits). One exception to the page budget: the OLDEST
 mid-prefill request is always planned, because the engine funds it by
 preempting newer requests (mirroring decode-growth eviction order), so
 a tight pool can never deadlock a half-prefilled request. When even
@@ -75,7 +80,7 @@ class SchedulerConfig:
 class Scheduler:
     def __init__(self, sched_cfg: SchedulerConfig,
                  cost: ArtemisCostModel | None, page_size: int,
-                 prefill_chunk: int = 32):
+                 prefill_chunk: int = 32, prefix_probe=None):
         if sched_cfg.policy == "cost" and cost is None:
             raise ValueError("cost policy needs a cost model")
         if prefill_chunk < 1:
@@ -84,6 +89,9 @@ class Scheduler:
         self.cost = cost
         self.page_size = page_size
         self.prefill_chunk = prefill_chunk
+        # prefix_probe(request) -> leading prompt tokens already resident
+        # in shareable pages (0 = no sharing); must be read-only
+        self.prefix_probe = prefix_probe or (lambda r: 0)
 
     def _plan_chunks(self, queued: list[Request],
                      prefilling: list[Request], free_lanes: int,
@@ -97,7 +105,11 @@ class Scheduler:
         for i, r in enumerate(prefilling):
             pos = r.prefill_pos
             remaining = len(r.effective_prompt()) - pos
-            held = -(-pos // page)           # pages already allocated
+            # resident coverage: chunks written so far plus any shared
+            # prefix (a sharer's cursor can sit BELOW its resident
+            # tokens while it reruns the last prompt token for logits)
+            covered = max(pos, r.shared_len)
+            held = -(-covered // page)       # pages already allocated
             headroom = held * page - pos     # free slots in held pages
             if i == 0:
                 n = min(chunk, remaining)    # engine preempts to fund it
@@ -112,10 +124,17 @@ class Scheduler:
         for r in queued:
             if lanes_left <= 0:
                 break
-            n = min(chunk, len(r.effective_prompt()), budget * page)
+            ep_len = len(r.effective_prompt())
+            # at least the last prompt token must run for its logits,
+            # so a full prefix hit still admits a 1-token rerun chunk
+            shared = min(self.prefix_probe(r), ep_len)
+            start = min(shared, ep_len - 1)
+            held = -(-shared // page)        # pages sharing will grant
+            n = min(chunk, ep_len - start,
+                    held * page + budget * page - start)
             if n <= 0:
                 break   # strict FCFS: never skip the head to admit later
-            budget -= -(-n // page)
+            budget -= max(0, -(-(start + n) // page) - held)
             lanes_left -= 1
             plan.append((r.rid, n))
         return tuple(plan)

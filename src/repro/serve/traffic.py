@@ -4,6 +4,16 @@ Poisson arrivals (exponential inter-arrival gaps) with configurable
 prompt/generation length distributions — the many-concurrent-requests
 regime the ROADMAP north-star targets, in deterministic, seedable form
 so scheduler tests can replay the exact same trace.
+
+Two prompt modes:
+
+  independent (n_prefix_groups == 0) — every prompt fully random.
+  shared-prefix (n_prefix_groups > 0) — `n_prefix_groups` random
+      prefixes of `prefix_len` tokens are drawn once; each request
+      picks a group and appends a per-request random suffix of
+      [prompt_len_min, prompt_len_max] tokens. This is the few-shot /
+      system-prompt traffic shape that prefix sharing in the paged KV
+      cache multiplies capacity on.
 """
 from __future__ import annotations
 
@@ -16,12 +26,53 @@ import numpy as np
 class TrafficConfig:
     n_requests: int = 16
     arrival_rate: float = 50.0       # requests / virtual second
-    prompt_len_min: int = 4
+    prompt_len_min: int = 4          # suffix bounds in shared-prefix mode
     prompt_len_max: int = 48
     gen_len_min: int = 4
     gen_len_max: int = 24
     vocab_size: int = 256
     seed: int = 0
+    n_prefix_groups: int = 0         # 0 = independent prompts
+    prefix_len: int = 0              # tokens shared within a group
+
+    def __post_init__(self):
+        # mirror EngineConfig: bad bounds used to fail deep inside
+        # np.random with confusing errors
+        if self.n_requests < 1:
+            raise ValueError(
+                f"n_requests must be >= 1, got {self.n_requests}")
+        if not self.arrival_rate > 0:
+            raise ValueError(
+                f"arrival_rate must be > 0, got {self.arrival_rate}")
+        if self.prompt_len_min < 1:
+            raise ValueError(
+                f"prompt_len_min must be >= 1, got {self.prompt_len_min}")
+        if self.prompt_len_min > self.prompt_len_max:
+            raise ValueError(
+                f"prompt_len_min {self.prompt_len_min} > prompt_len_max "
+                f"{self.prompt_len_max}")
+        if self.gen_len_min < 1:
+            raise ValueError(
+                f"gen_len_min must be >= 1, got {self.gen_len_min}")
+        if self.gen_len_min > self.gen_len_max:
+            raise ValueError(
+                f"gen_len_min {self.gen_len_min} > gen_len_max "
+                f"{self.gen_len_max}")
+        if self.vocab_size < 3:
+            raise ValueError(
+                f"vocab_size must be >= 3 (ids start at 2), got "
+                f"{self.vocab_size}")
+        if self.n_prefix_groups < 0:
+            raise ValueError(
+                f"n_prefix_groups must be >= 0, got "
+                f"{self.n_prefix_groups}")
+        if self.n_prefix_groups > 0 and self.prefix_len < 1:
+            raise ValueError(
+                f"prefix_len must be >= 1 when n_prefix_groups > 0, "
+                f"got {self.prefix_len}")
+        if self.n_prefix_groups == 0 and self.prefix_len != 0:
+            raise ValueError(
+                f"prefix_len {self.prefix_len} needs n_prefix_groups > 0")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -29,20 +80,29 @@ class TraceItem:
     arrival_time: float
     prompt: np.ndarray               # (S,) i32
     max_new_tokens: int
+    prefix_group: int = -1           # -1 = independent prompt
 
 
 def synth_trace(tc: TrafficConfig) -> list[TraceItem]:
     """Deterministic Poisson trace; sorted by arrival time."""
     rng = np.random.default_rng(tc.seed)
-    gaps = rng.exponential(1.0 / max(tc.arrival_rate, 1e-9),
-                           size=tc.n_requests)
+    gaps = rng.exponential(1.0 / tc.arrival_rate, size=tc.n_requests)
     arrivals = np.cumsum(gaps)
+    # token ids start at 2 (0/1 conventionally pad/bos in the repo's
+    # synthetic batches — see launch/serve.py)
+    prefixes = [
+        rng.integers(2, tc.vocab_size, size=tc.prefix_len).astype(np.int32)
+        for _ in range(tc.n_prefix_groups)]
     items = []
     for i in range(tc.n_requests):
         plen = int(rng.integers(tc.prompt_len_min, tc.prompt_len_max + 1))
         glen = int(rng.integers(tc.gen_len_min, tc.gen_len_max + 1))
-        # token ids start at 2 (0/1 conventionally pad/bos in the repo's
-        # synthetic batches — see launch/serve.py)
-        prompt = rng.integers(2, tc.vocab_size, size=plen).astype(np.int32)
-        items.append(TraceItem(float(arrivals[i]), prompt, glen))
+        suffix = rng.integers(2, tc.vocab_size, size=plen).astype(np.int32)
+        group = -1
+        if tc.n_prefix_groups:
+            group = int(rng.integers(0, tc.n_prefix_groups))
+            prompt = np.concatenate([prefixes[group], suffix])
+        else:
+            prompt = suffix
+        items.append(TraceItem(float(arrivals[i]), prompt, glen, group))
     return items
