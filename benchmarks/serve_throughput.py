@@ -10,14 +10,17 @@ shared-prefix trace (N prefix groups x per-request suffixes) comparing
 copy-on-write prefix sharing against the same engine with sharing
 disabled: prefix hit rate, physical pages allocated, COW forks, and
 physical vs logical cache utilization land in the JSON so CI captures
-the hit-rate trajectory per PR.
+the hit-rate trajectory per PR — plus a RECURRENT trace (rwkv6 through
+the state-slot backend) so the recurrent families' throughput and TTFT
+are part of the per-run artifact now that every family routes through
+the one engine.
 
 Timing: an UNTIMED warmup drain (a throwaway engine over the same
 compiled steps — they are shared per (cfg, policy), see
-`repro.serve.engine._compiled_steps`) absorbs jit compilation of the
-chunked-prefill and decode steps; `compile_s` reports it separately so
-`tok_per_s` tracks steady-state throughput across PRs instead of XLA
-compile time.
+`repro.serve.backend._paged_steps` / `_slot_steps`) absorbs jit
+compilation of the chunked-prefill and decode steps; `compile_s`
+reports it separately so `tok_per_s` tracks steady-state throughput
+across PRs instead of XLA compile time.
 
 Run: PYTHONPATH=src python -m benchmarks.serve_throughput [--full]
 """
@@ -169,6 +172,52 @@ def _bench_shared_prefix(cfg, params, seed: int) -> dict:
     return row
 
 
+def _bench_recurrent(seed: int) -> dict:
+    """Recurrent-family trace: rwkv6 through the state-slot backend —
+    fixed-size per-lane state slots instead of growing KV pages, same
+    engine, same mixed-step cost scheduler. Reported so the recurrent
+    path's throughput/TTFT trajectory lands in the per-run artifact."""
+    cfg = configs.get_config("rwkv6_3b", smoke=True)
+    cfg = dataclasses.replace(cfg, compute_dtype="float32")
+    params = model.init(jax.random.PRNGKey(seed), cfg)
+    ecfg = EngineConfig(max_batch=4, prefill_chunk=16, max_seq_len=96,
+                        cache_dtype="float32")
+    # warmup drain compiles the slot chunk/decode steps off the clock
+    warm = ServeEngine(cfg, params=params, ecfg=ecfg, seed=seed)
+    warm.submit(np.arange(2, 20, dtype=np.int32), max_new_tokens=3)
+    t0 = time.time()
+    warm.drain()
+    compile_s = time.time() - t0
+    eng = ServeEngine(cfg, params=params, ecfg=ecfg, seed=seed)
+    trace = synth_trace(TrafficConfig(
+        n_requests=8, arrival_rate=1e6, prompt_len_min=4,
+        prompt_len_max=32, gen_len_min=4, gen_len_max=16,
+        vocab_size=cfg.vocab_size, seed=seed))
+    eng.submit_trace(trace)
+    t0 = time.time()
+    eng.drain()
+    wall = time.time() - t0
+    m = eng.metrics()
+    return {
+        "trace": "recurrent_rwkv6",
+        "arch": cfg.name,
+        "backend": "state_slot",
+        "n_requests": m["n_done"],
+        "n_tokens": m["n_generated_tokens"],
+        "compile_s": compile_s,
+        "wall_s": wall,
+        "tok_per_s": m["n_generated_tokens"] / max(wall, 1e-9),
+        "virtual_tok_per_s": m["virtual_tok_per_s"],
+        "p50_latency_s": m["p50_latency_s"],
+        "p99_latency_s": m["p99_latency_s"],
+        "mean_ttft_s": m["mean_ttft_s"],
+        "p99_ttft_s": m["p99_ttft_s"],
+        "slot_utilization": m["cache_utilization"],
+        "n_state_slots": m["n_state_slots"],
+        "n_preemptions": m["n_preemptions"],
+    }
+
+
 def run(smoke: bool = True, arch: str = "qwen3_8b",
         n_requests: int = 12, seed: int = 0) -> list[dict]:
     cfg = configs.get_config(arch, smoke=smoke)
@@ -197,9 +246,16 @@ def run(smoke: bool = True, arch: str = "qwen3_8b",
           f"{sp['no_sharing']['physical_pages_allocated']} no-sharing "
           f"({sp['physical_pages_saved']} saved) | "
           f"{sp['sharing']['n_cow_forks']} COW forks")
+    rec = _bench_recurrent(seed)
+    print(f"  recurrent ({rec['arch']}, state-slot backend): "
+          f"{rec['tok_per_s']:8.1f} tok/s wall | p99 "
+          f"{rec['p99_latency_s']*1e3:8.3f} ms | p99-ttft "
+          f"{rec['p99_ttft_s']*1e3:8.3f} ms (virtual) | slot util "
+          f"{rec['slot_utilization']:.2f}")
     bench = {"bench": "serve_throughput", "arch": cfg.name,
              "smoke": smoke, "seed": seed, "compile_s": compile_s,
-             "rows": rows, "long_prompt": lp, "shared_prefix": sp}
+             "rows": rows, "long_prompt": lp, "shared_prefix": sp,
+             "recurrent": rec}
     with open(OUT_PATH, "w") as f:
         json.dump(bench, f, indent=2)
     print("BENCH " + json.dumps(bench))

@@ -2,11 +2,18 @@
 
 Submits a handful of mixed-length requests to the `repro.serve` engine,
 steps it manually (so you can watch the scheduler compose chunked
-prefill batches with decode into mixed steps over the paged KV cache),
-then drains and prints the per-request outputs and engine metrics.
+prefill batches with decode into mixed steps), then drains and prints
+the per-request outputs and engine metrics.
+
+Every family rides the same engine via the `SequenceBackend` API: the
+default qwen3_8b arch serves over the paged-KV backend (watch for
+"share" events — two of the requests share a resident prompt prefix
+copy-on-write), while `--arch rwkv6_3b` (or zamba2_7b) serves over the
+state-slot backend, where each request holds one fixed-size recurrent
+state slot instead of growing KV pages.
 
 Run: PYTHONPATH=src python examples/serve_engine.py
-         [--scheduler fcfs] [--prefill-chunk 8]
+         [--arch rwkv6_3b] [--scheduler fcfs] [--prefill-chunk 8]
 """
 import argparse
 import dataclasses
@@ -31,7 +38,10 @@ def main():
                               compute_dtype="float32")
     eng = ServeEngine(cfg, ecfg=EngineConfig(
         page_size=8, n_pages=64, max_batch=3, max_pages_per_seq=8,
-        prefill_chunk=args.prefill_chunk, scheduler=args.scheduler))
+        max_seq_len=64, prefill_chunk=args.prefill_chunk,
+        scheduler=args.scheduler))
+    print(f"arch {cfg.name} ({cfg.family}) served by "
+          f"{type(eng.backend).__name__}")
 
     rng = np.random.default_rng(0)
     print(f"submitting 7 requests with mixed prompt/gen lengths "
@@ -85,12 +95,16 @@ def main():
         print(f"  request {rid}: {toks[:10].tolist()}"
               f"{' ...' if len(toks) > 10 else ''}")
     m = eng.metrics()
-    print(f"\n{m['n_generated_tokens']} tokens | cache utilization "
-          f"{m['cache_utilization']:.2f} (logical "
-          f"{m['logical_cache_utilization']:.2f}) | prefix hit rate "
-          f"{m['prefix_hit_rate']:.2f} | {m['n_cow_forks']} COW forks | "
-          f"{m['n_preemptions']} preemptions | {len(eng.events)} "
-          f"engine steps")
+    line = (f"\n{m['n_generated_tokens']} tokens | cache utilization "
+            f"{m['cache_utilization']:.2f} (logical "
+            f"{m['logical_cache_utilization']:.2f})")
+    if "prefix_hit_rate" in m:      # paged-KV backend extras
+        line += (f" | prefix hit rate {m['prefix_hit_rate']:.2f} | "
+                 f"{m['n_cow_forks']} COW forks")
+    if "n_state_slots" in m:        # state-slot backend extras
+        line += f" | {m['n_state_slots']} state slots"
+    print(line + f" | {m['n_preemptions']} preemptions | "
+          f"{len(eng.events)} engine steps")
 
 
 if __name__ == "__main__":

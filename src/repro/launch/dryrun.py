@@ -16,7 +16,6 @@ import time
 import traceback
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.core.policy import ArithmeticPolicy

@@ -6,12 +6,17 @@ Two modes (the paper is inference-oriented; this is the serve driver):
                   with different prompt lengths are left-padded into one
                   batch, prefilled once, then decoded in lockstep with
                   greedy sampling against the dense KV cache.
-  --mode engine   the `repro.serve` engine: per-request lifecycles over
-                  a paged KV cache, chunked+batched prefill composed
-                  with decode into mixed steps by the ARTEMIS-cost-aware
-                  scheduler, driven by a synthetic Poisson trace
-                  (`--prefill-chunk` sets the chunk size, `--seed` the
-                  trace/params seed).
+  --mode engine   the `repro.serve` engine: per-request lifecycles with
+                  chunked+batched prefill composed with decode into
+                  mixed steps by the ARTEMIS-cost-aware scheduler,
+                  driven by a synthetic Poisson trace (`--prefill-chunk`
+                  sets the chunk size, `--seed` the trace/params seed).
+                  EVERY family routes through the same engine: the
+                  attention archs (dense/moe) serve over the paged KV
+                  backend (COW prefix sharing, `--prefix-groups` et
+                  al.), the recurrent archs (rwkv6/zamba2) over the
+                  state-slot backend (`--n-slots` sizes its pool) — see
+                  repro.serve.backend.
 
 The ARTEMIS arithmetic policy applies to every matmul in both modes.
 """
@@ -90,8 +95,9 @@ def serve_engine(arch: str = "qwen3_8b", smoke: bool = True,
                  max_batch: int = 8, scheduler: str = "cost",
                  prefill_chunk: int = 32, prefix_sharing: bool = True,
                  prefix_groups: int = 0, prefix_len: int = 0,
-                 params=None) -> dict:
-    """Continuous-batching serving over a synthetic Poisson trace."""
+                 n_slots: int = 0, params=None) -> dict:
+    """Continuous-batching serving over a synthetic Poisson trace (any
+    family — the engine routes to the right sequence backend)."""
     from repro.serve import (EngineConfig, ServeEngine, TrafficConfig,
                              synth_trace)
     cfg = configs.get_config(arch, smoke=smoke)
@@ -101,7 +107,8 @@ def serve_engine(arch: str = "qwen3_8b", smoke: bool = True,
         page_size=page_size, n_pages=n_pages, max_batch=max_batch,
         max_pages_per_seq=max(1, -(-max_len // page_size)) + 1,
         prefill_chunk=prefill_chunk, scheduler=scheduler,
-        prefix_sharing=prefix_sharing)
+        prefix_sharing=prefix_sharing, n_slots=n_slots,
+        max_seq_len=max(max_len + 1, 2))
     eng = ServeEngine(cfg, params=params, policy=policy, ecfg=ecfg,
                       seed=seed)
     trace = synth_trace(TrafficConfig(
@@ -143,7 +150,11 @@ def main() -> None:
     ap.add_argument("--scheduler", default="cost",
                     choices=["cost", "fcfs"])
     ap.add_argument("--no-prefix-sharing", action="store_true",
-                    help="engine: disable COW prefix/page sharing")
+                    help="engine: disable COW prefix/page sharing "
+                         "(paged-KV backend)")
+    ap.add_argument("--n-slots", type=int, default=0,
+                    help="engine: state-slot pool size for recurrent "
+                         "archs (0 = auto: batch lanes + 1)")
     ap.add_argument("--prefix-groups", type=int, default=0,
                     help="engine: shared-prefix trace groups (0 = "
                          "independent prompts)")
@@ -170,20 +181,24 @@ def main() -> None:
         max_batch=args.batch, scheduler=args.scheduler,
         prefill_chunk=args.prefill_chunk,
         prefix_sharing=not args.no_prefix_sharing,
-        prefix_groups=args.prefix_groups, prefix_len=args.prefix_len)
+        prefix_groups=args.prefix_groups, prefix_len=args.prefix_len,
+        n_slots=args.n_slots)
     m = out["metrics"]
-    print(f"engine: {m['n_done']} requests, "
-          f"{m['n_generated_tokens']} tokens | "
-          f"{m['wall_tok_per_s']:.1f} tok/s wall | "
-          f"p50 {m['p50_latency_s']*1e3:.3f}ms "
-          f"p99 {m['p99_latency_s']*1e3:.3f}ms "
-          f"p99-ttft {m['p99_ttft_s']*1e3:.3f}ms (virtual) | "
-          f"cache util {m['cache_utilization']:.2f} "
-          f"(logical {m['logical_cache_utilization']:.2f}) | "
-          f"prefix hits {m['n_prefix_hits']} "
-          f"(rate {m['prefix_hit_rate']:.2f}) | "
-          f"{m['n_cow_forks']} COW forks | "
-          f"{m['n_preemptions']} preemptions")
+    line = (f"engine: {m['n_done']} requests, "
+            f"{m['n_generated_tokens']} tokens | "
+            f"{m['wall_tok_per_s']:.1f} tok/s wall | "
+            f"p50 {m['p50_latency_s']*1e3:.3f}ms "
+            f"p99 {m['p99_latency_s']*1e3:.3f}ms "
+            f"p99-ttft {m['p99_ttft_s']*1e3:.3f}ms (virtual) | "
+            f"cache util {m['cache_utilization']:.2f} "
+            f"(logical {m['logical_cache_utilization']:.2f})")
+    if "prefix_hit_rate" in m:       # paged-KV backend extras
+        line += (f" | prefix hits {m['n_prefix_hits']} "
+                 f"(rate {m['prefix_hit_rate']:.2f}) | "
+                 f"{m['n_cow_forks']} COW forks")
+    if "n_state_slots" in m:         # state-slot backend extras
+        line += f" | {m['n_state_slots']} state slots"
+    print(line + f" | {m['n_preemptions']} preemptions")
 
 
 if __name__ == "__main__":

@@ -7,8 +7,6 @@ exactly like a production config push.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

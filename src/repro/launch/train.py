@@ -18,7 +18,6 @@ import argparse
 import time
 
 import jax
-import jax.numpy as jnp
 
 from repro import configs
 from repro.checkpoint import CheckpointConfig, CheckpointManager

@@ -12,8 +12,6 @@ KV cache layout (decode): {"k"/"v": (L, B, Smax, KV, Dh), "index": i32[]}.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -23,8 +23,6 @@ dataflow's `stripe` option (beyond-paper optimization, §Perf).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
 import jax.numpy as jnp
 

@@ -1,17 +1,31 @@
 """repro.serve — continuous-batching serving engine.
 
 A layer between the kernels and the launch CLI: request lifecycle
-(`request`), block-based paged KV cache with refcounted copy-on-write
-prefix sharing (`paged_cache`), jit-stable chunked+batched prefill and
-decode forwards (`paged_model`), ARTEMIS-cost-aware mixed-step
-scheduling (`scheduler` + `cost`, priced by `repro.hwsim` over the
-composed token count), synthetic Poisson traffic with a shared-prefix
-mode (`traffic`), and the engine driver (`engine`).
+(`request`), the backend-agnostic sequence-memory API (`backend`:
+`SequenceBackend`, implemented by the paged-KV backend for attention
+families and the state-slot backend for recurrent families),
+jit-stable forwards per memory model (`paged_model` / `state_model`),
+the paged-cache primitives (`paged_cache`: refcounting allocator,
+prefix index, copy-on-write), ARTEMIS-cost-aware mixed-step scheduling
+(`scheduler` + `cost`, priced by `repro.hwsim` over the composed token
+count), synthetic Poisson traffic with a shared-prefix mode
+(`traffic`), and the engine driver (`engine`).
 
-Entry point: `python -m repro.launch.serve --mode engine`.
+Entry point: `python -m repro.launch.serve --mode engine` (any family).
 """
+from repro.serve.backend import (
+    AdmitPlan,
+    BudgetProbe,
+    EngineConfig,
+    PagedBudget,
+    PagedKVBackend,
+    SequenceBackend,
+    SlotBudget,
+    StateSlotBackend,
+    make_backend,
+)
 from repro.serve.cost import ArtemisCostModel
-from repro.serve.engine import EngineConfig, ServeEngine, percentile
+from repro.serve.engine import ServeEngine, percentile
 from repro.serve.paged_cache import (
     PageAllocator,
     PagedKVCache,
@@ -25,16 +39,25 @@ from repro.serve.paged_model import (
     make_paged_decode,
     make_paged_prefill,
 )
-from repro.serve.request import Request, RequestState
+from repro.serve.request import Request, RequestState, SamplingParams
 from repro.serve.scheduler import Action, Scheduler, SchedulerConfig
+from repro.serve.state_model import (
+    init_slot_pool,
+    make_slot_decode,
+    make_slot_prefill_chunk,
+)
 from repro.serve.traffic import TraceItem, TrafficConfig, synth_trace
 
 __all__ = [
-    "ArtemisCostModel", "EngineConfig", "ServeEngine", "percentile",
+    "AdmitPlan", "BudgetProbe", "EngineConfig", "PagedBudget",
+    "PagedKVBackend", "SequenceBackend", "SlotBudget", "StateSlotBackend",
+    "make_backend",
+    "ArtemisCostModel", "ServeEngine", "percentile",
     "PageAllocator", "PagedKVCache", "PrefixIndex", "cow_copy_page",
     "init_paged_cache", "pad_to_page",
     "make_paged_chunked_prefill", "make_paged_decode", "make_paged_prefill",
-    "Request", "RequestState",
+    "Request", "RequestState", "SamplingParams",
     "Action", "Scheduler", "SchedulerConfig",
+    "init_slot_pool", "make_slot_decode", "make_slot_prefill_chunk",
     "TraceItem", "TrafficConfig", "synth_trace",
 ]

@@ -1,46 +1,45 @@
 """Continuous-batching serving engine: submit() / step() / drain().
 
+The engine is BACKEND-AGNOSTIC: every model family is served through
+the same request lifecycle, scheduler, and step loop, and all
+sequence-memory mechanics (how K/V or recurrent state is stored,
+shared, grown, and reclaimed) live behind the `SequenceBackend`
+protocol (repro.serve.backend) — attention families get the paged-KV
+backend, recurrent families get the state-slot backend, and this
+module never branches on either.
+
 One `step()` executes one scheduler action on the device:
 
   prefill — one fixed-size chunk of prompt tokens for up to max_batch
-            requests AT ONCE through the single compiled
-            `make_paged_chunked_prefill` step ((B, C) shapes are
-            engine constants, so chunked prefill compiles exactly
-            once). A request whose prompt exceeds the chunk size sits
-            in PREFILL across steps, `prefill_pos` marking its cursor;
-            pages are allocated chunk-by-chunk. When a chunk completes
-            the prompt, the first token is sampled from the last valid
-            chunk logit and the request flips to DECODE on the lane it
-            reserved at admission.
-  decode  — every decode lane advances one token through the single
-            compiled `make_paged_decode` step (fixed max-batch shape;
-            idle lanes are masked onto the trash page). Lanes that hit
-            a page boundary get a new page first; if the pool is dry
-            the latest-admitted request is preempted (pages freed,
-            recompute-style requeue) until the allocation fits.
+            requests AT ONCE through the backend's single compiled
+            chunk step ((B, C) shapes are engine constants, so chunked
+            prefill compiles exactly once). A request whose prompt
+            exceeds the chunk size sits in PREFILL across steps,
+            `prefill_pos` marking its cursor; memory is funded
+            chunk-by-chunk. When a chunk completes the prompt, the
+            first token is sampled from the last valid chunk logit and
+            the request flips to DECODE on the lane it reserved at
+            admission.
+  decode  — every decode lane advances one token through the backend's
+            single compiled decode step (fixed max-batch shape; idle
+            lanes are backend-masked). The backend first makes every
+            lane's write target safe; if that needs memory the pool
+            doesn't have, the latest-admitted request is preempted
+            (memory released, recompute-style requeue) until it fits.
   mixed   — prefill chunks AND a decode round in the same step, priced
             as ONE pass over the composed token count — the ARTEMIS
             token-parallel dataflow prices a batch by its total
             concurrent tokens, so sharing a pass is exactly where the
-            hardware model wins. The two halves touch disjoint pages,
+            hardware model wins. The two halves touch disjoint memory,
             so execution order inside the step is irrelevant to the
             results.
 
-PREFIX SHARING (copy-on-write): at admission the engine matches the
-request's prompt against the `PrefixIndex` of already-resident pages.
-Matched pages are SHARED (allocator refcount + 1) instead of
-re-allocated and re-prefilled: `prefill_pos` starts past the shared
-prefix (capped at prompt_len - 1 — the last prompt token always reruns
-so its logits can seed decode, with its K/V write skipped via the
-chunk's write_from mask) and `seq_len` covers the resident tokens.
-Full pages completed by prefill are registered in the index; pages
-drop out when their last owner releases them. Divergence — a write
-landing in a page whose refcount is > 1, which in practice is a
-sharer's first decode token into a partially-covered shared last
-page — triggers a COW fork: allocate a private page, copy the K/V
-slice on device, swap the page-table entry, drop the shared ref.
-Preempting a sharer only releases its references (pages other
-requests still own stay resident and indexed).
+Admission may come with a PREFIX-SHARE DISCOUNT: a backend that can
+recognize an already-resident leading run of the prompt (the paged-KV
+backend's copy-on-write prefix index) starts the new request past it,
+and the scheduler's budget probe charges admission only for the
+unshared remainder. Backends without shareable memory report a zero
+discount and everything still composes.
 
 The engine keeps a VIRTUAL clock priced by the ARTEMIS cost model
 (`hwsim.simulate_model`, token_PP dataflow): every executed step
@@ -48,37 +47,27 @@ advances time by the simulated latency of its composed batch, so
 arrival interleaving, latency percentiles and the scheduler's
 decisions are deterministic functions of (trace, seed) — wall-clock
 throughput is measured separately by the benchmark. Greedy sampling
-end-to-end: the engine's outputs are token-identical to decoding each
-request alone on the dense-cache path, including through preemption
-landing mid-prefill and through prefix sharing, COW forks, and
-preemption of sharers (tests/test_serve.py pins this).
+end-to-end (`SamplingParams` is threaded through submit() for the
+planned temperature/top-k work, greedy-only for now): the engine's
+outputs are token-identical to decoding each request alone on the
+sequential single-request path, including through preemption landing
+mid-prefill and through prefix sharing (tests/test_serve.py and
+tests/test_serve_backend.py pin this for both backends).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import math
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policy import ArithmeticPolicy
 from repro.launch import steps as stepslib
 from repro.models import model
 from repro.models.config import ModelConfig
+from repro.serve.backend import EngineConfig, make_backend
 from repro.serve.cost import ArtemisCostModel
-from repro.serve.paged_cache import (
-    TRASH_PAGE,
-    PrefixIndex,
-    cow_copy_page,
-    init_paged_cache,
-)
-from repro.serve.paged_model import (
-    make_paged_chunked_prefill,
-    make_paged_decode,
-)
-from repro.serve.request import Request, RequestState
+from repro.serve.request import Request, RequestState, SamplingParams
 from repro.serve.scheduler import Action, Scheduler, SchedulerConfig
 from repro.serve.traffic import TraceItem
 
@@ -94,54 +83,6 @@ def percentile(sorted_vals, p: float) -> float:
     return float(sorted_vals[k - 1])
 
 
-@functools.lru_cache(maxsize=None)
-def _compiled_steps(cfg: ModelConfig, policy: ArithmeticPolicy):
-    """Jitted paged steps shared across engines with the same
-    (cfg, policy): a fresh jax.jit wrapper per engine would recompile
-    per instance, which both slows tests and lets compile time leak
-    into benchmark drains (the warmup engine would warm nothing)."""
-    # donate the KV pool (arg 2): both steps return the updated pool
-    # and the engine overwrites self.cache.kv with it, so XLA can
-    # update pages in place instead of copying the whole pool
-    return (jax.jit(make_paged_chunked_prefill(cfg, policy),
-                    donate_argnums=(2,)),
-            jax.jit(make_paged_decode(cfg, policy),
-                    donate_argnums=(2,)))
-
-
-@dataclasses.dataclass(frozen=True)
-class EngineConfig:
-    page_size: int = 8
-    n_pages: int = 128             # includes the reserved trash page 0
-    max_batch: int = 4             # batch lanes (compiled batch width)
-    max_pages_per_seq: int = 16    # block-table width
-    prefill_chunk: int = 32        # prompt tokens per prefill chunk
-    cache_dtype: str = "float32"
-    scheduler: str = "cost"        # "cost" | "fcfs"
-    scheme: str = "token_PP"       # hwsim dataflow used for pricing
-    prefix_sharing: bool = True    # COW page sharing for common prefixes
-
-    def __post_init__(self):
-        if self.page_size < 1:
-            raise ValueError(f"page_size must be >= 1, got {self.page_size}")
-        if self.n_pages < 2:
-            raise ValueError(
-                f"n_pages must be >= 2 (page 0 is the reserved trash "
-                f"page), got {self.n_pages}")
-        if self.max_batch < 1:
-            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
-        if self.max_pages_per_seq < 1:
-            raise ValueError(
-                f"max_pages_per_seq must be >= 1, got "
-                f"{self.max_pages_per_seq}")
-        if self.prefill_chunk < 1:
-            raise ValueError(
-                f"prefill_chunk must be >= 1, got {self.prefill_chunk}")
-        if self.scheduler not in ("cost", "fcfs"):
-            raise ValueError(f"unknown scheduler {self.scheduler!r}")
-        jnp.dtype(self.cache_dtype)   # raises on nonsense dtypes
-
-
 class ServeEngine:
     def __init__(self, cfg: ModelConfig, params=None,
                  policy: ArithmeticPolicy = ArithmeticPolicy(),
@@ -152,62 +93,83 @@ class ServeEngine:
         if params is None:
             params = model.init(jax.random.PRNGKey(seed), cfg)
         self.params = params
-        self.cache = init_paged_cache(
-            cfg, ecfg.n_pages, ecfg.page_size,
-            dtype=jnp.dtype(ecfg.cache_dtype))
         self.cost = ArtemisCostModel(cfg, scheme=ecfg.scheme)
-        self.prefix = PrefixIndex(ecfg.page_size)
+        self.events: list[tuple] = []
+        self.now = 0.0
+        self.backend = make_backend(
+            cfg, ecfg, policy, params,
+            emit=self.events.append, clock=lambda: self.now)
         self.scheduler = Scheduler(
             SchedulerConfig(policy=ecfg.scheduler),
-            self.cost, ecfg.page_size, ecfg.prefill_chunk,
-            prefix_probe=self._probe_prefix)
-        self._prefill, self._decode = _compiled_steps(cfg, policy)
+            self.cost, ecfg.prefill_chunk)
         self.requests: dict[int, Request] = {}
         self.lanes: list[Request | None] = [None] * ecfg.max_batch
-        self.now = 0.0
-        self.events: list[tuple] = []
         self._next_rid = 0
         self._admit_seq = 0
         self._admit_order: dict[int, int] = {}   # rid -> admission counter
         self._util_sum = 0.0
         self._logical_util_sum = 0.0
         self._util_samples = 0
-        self._n_prefix_hits = 0      # admissions that shared >= 1 token
-        self._shared_tokens = 0      # prompt tokens covered by sharing
-        self._prompt_tokens = 0      # prompt tokens over all admissions
-        self._n_cow = 0              # copy-on-write page forks
-        # rid -> (index generation, matched, pages): the scheduler
-        # probes every visible queued request each decide(), so match
-        # results are memoized until the index mutates (a queued
-        # request's effective prompt is fixed; invalidated on preempt)
-        self._match_memo: dict[int, tuple[int, int, list[int]]] = {}
 
     # -- submission ---------------------------------------------------------
 
-    def submit(self, prompt: np.ndarray, max_new_tokens: int,
-               arrival_time: float = 0.0) -> int:
-        prompt = np.asarray(prompt, np.int32).reshape(-1)
-        if len(prompt) < 1:
+    def _validate_prompt(self, prompt) -> np.ndarray:
+        """Accept np.ndarray or list/tuple of ints; reject non-integer
+        dtypes (a float array used to silently round-trip into the
+        cache) and out-of-vocab token ids."""
+        if isinstance(prompt, np.ndarray):
+            if not np.issubdtype(prompt.dtype, np.integer):
+                raise ValueError(
+                    f"prompt array must have an integer dtype, got "
+                    f"{prompt.dtype}")
+            arr = prompt.reshape(-1)
+        elif isinstance(prompt, (list, tuple)):
+            bad = [t for t in prompt
+                   if not isinstance(t, (int, np.integer))
+                   or isinstance(t, bool)]
+            if bad:
+                raise ValueError(
+                    f"prompt list must contain only ints, got "
+                    f"{type(bad[0]).__name__} {bad[0]!r}")
+            try:
+                arr = np.asarray(prompt, np.int64).reshape(-1)
+            except OverflowError as e:
+                raise ValueError(
+                    f"prompt token out of any integer token range: "
+                    f"{e}") from e
+        else:
+            raise TypeError(
+                f"prompt must be an np.ndarray or a list of ints, got "
+                f"{type(prompt).__name__}")
+        if arr.size < 1:
             raise ValueError("prompt must have at least one token")
+        # range-check BEFORE the int32 cast so a wide-dtype token can't
+        # wrap into the valid range
+        lo, hi = int(arr.min()), int(arr.max())
+        if lo < 0 or hi >= self.cfg.vocab_size:
+            raise ValueError(
+                f"prompt tokens must satisfy 0 <= t < vocab_size "
+                f"({self.cfg.vocab_size}), got range [{lo}, {hi}]")
+        return arr.astype(np.int32)
+
+    def submit(self, prompt, max_new_tokens: int,
+               arrival_time: float = 0.0,
+               sampling: SamplingParams | None = None) -> int:
+        prompt = self._validate_prompt(prompt)
+        sampling = sampling if sampling is not None else SamplingParams()
+        if not sampling.greedy:
+            raise NotImplementedError(
+                "only greedy sampling (temperature=0, top_k=0) is "
+                "implemented; SamplingParams carries the planned "
+                "temperature/top-k surface")
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
-        # last cache write lands at position prompt+gen-2 (the final
-        # sampled token is never fed back), so this bounds page usage
-        worst_pages = self.cache.allocator.pages_for(
-            len(prompt) + max_new_tokens - 1)
-        if worst_pages > self.ecfg.max_pages_per_seq:
-            raise ValueError(
-                f"request needs up to {worst_pages} pages, block table "
-                f"holds {self.ecfg.max_pages_per_seq}")
-        if worst_pages > self.ecfg.n_pages - 1:
-            raise ValueError(
-                f"request needs up to {worst_pages} pages, pool has "
-                f"{self.ecfg.n_pages - 1}")
+        self.backend.validate(len(prompt), max_new_tokens)
         rid = self._next_rid
         self._next_rid += 1
         self.requests[rid] = Request(
             rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
-            arrival_time=float(arrival_time))
+            arrival_time=float(arrival_time), sampling=sampling)
         return rid
 
     def submit_trace(self, items: list[TraceItem]) -> list[int]:
@@ -246,7 +208,7 @@ class ServeEngine:
         action = self.scheduler.decide(
             self._queued_visible(), self._next_arrival(),
             self._prefilling(), self._decoding(),
-            self.lanes.count(None), self.cache.allocator.n_free)
+            self.lanes.count(None), self.backend.budget())
         if action.kind == "idle":
             return None
         if action.kind == "advance":
@@ -258,8 +220,9 @@ class ServeEngine:
             self.events.append(ev)
             if ev[0] not in ("advance", "preempt_all"):
                 # utilization of EXECUTED batches
-                self._util_sum += self.cache.utilization()
-                self._logical_util_sum += self.cache.logical_utilization()
+                phys, logical = self.backend.utilization()
+                self._util_sum += phys
+                self._logical_util_sum += logical
                 self._util_samples += 1
         return ev
 
@@ -269,7 +232,7 @@ class ServeEngine:
                    for r in self.requests.values()):
                 return
             # a ("preempt_all", ...) step executes nothing but DOES
-            # make progress (freed pages re-admit the evicted
+            # make progress (the released memory re-admits the evicted
             # requests), so only a genuinely idle None stalls
             if self.step() is None:
                 break
@@ -280,217 +243,60 @@ class ServeEngine:
 
     # -- actions ------------------------------------------------------------
 
-    def _newest_victim(self, exclude: Request | None) -> Request | None:
+    def _evict_newest(self, exclude: Request | None = None,
+                      newer_than: Request | None = None) -> bool:
+        """Backend eviction hook: preempt the latest-admitted laned
+        request (optionally excluding one, optionally only requests
+        admitted after `newer_than`). Returns False when no such
+        victim exists — the backend decides what that means."""
         victims = [r for r in self._laned() if r is not exclude]
+        if newer_than is not None:
+            bar = self._admit_order[newer_than.rid]
+            victims = [r for r in victims
+                       if self._admit_order[r.rid] > bar]
         if not victims:
-            return None
-        return max(victims, key=lambda r: self._admit_order[r.rid])
-
-    def _release(self, pages: list[int], rid: int) -> None:
-        """Drop `rid`'s ownership of `pages`; pages whose last owner
-        left go back to the pool AND out of the prefix index."""
-        released = self.cache.allocator.free(pages, owner=rid)
-        self.prefix.forget(released)
-
-    def _match_prefix(self, req: Request) -> tuple[int, list[int]]:
-        """Memoized PrefixIndex.match for a queued request (one match
-        serves both the scheduler's budget probe and admission)."""
-        gen = self.prefix.generation
-        hit = self._match_memo.get(req.rid)
-        if hit is None or hit[0] != gen:
-            matched, pages = self.prefix.match(req.effective_prompt())
-            hit = (gen, matched, pages)
-            self._match_memo[req.rid] = hit
-        return hit[1], hit[2]
-
-    def _probe_prefix(self, req: Request) -> int:
-        """Scheduler hook: leading effective-prompt tokens already
-        resident in shareable pages (read-only, no side effects)."""
-        if not self.ecfg.prefix_sharing:
-            return 0
-        return self._match_prefix(req)[0]
+            return False
+        self._preempt(max(victims,
+                          key=lambda r: self._admit_order[r.rid]))
+        return True
 
     def _preempt(self, req: Request) -> None:
         phase = "prefill" if req.state is RequestState.PREFILL else "decode"
-        # a sharer's pages may be co-owned: only this request's
-        # references are dropped, co-owned pages stay resident
-        self._release(req.pages, req.rid)
-        req.pages = []
+        # the backend drops only THIS request's memory (anything shared
+        # with other requests stays resident)
+        self.backend.release(req)
         req.seq_len = 0
         req.prefill_pos = 0
-        req.shared_len = 0
         self.lanes[req.lane] = None
         req.lane = -1
         req.state = RequestState.QUEUED
         req.n_preemptions += 1
-        # its effective prompt grew by the generated tokens, so any
-        # memoized prefix match is stale even at the same generation
-        self._match_memo.pop(req.rid, None)
         self.events.append(("preempt", req.rid, phase, self.now))
 
-    def _grow_decode_lanes(self) -> None:
-        """Prepare every decode lane's write target, oldest admissions
-        first so eviction pressure lands on the newest request: lanes
-        at a page boundary get a fresh page; lanes about to write into
-        a SHARED page (another request references it) COW-fork it to a
-        private copy first."""
-        page = self.ecfg.page_size
-        for req in sorted(self._decoding(),
-                          key=lambda r: self._admit_order[r.rid]):
-            if req.state is not RequestState.DECODE:
-                continue   # evicted earlier in this very loop
-            if req.seq_len >= len(req.pages) * page:
-                self._grow(req)
-            else:
-                self._divert_write(req, req.seq_len // page)
-
-    def _make_room(self, req: Request) -> bool:
-        """Free at least one page by preempting latest-admitted laned
-        requests (evicting a sharer may release nothing physical, so
-        keep going). False if req itself was evicted."""
-        alloc = self.cache.allocator
-        while not alloc.can_alloc(1):
-            victim = self._newest_victim(exclude=None)
-            if victim is None:
-                # unreachable from engine flow (req itself is laned),
-                # but external allocator users can drain the pool
-                raise MemoryError(
-                    "page pool dry with no evictable lane")
-            self._preempt(victim)
-            if victim is req:
-                return False
-        return True
-
-    def _grow(self, req: Request) -> bool:
-        """Give `req` one more page, preempting latest-admitted laned
-        requests under cache pressure. False if req itself was evicted."""
-        if not self._make_room(req):
-            return False
-        req.pages.extend(self.cache.allocator.alloc(1, req.rid))
-        return True
-
-    def _divert_write(self, req: Request, j: int) -> bool:
-        """req is about to write into its page j, whose content other
-        places may still rely on. Two cases: co-owned (refcount > 1) —
-        COW-fork to a private device copy so the write cannot clobber
-        co-owners' K/V; sole-owned but still in the prefix index (the
-        co-owners left, e.g. the original writer finished) — the write
-        diverges the page from its indexed content, so the index entry
-        is dropped before a future admission can match stale K/V.
-        False if req itself was evicted while making room for a fork."""
-        if self.cache.allocator.refcount(req.pages[j]) <= 1:
-            self.prefix.forget([req.pages[j]])
-            return True
-        return self._cow_fork(req, j)
-
-    def _cow_fork(self, req: Request, j: int) -> bool:
-        """Copy-on-write: replace `req`'s shared page j with a private
-        device copy so its next write cannot clobber co-owners' K/V.
-        False if req itself was evicted while making room."""
-        if not self._make_room(req):
-            return False
-        alloc = self.cache.allocator
-        old = req.pages[j]
-        if alloc.refcount(old) <= 1:
-            # co-owners were evicted while making room; the page may
-            # still be indexed, and the write is about to diverge it
-            self.prefix.forget([old])
-            return True
-        [new] = alloc.alloc(1, req.rid)
-        self.cache.kv = cow_copy_page(
-            self.cache.kv, jnp.int32(old), jnp.int32(new))
-        req.pages[j] = new
-        self._release([old], req.rid)
-        self._n_cow += 1
-        self.events.append(("cow", req.rid, old, new, self.now))
-        return True
-
-    def _alloc_chunk(self, req: Request, want: int) -> int:
-        """Allocate pages so `req` can write `want` more prompt tokens.
-        Under pressure, only requests admitted AFTER `req` are
-        preempted (pressure always lands on the newest, so a fresh
-        admission can never evict an older request). Returns the
-        granted token count — possibly < want, or 0, when the pool
-        cannot fund the chunk without touching older requests."""
-        page = self.ecfg.page_size
-        alloc = self.cache.allocator
-        end = req.prefill_pos + want
-        while len(req.pages) * page < end:
-            if alloc.can_alloc(1):
-                req.pages.extend(alloc.alloc(1, req.rid))
-                continue
-            victim = self._newest_victim(exclude=req)
-            if (victim is None or self._admit_order[victim.rid]
-                    < self._admit_order[req.rid]):
-                break
-            self._preempt(victim)
-        n = min(want, len(req.pages) * page - req.prefill_pos)
-        if n <= 0:
-            return 0
-        # copy-on-write: this chunk WRITES positions [ws, we) (rerun
-        # positions below shared_len only read); any of those pages
-        # still co-owned must be forked before the scatter runs
-        ws = max(req.prefill_pos, req.shared_len)
-        we = req.prefill_pos + n
-        if ws < we:
-            for j in range(ws // page, -(-we // page)):
-                if not self._divert_write(req, j):
-                    return 0       # req itself evicted making room
-        return n
-
-    def _admit_shared(self, req: Request) -> None:
-        """Admission-time prefix matching: share every resident page
-        covering a leading run of the request's effective prompt, start
-        the prefill cursor past the shared tokens (capped so the last
-        prompt token always reruns for its logits), and count the hit."""
-        ep = req.effective_prompt()
-        self._prompt_tokens += len(ep)
-        if not self.ecfg.prefix_sharing:
-            return
-        matched, spages = self._match_prefix(req)
-        self._match_memo.pop(req.rid, None)   # ep changes once laned
-        if matched <= 0:
-            return
-        self.cache.allocator.share(spages, req.rid)
-        req.pages = list(spages)
-        req.shared_len = matched
-        req.seq_len = matched
-        req.prefill_pos = min(matched, len(ep) - 1)
-        self._n_prefix_hits += 1
-        self._shared_tokens += matched
-        self.events.append(("share", req.rid, matched, self.now))
-
-    def _register_full_pages(self, req: Request, from_seq: int) -> None:
-        """Index every page that BECAME full while req's resident
-        coverage grew from from_seq to req.seq_len (prefill only —
-        decode-filled pages hold generated tokens no other prompt is
-        likely to revisit, and keeping them out keeps forgetting
-        simple)."""
-        if not self.ecfg.prefix_sharing:
-            return
-        page = self.ecfg.page_size
-        ep = req.effective_prompt()
-        for j in range(from_seq // page, req.seq_len // page):
-            self.prefix.register(ep[:(j + 1) * page], req.pages[j])
+    def _decode_growth_order(self) -> list[Request]:
+        """Decode lanes oldest-admission first, so the backend's
+        memory-pressure eviction lands on the newest request."""
+        return sorted(self._decoding(),
+                      key=lambda r: self._admit_order[r.rid])
 
     def _do_mixed(self, action: Action) -> tuple | None:
-        """Execute a prefill / decode / mixed step: allocate all pages
-        first (decode growth, then prefill chunks — preemption between
-        the halves is resolved before anything runs), then the decode
-        and chunked-prefill forwards, then advance the clock ONCE by
-        the price of the composed token count."""
+        """Execute a prefill / decode / mixed step: fund all memory
+        first (decode write targets, then prefill chunks — preemption
+        between the halves is resolved before anything runs), then the
+        decode and chunked-prefill forwards, then advance the clock
+        ONCE by the price of the composed token count."""
         preempted_before = sum(r.n_preemptions
                                for r in self.requests.values())
 
-        # 1. decode page-boundary growth, oldest admissions first so
-        #    eviction pressure lands on the newest request
+        # 1. make decode write targets safe, oldest admissions first
+        #    so eviction pressure lands on the newest request
         if action.decode:
-            self._grow_decode_lanes()
+            self.backend.prepare_decode(self._decode_growth_order(),
+                                        self._evict_newest)
 
-        page = self.ecfg.page_size
-        # 2. prefill chunk allocation (plan order = admission order,
-        #    then FCFS admissions); a request that was evicted after
-        #    the plan was made is skipped
+        # 2. prefill chunk funding (plan order = admission order, then
+        #    FCFS admissions); a request that was evicted after the
+        #    plan was made is skipped
         chunks: list[tuple[Request, int]] = []
         for rid, want in action.prefill:
             req = self.requests[rid]
@@ -503,79 +309,45 @@ class ServeEngine:
                 req.state = RequestState.PREFILL
                 self._admit_order[req.rid] = self._admit_seq
                 self._admit_seq += 1
-                self._admit_shared(req)
+                self.backend.admit(req)
             elif req.state is not RequestState.PREFILL:
                 continue       # preempted between plan and execution
             remaining = len(req.effective_prompt()) - req.prefill_pos
-            n = self._alloc_chunk(req, min(want, remaining))
+            n = self.backend.fund_prefill(req, min(want, remaining),
+                                          self._evict_newest)
             if n <= 0:
                 continue
             chunks.append((req, n))
-        # a COW fork funding a later chunk may have evicted an earlier
-        # member of this very batch — never run a chunk on freed pages
+        # funding a later chunk may have evicted an earlier member of
+        # this very batch — never run a chunk on released memory
         chunks = [(r, n) for r, n in chunks
                   if r.state is RequestState.PREFILL]
 
-        # 3. decode forward over the lanes that survived allocation.
-        #    If the planned chunks could not be funded at all — the
-        #    missing pages are held by OLDER requests, which eviction
+        # 3. decode forward over the lanes that survived funding. If
+        #    the planned chunks could not be funded at all — the
+        #    missing memory is held by OLDER requests, which eviction
         #    never touches — fall back to a decode round so those
-        #    holders keep progressing and eventually free the pages
-        #    the chunk is waiting on (drain must never stall while
+        #    holders keep progressing and eventually release what the
+        #    chunk is waiting on (drain must never stall while
         #    runnable lanes exist)
         run_decode = bool(action.decode)
         if not chunks and not run_decode and self._decoding():
-            self._grow_decode_lanes()
+            self.backend.prepare_decode(self._decode_growth_order(),
+                                        self._evict_newest)
             run_decode = True
         dec_batch: list[Request] = []
         dec_next = None
         if run_decode:
             dec_batch = self._decoding()
         if dec_batch:
-            b, pmax = self.ecfg.max_batch, self.ecfg.max_pages_per_seq
-            tokens = np.zeros((b, 1), np.int32)
-            tables = np.full((b, pmax), TRASH_PAGE, np.int32)
-            seq_lens = np.zeros((b,), np.int32)
-            active = np.zeros((b,), bool)
-            for req in dec_batch:
-                tokens[req.lane, 0] = req.generated[-1]
-                tables[req.lane, :len(req.pages)] = req.pages
-                seq_lens[req.lane] = req.seq_len
-                active[req.lane] = True
-            logits, kv = self._decode(
-                self.params, jnp.asarray(tokens), self.cache.kv,
-                jnp.asarray(tables), jnp.asarray(seq_lens),
-                jnp.asarray(active))
-            self.cache.kv = kv
+            logits = self.backend.decode_step(dec_batch)
             dec_next = np.asarray(stepslib.greedy_sample(logits))
 
-        # 4. chunked + batched prefill forward
+        # 4. chunked + batched prefill forward (the backend advances
+        #    each request's prefill_pos / seq_len)
         chunk_logits = None
         if chunks:
-            b, c = self.ecfg.max_batch, self.ecfg.prefill_chunk
-            pmax = self.ecfg.max_pages_per_seq
-            tokens = np.zeros((b, c), np.int32)
-            tables = np.full((b, pmax), TRASH_PAGE, np.int32)
-            start = np.zeros((b,), np.int32)
-            lens = np.zeros((b,), np.int32)
-            active = np.zeros((b,), bool)
-            wfrom = np.zeros((b,), np.int32)
-            for i, (req, n) in enumerate(chunks):
-                ep = req.effective_prompt()
-                tokens[i, :n] = ep[req.prefill_pos:req.prefill_pos + n]
-                tables[i, :len(req.pages)] = req.pages
-                start[i] = req.prefill_pos
-                lens[i] = n
-                active[i] = True
-                # positions below shared_len are resident in (possibly
-                # shared) pages: rerun the query, skip the write
-                wfrom[i] = req.shared_len
-            chunk_logits, kv = self._prefill(
-                self.params, jnp.asarray(tokens), self.cache.kv,
-                jnp.asarray(tables), jnp.asarray(start),
-                jnp.asarray(lens), jnp.asarray(active),
-                jnp.asarray(wfrom))
-            self.cache.kv = kv
+            chunk_logits = self.backend.prefill_step(chunks)
 
         # 5. one clock advance for the whole composed step
         n_total = len(dec_batch) + sum(n for _, n in chunks)
@@ -583,9 +355,9 @@ class ServeEngine:
             preempted = sum(r.n_preemptions
                             for r in self.requests.values())
             if preempted > preempted_before:
-                # nothing ran, but freed pages make the re-queued
-                # requests immediately prefillable — progress, not
-                # a stall (drain keeps going)
+                # nothing ran, but the released memory makes the
+                # re-queued requests immediately prefillable —
+                # progress, not a stall (drain keeps going)
                 return ("preempt_all", self.now)
             return None
         self.now += self.cost.price(n_total) * 1e-9
@@ -599,17 +371,11 @@ class ServeEngine:
             if req.done:
                 self._finish(req)
 
-        # 7. apply prefill results: advance cursors; a chunk that
-        #    completes its prompt samples the next token from the last
-        #    VALID chunk position and flips the request to DECODE
+        # 7. apply prefill results: a chunk that completes its prompt
+        #    samples the next token from the last VALID chunk position
+        #    and flips the request to DECODE
         chunk_plan = []
         for i, (req, n) in enumerate(chunks):
-            old_seq = req.seq_len
-            req.prefill_pos += n
-            # a sharer rerunning inside its shared prefix already has
-            # seq_len past the cursor — coverage never shrinks
-            req.seq_len = max(req.seq_len, req.prefill_pos)
-            self._register_full_pages(req, old_seq)
             chunk_plan.append((req.rid, n))
             if req.prefill_pos < len(req.effective_prompt()):
                 continue
@@ -629,9 +395,7 @@ class ServeEngine:
         return ("mixed", tuple(chunk_plan), tuple(dec_rids), self.now)
 
     def _finish(self, req: Request) -> None:
-        if req.pages:
-            self._release(req.pages, req.rid)
-            req.pages = []
+        self.backend.release(req)
         if req.lane >= 0:
             self.lanes[req.lane] = None
             req.lane = -1
@@ -671,10 +435,5 @@ class ServeEngine:
                                   / max(self._util_samples, 1)),
             "logical_cache_utilization": (self._logical_util_sum
                                           / max(self._util_samples, 1)),
-            "n_prefix_hits": self._n_prefix_hits,
-            "prefix_hit_rate": (self._shared_tokens
-                                / max(self._prompt_tokens, 1)),
-            "n_cow_forks": self._n_cow,
-            "physical_pages_allocated":
-                self.cache.allocator.total_allocated,
+            **self.backend.snapshot_metrics(),
         }

@@ -26,8 +26,9 @@ decrements — the page returns to the free list only when its LAST
 owner releases it. `PrefixIndex` maps chained hashes of full-page
 token runs to resident page ids so admission can find shareable pages;
 divergence (writing into a page another request still references) is
-resolved by the engine with `cow_copy_page` — allocate a private page,
-copy the K/V slice on device, swap the page-table entry.
+resolved by the paged-KV backend (`repro.serve.backend`) with
+`cow_copy_page` — allocate a private page, copy the K/V slice on
+device, swap the page-table entry.
 """
 from __future__ import annotations
 
@@ -203,6 +204,11 @@ class PrefixIndex:
 
     def __len__(self) -> int:
         return len(self._entries)
+
+    def pages(self) -> list[int]:
+        """Currently-indexed page ids (for invariant checks: every
+        indexed page must still be resident in the allocator)."""
+        return list(self._entries)
 
     @staticmethod
     def _digest(tokens: np.ndarray) -> bytes:

@@ -41,7 +41,8 @@ compiled steps never see a data-dependent shape.
 
 Only attention families (dense / moe) are supported: paged KV is
 meaningless for the recurrent-state families (rwkv6 / zamba2), which
-keep the static serve path.
+serve through the state-slot pool (`state_model`) — `repro.serve.backend`
+routes each family to its backend.
 """
 from __future__ import annotations
 

@@ -8,17 +8,19 @@ State machine:
 
 Prefill is CHUNKED: a request can sit in PREFILL across many engine
 steps, `prefill_pos` marking how many tokens of its effective prompt
-are already written to the paged cache. With prefix sharing, admission
-may find a leading run of the prompt already resident: `shared_len`
-counts those tokens, `seq_len` covers them, and `prefill_pos` starts
-past them (capped at prompt length - 1 so the last prompt token reruns
-for its logits). A preempted request (from either PREFILL or DECODE)
-is re-queued in *recompute* style: its prompt becomes original-prompt
-+ tokens-generated-so-far, its page references are released (pages
-other requests still share stay resident), `prefill_pos` and
-`shared_len` reset to 0, and a later admission re-matches and
-re-prefills — for greedy sampling this is token-identical to never
-having been preempted.
+the backend has absorbed (written to paged K/V, or folded into a
+recurrent state slot). `seq_len` counts the tokens the backend's
+device state currently covers. Everything else the backend needs to
+serve the request — page tables, refcounted shared prefixes, a state
+slot id — lives in `mem`, an opaque object owned by the engine's
+`SequenceBackend` (see repro.serve.backend): the engine and scheduler
+never look inside it.
+
+A preempted request (from either PREFILL or DECODE) is re-queued in
+*recompute* style: its prompt becomes original-prompt +
+tokens-generated-so-far, the backend releases its `mem`, and a later
+admission re-prefills from scratch — for greedy sampling this is
+token-identical to never having been preempted.
 """
 from __future__ import annotations
 
@@ -35,20 +37,46 @@ class RequestState(enum.Enum):
     DONE = "done"
 
 
+@dataclasses.dataclass(frozen=True)
+class SamplingParams:
+    """Per-request sampling configuration, threaded through
+    `ServeEngine.submit()` into the `Request`.
+
+    Greedy-only for now: `temperature=0.0` (argmax) is the single
+    implemented semantics and the anchor of the token-identity test
+    suite. The fields exist so the planned temperature/top-k work can
+    land without another submit()/Request API break; requesting them
+    today is rejected at submit() with NotImplementedError.
+    """
+    temperature: float = 0.0     # 0.0 = greedy argmax
+    top_k: int = 0               # 0 = no truncation
+
+    def __post_init__(self):
+        if self.temperature < 0.0:
+            raise ValueError(
+                f"temperature must be >= 0, got {self.temperature}")
+        if self.top_k < 0:
+            raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+
+    @property
+    def greedy(self) -> bool:
+        return self.temperature == 0.0 and self.top_k == 0
+
+
 @dataclasses.dataclass
 class Request:
     rid: int
     prompt: np.ndarray               # (S,) i32 — original prompt
     max_new_tokens: int
     arrival_time: float = 0.0
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
     state: RequestState = RequestState.QUEUED
     generated: list[int] = dataclasses.field(default_factory=list)
-    pages: list[int] = dataclasses.field(default_factory=list)
-    seq_len: int = 0                 # tokens currently in the paged cache
+    mem: object | None = None        # backend-owned sequence memory
+    #                                  (page table / state slot / ...)
+    seq_len: int = 0                 # tokens covered by device state
     prefill_pos: int = 0             # effective-prompt tokens prefilled
-    shared_len: int = 0              # leading tokens resident via prefix
-    #                                  sharing at admission: prefill skips
-    #                                  their writes, seq_len covers them
     lane: int = -1                   # batch lane (prefill or decode), -1 = none
     n_preemptions: int = 0
     # metrics (virtual-clock seconds)

@@ -5,9 +5,9 @@ Each engine step the scheduler composes ONE action:
   prefill — run one fixed-size chunk (<= prefill_chunk tokens) for a
             BATCH of requests: every request already mid-prefill
             continues its next chunk, and head-of-line queued requests
-            (strict FCFS) are admitted into free lanes while the page
-            budget lasts. A prompt longer than the chunk size spans
-            multiple steps instead of stalling the decode lanes.
+            (strict FCFS) are admitted into free lanes while the
+            memory budget lasts. A prompt longer than the chunk size
+            spans multiple steps instead of stalling the decode lanes.
   decode  — one token for every active decode lane.
   mixed   — prefill chunks AND decode composed into a single step,
             priced as one pass over the combined token count — the
@@ -34,20 +34,20 @@ Two policies:
          the original head-of-line guarantee when chunking is off.
 
 The scheduler is a pure function of its inputs — determinism under a
-fixed trace is a test invariant. It plans page usage against the free
-count but never touches the allocator; eviction under cache pressure
-lives in the engine. Admission budgeting is PREFIX-SHARING AWARE: the
-engine passes a `prefix_probe` that reports how many leading prompt
-tokens of a queued candidate are already resident in shareable pages,
-and the plan charges the free-page budget only for the UNSHARED pages
-of the candidate's first chunk (a fully-resident prompt admits at zero
-page cost — it only reruns its last token for logits). One exception to the page budget: the OLDEST
-mid-prefill request is always planned, because the engine funds it by
-preempting newer requests (mirroring decode-growth eviction order), so
-a tight pool can never deadlock a half-prefilled request. When even
-that fails — the missing pages are held by requests OLDER than the
-prefiller, which eviction never touches — the engine executes a decode
-round in the chunk batch's place so the holders keep progressing.
+fixed trace is a test invariant. It knows NOTHING about how sequence
+memory is organized: each decide() receives a fresh `BudgetProbe` from
+the engine's `SequenceBackend` (see repro.serve.backend) and charges
+candidate chunks and admissions against it — page math, state-slot
+counting, and the prefix-share discount (an admission is billed only
+for memory its shared prefix doesn't already cover) all live behind
+the probe. Eviction under memory pressure lives in the engine. One
+exception to the budget: the OLDEST mid-prefill request is always
+planned (`forced=True`), because the engine funds it by evicting newer
+requests (mirroring decode-growth eviction order), so a tight pool can
+never deadlock a half-prefilled request. When even that fails — the
+missing memory is held by requests OLDER than the prefiller, which
+eviction never touches — the engine executes a decode round in the
+chunk batch's place so the holders keep progressing.
 """
 from __future__ import annotations
 
@@ -79,74 +79,50 @@ class SchedulerConfig:
 
 class Scheduler:
     def __init__(self, sched_cfg: SchedulerConfig,
-                 cost: ArtemisCostModel | None, page_size: int,
-                 prefill_chunk: int = 32, prefix_probe=None):
+                 cost: ArtemisCostModel | None, prefill_chunk: int = 32):
         if sched_cfg.policy == "cost" and cost is None:
             raise ValueError("cost policy needs a cost model")
         if prefill_chunk < 1:
             raise ValueError("prefill_chunk must be >= 1")
         self.cfg = sched_cfg
         self.cost = cost
-        self.page_size = page_size
         self.prefill_chunk = prefill_chunk
-        # prefix_probe(request) -> leading prompt tokens already resident
-        # in shareable pages (0 = no sharing); must be read-only
-        self.prefix_probe = prefix_probe or (lambda r: 0)
 
     def _plan_chunks(self, queued: list[Request],
                      prefilling: list[Request], free_lanes: int,
-                     free_pages: int) -> tuple[tuple[int, int], ...]:
-        """Compose this step's prefill chunk batch within the page and
-        lane budgets. Continuing requests already own a lane; queued
-        admissions consume one free lane each."""
-        page, chunk = self.page_size, self.prefill_chunk
-        budget = free_pages
+                     budget) -> tuple[tuple[int, int], ...]:
+        """Compose this step's prefill chunk batch within the lane
+        budget and the backend's memory budget. Continuing requests
+        already own a lane; queued admissions consume one free lane
+        each."""
+        chunk = self.prefill_chunk
         plan: list[tuple[int, int]] = []
         for i, r in enumerate(prefilling):
-            pos = r.prefill_pos
-            remaining = len(r.effective_prompt()) - pos
-            # resident coverage: chunks written so far plus any shared
-            # prefix (a sharer's cursor can sit BELOW its resident
-            # tokens while it reruns the last prompt token for logits)
-            covered = max(pos, r.shared_len)
-            held = -(-covered // page)       # pages already allocated
-            headroom = held * page - pos     # free slots in held pages
-            if i == 0:
-                n = min(chunk, remaining)    # engine preempts to fund it
-            else:
-                n = min(chunk, remaining, headroom + budget * page)
+            remaining = len(r.effective_prompt()) - r.prefill_pos
+            n = budget.grant_continue(r, min(chunk, remaining),
+                                      forced=(i == 0))
             if n <= 0:
                 continue
-            budget -= max(0, -(-(pos + n) // page) - held)
-            budget = max(budget, 0)
             plan.append((r.rid, n))
         lanes_left = free_lanes
         for r in queued:
             if lanes_left <= 0:
                 break
-            ep_len = len(r.effective_prompt())
-            # at least the last prompt token must run for its logits,
-            # so a full prefix hit still admits a 1-token rerun chunk
-            shared = min(self.prefix_probe(r), ep_len)
-            start = min(shared, ep_len - 1)
-            held = -(-shared // page)        # pages sharing will grant
-            n = min(chunk, ep_len - start,
-                    held * page + budget * page - start)
+            n = budget.grant_admit(r, chunk)
             if n <= 0:
                 break   # strict FCFS: never skip the head to admit later
-            budget -= max(0, -(-(start + n) // page) - held)
             lanes_left -= 1
             plan.append((r.rid, n))
         return tuple(plan)
 
     def decide(self, queued: list[Request], next_arrival: float | None,
                prefilling: list[Request], decoding: list[Request],
-               free_lanes: int, free_pages: int) -> Action:
+               free_lanes: int, budget) -> Action:
         """queued: arrived, FCFS-ordered QUEUED requests; prefilling:
         mid-prefill requests in admission order; decoding: active
-        decode-lane requests."""
-        plan = self._plan_chunks(queued, prefilling, free_lanes,
-                                 free_pages)
+        decode-lane requests; budget: a fresh BudgetProbe from the
+        engine's backend (consumed by this decide())."""
+        plan = self._plan_chunks(queued, prefilling, free_lanes, budget)
         n_chunk = sum(n for _, n in plan)
         n_dec = len(decoding)
 

@@ -1,0 +1,162 @@
+"""Recurrent-state forward passes for the serving engine.
+
+The attention families grow K/V with the sequence, so `paged_model`
+pools fixed-size token pages. The recurrent families (rwkv6 / zamba2)
+carry FIXED-SIZE per-sequence state — a wkv matrix + token-shift
+activations, or Mamba SSD/conv states plus a bounded attention ring —
+so the serve-side pool is a stack of whole state SLOTS, one per
+in-flight sequence, and "allocation" is picking a free slot index.
+
+Layout: every leaf of the family's single-sequence decode cache
+(`model.init_cache(cfg, batch=1, max_len)`) gains a leading
+`(n_slots,)` axis. Slot 0 is RESERVED as the trash slot, mirroring the
+paged trash page: the compiled steps run at a fixed `max_batch` lane
+shape, and idle lanes gather/scatter slot 0 so shapes never depend on
+how many lanes are live.
+
+Both step builders jit-compile exactly once per (cfg, policy):
+
+  make_slot_decode(cfg, policy) ->
+      (params, tokens (B, 1), pool, slot_ids (B,)) -> (logits (B, V), pool)
+    One token per lane through the family's own `model.apply`, vmapped
+    over lanes at batch=1 — per-lane vmap (rather than one batched
+    apply) is what lets each lane carry its OWN absolute position /
+    ring index inside its slot, which a shared scalar cache index
+    cannot express once lanes decode at different sequence lengths.
+
+  make_slot_prefill_chunk(cfg, policy) ->
+      (params, tokens (B, C), pool, slot_ids (B,), chunk_lens (B,),
+       active (B,)) -> (logits (B, C, V), pool)
+    One fixed-size chunk of C prompt tokens per lane, absorbed into the
+    lane's slot by a lax.scan of single-token applies. Recurrent state
+    is order-dependent, so padding cannot be masked out of a batched
+    multi-token apply the way paged attention masks its scatter;
+    instead each scanned step keeps the PREVIOUS state for positions at
+    or beyond chunk_lens[b] (and for inactive lanes), making arbitrary
+    per-lane chunk lengths exact at one compiled shape. Logits are
+    returned for every chunk position; the engine samples the last
+    VALID one when a chunk completes its prompt.
+
+Only recurrent families (rwkv6 / zamba2) are supported: attention
+families want token pages, not whole-state slots — `repro.serve.backend`
+routes each family to its backend.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.policy import ArithmeticPolicy
+from repro.models import model
+from repro.models.config import ModelConfig
+
+TRASH_SLOT = 0
+
+RECURRENT_FAMILIES = ("rwkv6", "zamba2")
+
+
+def _check_family(cfg: ModelConfig) -> None:
+    if cfg.family not in RECURRENT_FAMILIES:
+        raise ValueError(
+            f"state-slot serving supports recurrent families "
+            f"{RECURRENT_FAMILIES}, got {cfg.family!r}")
+    if cfg.modality != "text":
+        raise ValueError(
+            f"state-slot serving supports text modality, got "
+            f"{cfg.modality!r}")
+
+
+def init_slot_pool(cfg: ModelConfig, n_slots: int, max_seq_len: int,
+                   dtype=jnp.float32):
+    """(pool, init_slot): `pool` stacks `n_slots` copies of the
+    family's batch=1 decode cache along a new leading axis (slot 0 is
+    the trash slot); `init_slot` is the pristine single cache, kept
+    around so freed slots can be reset on re-allocation (a zeroed slot
+    is NOT pristine for every family — zamba2's ring positions
+    initialize to int32 max so unwritten K/V stays masked)."""
+    _check_family(cfg)
+    if n_slots < 2:
+        raise ValueError("need >= 2 slots (slot 0 is the trash slot)")
+    if max_seq_len < 2:
+        raise ValueError(f"max_seq_len must be >= 2, got {max_seq_len}")
+    init_slot = model.init_cache(cfg, 1, max_seq_len, dtype=dtype)
+    pool = jax.tree.map(
+        lambda a: jnp.repeat(a[None], n_slots, axis=0), init_slot)
+    return pool, init_slot
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def reset_slot(pool, init_slot, slot):
+    """Restore `slot` to the pristine initial cache (the slot-pool
+    analog of handing out a fresh page). `slot` is a traced scalar so
+    every reset shares one compiled scatter; the pool is donated so
+    the reset updates it in place instead of copying every slot."""
+    return jax.tree.map(
+        lambda p, ini: p.at[slot].set(ini), pool, init_slot)
+
+
+def make_slot_decode(cfg: ModelConfig,
+                     policy: ArithmeticPolicy = ArithmeticPolicy()):
+    """Returns decode(params, tokens, pool, slot_ids) ->
+    (logits (B, V), pool). tokens: (B, 1) i32; slot_ids: (B,) i32, the
+    slot each lane owns (idle lanes: TRASH_SLOT — their garbage state
+    evolves in slot 0 and is never read by a live lane)."""
+    _check_family(cfg)
+
+    def decode(params, tokens, pool, slot_ids):
+        def one_lane(tok, st):
+            # tok: (1,) — one token at batch=1 through the family's own
+            # apply, so the slot's internal index/ring bookkeeping is
+            # fully per-lane
+            logits, _, new_st = model.apply(
+                params, cfg, {"tokens": tok[None]}, policy=policy,
+                cache=st, remat=False)
+            return logits[0, -1], new_st
+
+        states = jax.tree.map(lambda a: a[slot_ids], pool)
+        logits, new_states = jax.vmap(one_lane)(tokens, states)
+        new_pool = jax.tree.map(
+            lambda p, n: p.at[slot_ids].set(n), pool, new_states)
+        return logits, new_pool
+
+    return decode
+
+
+def make_slot_prefill_chunk(cfg: ModelConfig,
+                            policy: ArithmeticPolicy = ArithmeticPolicy()):
+    """Returns chunk(params, tokens, pool, slot_ids, chunk_lens, active)
+    -> (logits (B, C, V), pool). Row b absorbs chunk_lens[b] valid
+    prompt tokens into lane b's slot; positions at or beyond
+    chunk_lens[b] (and whole inactive rows) leave the state untouched,
+    so the fixed (B, C) shape serves every per-lane chunk length."""
+    _check_family(cfg)
+
+    def chunk(params, tokens, pool, slot_ids, chunk_lens, active):
+        def one_lane(tok_row, st, n_valid, act):
+            c = tok_row.shape[0]
+
+            def body(st, xs):
+                tok_t, t = xs
+                logits, _, new_st = model.apply(
+                    params, cfg, {"tokens": tok_t[None, None]},
+                    policy=policy, cache=st, remat=False)
+                keep = act & (t < n_valid)
+                st = jax.tree.map(
+                    lambda new, old: jnp.where(keep, new, old),
+                    new_st, st)
+                return st, logits[0, 0]
+
+            st_f, logits_seq = jax.lax.scan(
+                body, st, (tok_row, jnp.arange(c, dtype=jnp.int32)))
+            return logits_seq, st_f
+
+        states = jax.tree.map(lambda a: a[slot_ids], pool)
+        logits, new_states = jax.vmap(one_lane)(
+            tokens, states, chunk_lens, active)
+        new_pool = jax.tree.map(
+            lambda p, n: p.at[slot_ids].set(n), pool, new_states)
+        return logits, new_pool
+
+    return chunk

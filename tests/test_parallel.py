@@ -16,7 +16,7 @@ import jax  # noqa: E402
 import jax.numpy as jnp  # noqa: E402
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
-from jax.sharding import Mesh, NamedSharding, PartitionSpec as P  # noqa: E402
+from jax.sharding import PartitionSpec as P  # noqa: E402
 from jax.experimental.shard_map import shard_map  # noqa: E402
 
 from repro import configs  # noqa: E402

@@ -460,8 +460,8 @@ def test_engine_token_identical_to_sequential(dense_setup, prefill_chunk):
                                     it.max_new_tokens)
         assert got[i].tolist() == ref, \
             f"request {i} diverged at chunk={prefill_chunk}"
-    eng.cache.allocator.check_invariants()
-    assert eng.cache.allocator.n_used == 0, "pages leaked after drain"
+    eng.backend.cache.allocator.check_invariants()
+    assert eng.backend.cache.allocator.n_used == 0, "pages leaked after drain"
 
 
 def test_engine_batched_prefill_shares_a_step(dense_setup):
@@ -504,8 +504,8 @@ def test_engine_preemption_under_cache_pressure(dense_setup):
     assert any(e[0] == "preempt" and e[2] == "prefill"
                for e in eng.events), "no preemption landed mid-prefill"
     assert m["n_done"] == 6
-    eng.cache.allocator.check_invariants()
-    assert eng.cache.allocator.n_used == 0
+    eng.backend.cache.allocator.check_invariants()
+    assert eng.backend.cache.allocator.n_used == 0
     # recompute-style preemption keeps greedy outputs token-identical
     got = eng.results()
     for i, it in enumerate(trace):
@@ -529,11 +529,11 @@ def test_engine_drain_survives_all_lanes_preempted(dense_setup):
     assert ev[0] == "prefill"          # whole prompt in one chunk
     # external pressure: hog every free page so the decode lane's
     # page-boundary growth can only preempt the lane itself
-    hog = eng.cache.allocator.alloc(eng.cache.allocator.n_free, owner=-1)
+    hog = eng.backend.cache.allocator.alloc(eng.backend.cache.allocator.n_free, owner=-1)
     ev = eng.step()
     assert ev is not None and ev[0] == "preempt_all", ev
     assert eng.requests[rid].state is RequestState.QUEUED
-    eng.cache.allocator.free(hog)
+    eng.backend.cache.allocator.free(hog)
     eng.drain()                         # must not raise "drain stalled"
     assert eng.metrics()["n_done"] == 1
     ref = _sequential_reference(cfg, params, prompt, 6)
@@ -559,8 +559,8 @@ def test_engine_unfundable_chunk_falls_back_to_decode(dense_setup,
         eng.submit(prompt, max_new_tokens=glen)
     eng.drain()                         # must not raise "drain stalled"
     assert eng.metrics()["n_done"] == 3
-    eng.cache.allocator.check_invariants()
-    assert eng.cache.allocator.n_used == 0
+    eng.backend.cache.allocator.check_invariants()
+    assert eng.backend.cache.allocator.n_used == 0
     for i, (prompt, glen) in enumerate(reqs):
         ref = _sequential_reference(cfg, params, prompt, glen)
         assert eng.results()[i].tolist() == ref, f"request {i} diverged"
@@ -635,7 +635,7 @@ def test_engine_moe_family_smoke():
     eng.drain()
     res = eng.results()
     assert len(res[0]) == 3 and len(res[1]) == 2
-    assert eng.cache.allocator.n_used == 0
+    assert eng.backend.cache.allocator.n_used == 0
 
 
 def test_engine_submit_validation(dense_setup):
@@ -688,15 +688,16 @@ def test_engine_prefix_sharing_cow_and_sharer_preemption(dense_setup):
         assert eng.step() is not None, "drained before sharers admitted"
     shares = [e for e in eng.events if e[0] == "share"]
     assert [(e[1], e[2]) for e in shares] == [(1, 16), (2, 16), (3, 13)]
-    alloc = eng.cache.allocator
-    assert any(alloc.refcount(p) > 1 for p in eng.requests[0].pages), \
+    alloc = eng.backend.cache.allocator
+    assert any(alloc.refcount(p) > 1
+               for p in eng.requests[0].mem.pages), \
         "no page is physically shared"
     # preempt sharer 1 mid-flight: co-owned pages must stay resident
     victim = eng.requests[1]
     assert victim.state is not RequestState.DONE
-    shared_pages = [p for p in victim.pages if alloc.refcount(p) > 1]
+    shared_pages = [p for p in victim.mem.pages if alloc.refcount(p) > 1]
     eng._preempt(victim)
-    assert victim.state is RequestState.QUEUED and victim.pages == []
+    assert victim.state is RequestState.QUEUED and victim.mem is None
     for p in shared_pages:
         assert alloc.refcount(p) >= 1, "preempting a sharer freed a page"
     eng.drain()
@@ -708,8 +709,8 @@ def test_engine_prefix_sharing_cow_and_sharer_preemption(dense_setup):
     assert any(e[0] == "preempt" and e[1] == 1 for e in eng.events)
     assert m["n_prefix_hits"] >= 4    # incl. the re-admitted sharer
     assert m["prefix_hit_rate"] > 0
-    eng.cache.allocator.check_invariants()
-    assert eng.cache.allocator.n_used == 0, "pages leaked after drain"
+    eng.backend.cache.allocator.check_invariants()
+    assert eng.backend.cache.allocator.n_used == 0, "pages leaked after drain"
     assert all(r.t_first_token is not None
                for r in eng.requests.values())
     for i, (p, g) in enumerate(zip(prompts, gens)):
@@ -735,8 +736,8 @@ def test_engine_prefix_sharing_saves_physical_pages(dense_setup):
             prefill_chunk=32, prefix_sharing=sharing))
         eng.submit_trace(trace)
         eng.drain()
-        eng.cache.allocator.check_invariants()
-        assert eng.cache.allocator.n_used == 0
+        eng.backend.cache.allocator.check_invariants()
+        assert eng.backend.cache.allocator.n_used == 0
         results.append(eng.results())
         mets.append(eng.metrics())
     m_share, m_none = mets
@@ -788,12 +789,12 @@ def test_engine_sole_owner_write_invalidates_index(dense_setup):
     # sole-owner write: no COW fork, but the diverged page must be out
     # of the index — only the untouched first page still matches
     assert eng.metrics()["n_cow_forks"] == 0
-    assert eng.prefix.match(base)[0] == 8
+    assert eng.backend.prefix.match(base)[0] == 8
     re_ = eng.submit(base, max_new_tokens=4,
                      arrival_time=eng.now)   # original prompt again
     eng.drain()
-    eng.cache.allocator.check_invariants()
-    assert eng.cache.allocator.n_used == 0
+    eng.backend.cache.allocator.check_invariants()
+    assert eng.backend.cache.allocator.n_used == 0
     for rid, prompt, glen in ((ra, base, 2), (rd, base[:13], 6),
                               (re_, base, 4)):
         ref = _sequential_reference(cfg, params, prompt, glen)
@@ -804,29 +805,32 @@ def test_scheduler_prices_only_unshared_pages(dense_setup):
     """Admission budgeting with a prefix probe: a fully-resident prompt
     admits at ZERO page cost (only its last token reruns for logits), a
     half-resident prompt is charged only its unshared tail."""
-    from repro.serve import Request, Scheduler, SchedulerConfig
+    from repro.serve import PagedBudget, Request, Scheduler, SchedulerConfig
     cfg, _ = dense_setup
     cm = ArtemisCostModel(cfg)
     shared = {1: 16, 2: 8, 3: 0}
-    sched = Scheduler(SchedulerConfig(policy="fcfs"), cm, page_size=8,
-                      prefill_chunk=32,
-                      prefix_probe=lambda r: shared[r.rid])
+    sched = Scheduler(SchedulerConfig(policy="fcfs"), cm,
+                      prefill_chunk=32)
+
+    def budget(free_pages):
+        return PagedBudget(8, free_pages, probe=lambda r: shared[r.rid])
+
     full = Request(rid=1, prompt=np.zeros(16, np.int32), max_new_tokens=2)
     part = Request(rid=2, prompt=np.zeros(12, np.int32), max_new_tokens=2)
     cold = Request(rid=3, prompt=np.zeros(12, np.int32), max_new_tokens=2)
     common = dict(next_arrival=None, prefilling=[], decoding=[])
     # zero free pages: only the fully-resident prompt can admit
-    a = sched.decide([full], free_lanes=2, free_pages=0, **common)
+    a = sched.decide([full], free_lanes=2, budget=budget(0), **common)
     assert a.kind == "prefill" and a.prefill == ((1, 1),)
-    a = sched.decide([part], free_lanes=2, free_pages=0, **common)
+    a = sched.decide([part], free_lanes=2, budget=budget(0), **common)
     assert a.kind == "idle"
     # one free page funds exactly the half-resident prompt's tail; the
     # cold request behind it is starved (strict FCFS)
-    a = sched.decide([full, part, cold], free_lanes=3, free_pages=1,
+    a = sched.decide([full, part, cold], free_lanes=3, budget=budget(1),
                      **common)
     assert a.prefill == ((1, 1), (2, 4))
     # without sharing the probe reports 0 and the old budgeting holds
-    a = sched.decide([cold], free_lanes=3, free_pages=2, **common)
+    a = sched.decide([cold], free_lanes=3, budget=budget(2), **common)
     assert a.prefill == ((3, 12),)
 
 
@@ -865,43 +869,45 @@ def test_cost_policy_defers_unchunked_long_prefill_while_decoding(
     boundary survives: a multi-thousand-token prefill prices worse per
     token than a busy decode batch, so the cost policy runs decode
     first; fcfs stalls the lanes behind the prefill instead."""
-    from repro.serve import Request, Scheduler, SchedulerConfig
+    from repro.serve import PagedBudget, Request, Scheduler, SchedulerConfig
     cfg, _ = dense_setup
     cm = ArtemisCostModel(cfg)
-    page = 8
     huge = Request(rid=0, prompt=np.zeros(8192, np.int32),
                    max_new_tokens=4)
     small = Request(rid=1, prompt=np.zeros(12, np.int32),
                     max_new_tokens=4)
     decoding = _dummy_requests(8)
-    cost = Scheduler(SchedulerConfig(policy="cost"), cm, page,
+    cost = Scheduler(SchedulerConfig(policy="cost"), cm,
                      prefill_chunk=8192)
-    fcfs = Scheduler(SchedulerConfig(policy="fcfs"), cm, page,
+    fcfs = Scheduler(SchedulerConfig(policy="fcfs"), cm,
                      prefill_chunk=8192)
-    common = dict(next_arrival=None, prefilling=[], decoding=decoding,
-                  free_lanes=2, free_pages=4096)
-    assert cost.decide([huge], **common).kind == "decode"
-    assert fcfs.decide([huge], **common).kind == "prefill"
+
+    def common():
+        return dict(next_arrival=None, prefilling=[], decoding=decoding,
+                    free_lanes=2, budget=PagedBudget(8, 4096))
+
+    assert cost.decide([huge], **common()).kind == "decode"
+    assert fcfs.decide([huge], **common()).kind == "prefill"
     # short prompts ride the falling edge of the per-token price curve:
     # cost composes them WITH the decode batch; fcfs stays prompt-first
-    a = cost.decide([small], **common)
+    a = cost.decide([small], **common())
     assert a.kind == "mixed" and a.prefill == ((1, 12),) and a.decode
-    assert fcfs.decide([small], **common).kind == "prefill"
+    assert fcfs.decide([small], **common()).kind == "prefill"
 
 
 def test_cost_policy_chunks_long_prefill_into_mixed_steps(dense_setup):
     """With chunking ON, the same long prompt no longer blocks: the
     scheduler plans one chunk and composes it with the decode batch."""
-    from repro.serve import Request, Scheduler, SchedulerConfig
+    from repro.serve import PagedBudget, Request, Scheduler, SchedulerConfig
     cfg, _ = dense_setup
     cm = ArtemisCostModel(cfg)
     huge = Request(rid=0, prompt=np.zeros(8192, np.int32),
                    max_new_tokens=4)
-    sched = Scheduler(SchedulerConfig(policy="cost"), cm, 8,
+    sched = Scheduler(SchedulerConfig(policy="cost"), cm,
                       prefill_chunk=64)
     a = sched.decide([huge], next_arrival=None, prefilling=[],
                      decoding=_dummy_requests(8), free_lanes=2,
-                     free_pages=4096)
+                     budget=PagedBudget(8, 4096))
     assert a.kind == "mixed" and a.prefill == ((0, 64),) and a.decode
 
 
@@ -909,33 +915,37 @@ def test_scheduler_plans_batched_and_continuing_chunks(dense_setup):
     """Chunk planning: mid-prefill requests continue first (oldest
     admission uncapped by the page budget), then FCFS admissions fill
     free lanes while the budget lasts."""
-    from repro.serve import Request, Scheduler, SchedulerConfig
+    from repro.serve import PagedBudget, Request, Scheduler, SchedulerConfig
     cfg, _ = dense_setup
     cm = ArtemisCostModel(cfg)
-    sched = Scheduler(SchedulerConfig(policy="fcfs"), cm, page_size=4,
+    sched = Scheduler(SchedulerConfig(policy="fcfs"), cm,
                       prefill_chunk=8)
+
+    def budget(free_pages):
+        return PagedBudget(4, free_pages)
+
     mid = Request(rid=0, prompt=np.zeros(20, np.int32), max_new_tokens=2)
     mid.state = RequestState.PREFILL
     mid.prefill_pos = 8
     q1 = Request(rid=1, prompt=np.zeros(6, np.int32), max_new_tokens=2)
     q2 = Request(rid=2, prompt=np.zeros(9, np.int32), max_new_tokens=2)
     a = sched.decide([q1, q2], next_arrival=None, prefilling=[mid],
-                     decoding=[], free_lanes=2, free_pages=100)
+                     decoding=[], free_lanes=2, budget=budget(100))
     assert a.kind == "prefill"
     assert a.prefill == ((0, 8), (1, 6), (2, 8))
     # tight page budget: 3 free pages — the continuing request is
     # planned anyway and charged 2 pages, the first admission is
     # clipped to the 1 remaining page (4 tokens), the second starved
     a = sched.decide([q1, q2], next_arrival=None, prefilling=[mid],
-                     decoding=[], free_lanes=2, free_pages=3)
+                     decoding=[], free_lanes=2, budget=budget(3))
     assert a.prefill == ((0, 8), (1, 4))
     # budget exhausted by the forced continuation -> no admissions
     a = sched.decide([q1, q2], next_arrival=None, prefilling=[mid],
-                     decoding=[], free_lanes=2, free_pages=1)
+                     decoding=[], free_lanes=2, budget=budget(1))
     assert a.prefill == ((0, 8),)
     # no lanes -> no admissions, continuation only
     a = sched.decide([q1, q2], next_arrival=None, prefilling=[mid],
-                     decoding=[], free_lanes=0, free_pages=100)
+                     decoding=[], free_lanes=0, budget=budget(100))
     assert a.prefill == ((0, 8),)
 
 

@@ -1,0 +1,421 @@
+"""Backend-conformance suite for the sequence-memory API.
+
+`repro.serve.backend.SequenceBackend` is the contract the engine and
+scheduler program against; this module drives BOTH implementations —
+the paged-KV backend (attention families) and the state-slot backend
+(recurrent families) — through the same lifecycle, preemption,
+budget-probe, and invariant checks, parametrized by family. The
+recurrent-specific acceptance pin — rwkv6 engine decode token-identical
+to the sequential static path — lives here too, alongside the
+submit-validation and SamplingParams satellites.
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+try:
+    from hypothesis import given, settings
+    from hypothesis import strategies as st
+except ImportError:
+    class _StrategyStub:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _StrategyStub()
+
+    def given(*a, **k):
+        return pytest.mark.skip(
+            reason="property test needs hypothesis (requirements-dev.txt)")
+
+    def settings(*a, **k):
+        return lambda f: f
+
+from repro import configs
+from repro.launch import steps as stepslib
+from repro.models import model
+from repro.serve import (
+    EngineConfig,
+    PagedKVBackend,
+    SamplingParams,
+    ServeEngine,
+    StateSlotBackend,
+    TrafficConfig,
+    make_backend,
+    synth_trace,
+)
+from repro.serve.request import RequestState
+
+# the conformance axis: one arch per backend, all fp32 so greedy
+# token-identity is numerically comfortable
+BACKENDS = {
+    "paged": ("qwen3_8b", PagedKVBackend),
+    "slot": ("rwkv6_3b", StateSlotBackend),
+}
+
+
+@functools.lru_cache(maxsize=None)
+def _setup(kind):
+    arch, _ = BACKENDS[kind]
+    cfg = dataclasses.replace(configs.get_config(arch, smoke=True),
+                              compute_dtype="float32")
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _engine(kind, **overrides):
+    cfg, params = _setup(kind)
+    kw = dict(page_size=8, n_pages=64, max_batch=3, max_pages_per_seq=8,
+              prefill_chunk=8, max_seq_len=64, cache_dtype="float32")
+    kw.update(overrides)
+    return ServeEngine(cfg, params=params, ecfg=EngineConfig(**kw))
+
+
+@functools.lru_cache(maxsize=4)
+def _dense_steps(cfg):
+    return (jax.jit(stepslib.make_prefill_step(cfg)),
+            jax.jit(stepslib.make_decode_step(cfg)))
+
+
+_REF_CACHE: dict = {}
+
+
+def _sequential_reference(cfg, params, prompt, n_new):
+    """Greedy decode of one request alone on the static sequential
+    path (whole-prompt prefill + per-token decode at batch=1)."""
+    key = (cfg.name, prompt.tobytes(), n_new)
+    if key in _REF_CACHE:
+        return _REF_CACHE[key]
+    prefill, decode = _dense_steps(cfg)
+    cache = model.init_cache(cfg, 1, len(prompt) + n_new,
+                             dtype=jnp.float32)
+    logits, cache = prefill(params, {"tokens": jnp.asarray(prompt[None])},
+                            cache)
+    out = [int(stepslib.greedy_sample(logits)[0])]
+    for _ in range(n_new - 1):
+        logits, cache = decode(
+            params, jnp.asarray([[out[-1]]], jnp.int32), cache)
+        out.append(int(stepslib.greedy_sample(logits)[0]))
+    _REF_CACHE[key] = out
+    return out
+
+
+def _trace(cfg, n=4, seed=1, plo=3, phi=18, glo=2, ghi=8):
+    # saturating arrivals: virtual step prices are ~ns, so the rate
+    # must be high enough that requests actually overlap in-flight
+    return synth_trace(TrafficConfig(
+        n_requests=n, arrival_rate=1e8, prompt_len_min=plo,
+        prompt_len_max=phi, gen_len_min=glo, gen_len_max=ghi,
+        vocab_size=cfg.vocab_size, seed=seed))
+
+
+# ---------------------------------------------------------------------------
+# routing + protocol surface
+# ---------------------------------------------------------------------------
+
+
+def test_make_backend_routes_by_family():
+    ecfg = EngineConfig()
+    for kind, (arch, cls) in BACKENDS.items():
+        eng = _engine(kind)
+        assert isinstance(eng.backend, cls)
+        assert eng.cfg.family in cls.families
+
+    class _FakeCfg:
+        family = "no_such_family"
+
+    with pytest.raises(ValueError, match="no sequence backend"):
+        make_backend(_FakeCfg(), ecfg, None, None,
+                     emit=lambda e: None, clock=lambda: 0.0)
+
+
+@pytest.mark.parametrize("kind", list(BACKENDS))
+def test_engine_has_no_backend_internals(kind):
+    """The api_redesign acceptance shape: the engine only ever holds
+    backend state through `backend` and per-request `mem`."""
+    eng = _engine(kind)
+    for attr in ("cache", "prefix", "pool", "allocator"):
+        assert not hasattr(eng, attr), \
+            f"engine leaks backend internals via .{attr}"
+
+
+# ---------------------------------------------------------------------------
+# lifecycle conformance
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", list(BACKENDS))
+def test_lifecycle_invariants_after_every_step(kind):
+    """Drive a small trace step by step: backend invariants hold after
+    EVERY engine step, request mem exists exactly while laned, and all
+    memory is released at drain."""
+    eng = _engine(kind)
+    cfg, _ = _setup(kind)
+    eng.submit_trace(_trace(cfg, n=4, seed=3))
+    for _ in range(10_000):
+        ev = eng.step()
+        eng.backend.check_invariants()
+        for r in eng.requests.values():
+            if r.state in (RequestState.PREFILL, RequestState.DECODE):
+                assert r.mem is not None and r.lane >= 0
+            else:
+                assert r.mem is None and r.lane == -1
+        if ev is None:
+            break
+    m = eng.metrics()
+    assert m["n_done"] == 4
+    phys, logical = eng.backend.utilization()
+    assert phys == 0.0 and logical == 0.0, "memory leaked after drain"
+
+
+@pytest.mark.parametrize("kind", list(BACKENDS))
+def test_token_identity_vs_sequential(kind):
+    """The anchor: engine-mode greedy outputs are token-identical to
+    the static sequential path — for the slot backend this is the
+    ISSUE acceptance pin (rwkv6 engine decode vs sequential static)."""
+    cfg, params = _setup(kind)
+    eng = _engine(kind)
+    trace = _trace(cfg, n=5, seed=1, phi=20)
+    eng.submit_trace(trace)
+    eng.drain()
+    got = eng.results()
+    for i, it in enumerate(trace):
+        ref = _sequential_reference(cfg, params, it.prompt,
+                                    it.max_new_tokens)
+        assert got[i].tolist() == ref, f"request {i} diverged ({kind})"
+
+
+@pytest.mark.parametrize("kind", list(BACKENDS))
+def test_preemption_recovers_token_identically(kind):
+    """Force-preempt a mid-flight request (both phases if possible):
+    memory is released, the request requeues, and recompute-style
+    recovery keeps greedy outputs token-identical."""
+    cfg, params = _setup(kind)
+    eng = _engine(kind)
+    trace = _trace(cfg, n=3, seed=5, plo=6, phi=18, glo=4, ghi=8)
+    eng.submit_trace(trace)
+    preempted = set()
+    for _ in range(400):
+        laned = [r for r in eng.requests.values()
+                 if r.state in (RequestState.PREFILL, RequestState.DECODE)]
+        fresh = [r for r in laned if r.rid not in preempted]
+        if fresh and len(preempted) < 2:
+            victim = fresh[0]
+            eng._preempt(victim)
+            preempted.add(victim.rid)
+            assert victim.mem is None
+            assert victim.state is RequestState.QUEUED
+            eng.backend.check_invariants()
+        if eng.step() is None:
+            break
+    eng.drain()
+    assert len(preempted) >= 1
+    assert eng.metrics()["n_preemptions"] >= len(preempted)
+    for i, it in enumerate(trace):
+        ref = _sequential_reference(cfg, params, it.prompt,
+                                    it.max_new_tokens)
+        assert eng.results()[i].tolist() == ref, \
+            f"request {i} diverged after preemption ({kind})"
+    eng.backend.check_invariants()
+
+
+@pytest.mark.parametrize("kind", list(BACKENDS))
+def test_budget_probe_is_a_snapshot(kind):
+    """Granting against a BudgetProbe must not touch real backend
+    capacity, and can_fund stays read-only."""
+    eng = _engine(kind)
+    cfg, _ = _setup(kind)
+    rid = eng.submit(np.arange(2, 12, dtype=np.int32), max_new_tokens=4)
+    req = eng.requests[rid]
+    before = eng.backend.utilization()
+    probe = eng.backend.budget()
+    granted = probe.grant_admit(req, 32)
+    assert granted > 0
+    assert eng.backend.can_fund(req, granted)
+    assert eng.backend.utilization() == before, \
+        "budget probe mutated backend state"
+    # a second probe starts from the full free capacity again
+    assert eng.backend.budget().grant_admit(req, 32) == granted
+    eng.drain()
+
+
+def test_slot_backend_admission_bounded_by_slots():
+    """The state-slot pool is the admission bound: with fewer slots
+    than lanes, concurrent in-flight requests never exceed the slots,
+    and everything still drains (slots recycle)."""
+    eng = _engine("slot", max_batch=3, n_slots=3)   # 2 usable slots
+    cfg, _ = _setup("slot")
+    eng.submit_trace(_trace(cfg, n=5, seed=7))
+    peak = 0
+    for _ in range(10_000):
+        laned = sum(1 for r in eng.lanes if r is not None)
+        peak = max(peak, laned)
+        assert laned <= 2, "admitted more requests than state slots"
+        eng.backend.check_invariants()
+        if eng.step() is None:
+            break
+    assert eng.metrics()["n_done"] == 5
+    assert peak == 2, "slot pool never reached its bound"
+
+
+def test_slot_backend_validate_rejects_oversized():
+    eng = _engine("slot", max_seq_len=16)
+    with pytest.raises(ValueError, match="max_seq_len"):
+        eng.submit(np.arange(2, 16, dtype=np.int32), max_new_tokens=8)
+    eng.submit(np.arange(2, 10, dtype=np.int32), max_new_tokens=8)
+
+
+def test_zamba2_engine_token_identity():
+    """The hybrid recurrent family (Mamba2 backbone + shared-attention
+    ring) rides the same state-slot backend: per-lane vmapped slots
+    keep each lane's ring index independent, greedy outputs
+    token-identical to the sequential path."""
+    cfg = dataclasses.replace(configs.get_config("zamba2_7b", smoke=True),
+                              compute_dtype="float32")
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    eng = ServeEngine(cfg, params=params, ecfg=EngineConfig(
+        max_batch=3, prefill_chunk=8, max_seq_len=64,
+        cache_dtype="float32"))
+    trace = _trace(cfg, n=3, seed=2)
+    eng.submit_trace(trace)
+    eng.drain()
+    eng.backend.check_invariants()
+    for i, it in enumerate(trace):
+        ref = _sequential_reference(cfg, params, it.prompt,
+                                    it.max_new_tokens)
+        assert eng.results()[i].tolist() == ref, f"request {i} diverged"
+
+
+@pytest.mark.parametrize("kind", list(BACKENDS))
+def test_engine_deterministic_per_backend(kind):
+    cfg, params = _setup(kind)
+    trace = _trace(cfg, n=4, seed=9)
+    runs = []
+    for _ in range(2):
+        eng = _engine(kind)
+        eng.submit_trace(trace)
+        eng.drain()
+        runs.append((eng.events, eng.results()))
+    assert runs[0][0] == runs[1][0], "event order diverged"
+    for rid in runs[0][1]:
+        np.testing.assert_array_equal(runs[0][1][rid], runs[1][1][rid])
+
+
+# ---------------------------------------------------------------------------
+# hypothesis: random interleavings of submit / step / preempt
+# ---------------------------------------------------------------------------
+
+
+@settings(max_examples=8, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 4)),
+                min_size=4, max_size=24),
+       st.sampled_from(sorted(BACKENDS)))
+def test_backend_survives_random_interleavings(ops, kind):
+    """Property: any interleaving of late submissions, engine steps,
+    and forced preemptions keeps the backend invariants after every
+    operation, drains completely, and stays token-identical."""
+    cfg, params = _setup(kind)
+    eng = _engine(kind, max_batch=2, n_pages=32, max_pages_per_seq=6)
+    rng = np.random.default_rng(0)
+    prompts = []
+
+    def submit(plen, glen):
+        p = rng.integers(2, cfg.vocab_size, plen).astype(np.int32)
+        prompts.append((p, glen))
+        eng.submit(p, max_new_tokens=glen, arrival_time=eng.now)
+
+    submit(5, 3)
+    for code, x in ops:
+        if code == 0 and len(prompts) < 6:
+            submit(3 + x * 3, 2 + x)
+        elif code == 1:
+            laned = [r for r in eng.requests.values()
+                     if r.state in (RequestState.PREFILL,
+                                    RequestState.DECODE)]
+            if laned:
+                eng._preempt(laned[x % len(laned)])
+        else:
+            eng.step()
+        eng.backend.check_invariants()
+    eng.drain()
+    eng.backend.check_invariants()
+    phys, _ = eng.backend.utilization()
+    assert phys == 0.0, "memory leaked after drain"
+    for i, (p, glen) in enumerate(prompts):
+        ref = _sequential_reference(cfg, params, p, glen)
+        assert eng.results()[i].tolist() == ref, \
+            f"request {i} diverged ({kind})"
+
+
+# ---------------------------------------------------------------------------
+# submit() validation + SamplingParams satellites
+# ---------------------------------------------------------------------------
+
+
+class TestSubmitValidation:
+    def test_list_prompt_accepted_and_identical(self):
+        cfg, params = _setup("paged")
+        outs = []
+        for prompt in ([5, 6, 7, 8, 9], np.arange(5, 10, dtype=np.int64)):
+            eng = _engine("paged")
+            rid = eng.submit(prompt, max_new_tokens=3)
+            eng.drain()
+            outs.append(eng.results()[rid])
+        np.testing.assert_array_equal(outs[0], outs[1])
+
+    def test_float_array_rejected(self):
+        eng = _engine("paged")
+        with pytest.raises(ValueError, match="integer dtype"):
+            eng.submit(np.array([1.0, 2.0, 3.5]), max_new_tokens=2)
+
+    def test_non_int_list_rejected(self):
+        eng = _engine("paged")
+        with pytest.raises(ValueError, match="only ints"):
+            eng.submit([1, 2.5, 3], max_new_tokens=2)
+        with pytest.raises(ValueError, match="only ints"):
+            eng.submit([1, True, 3], max_new_tokens=2)
+        with pytest.raises(TypeError, match="np.ndarray or a list"):
+            eng.submit("1 2 3", max_new_tokens=2)
+
+    def test_out_of_vocab_rejected(self):
+        cfg, _ = _setup("paged")
+        eng = _engine("paged")
+        with pytest.raises(ValueError, match="vocab_size"):
+            eng.submit([1, cfg.vocab_size], max_new_tokens=2)
+        with pytest.raises(ValueError, match="vocab_size"):
+            eng.submit(np.array([-1, 2], np.int32), max_new_tokens=2)
+        # a wide-dtype token must not wrap into the valid range
+        with pytest.raises(ValueError, match="vocab_size"):
+            eng.submit(np.array([2 ** 32 + 5], np.int64),
+                       max_new_tokens=2)
+
+    def test_sampling_params_threaded_greedy_only(self):
+        eng = _engine("paged")
+        sp = SamplingParams()
+        assert sp.greedy
+        rid = eng.submit([2, 3, 4], max_new_tokens=2, sampling=sp)
+        assert eng.requests[rid].sampling is sp
+        with pytest.raises(NotImplementedError, match="greedy"):
+            eng.submit([2, 3, 4], max_new_tokens=2,
+                       sampling=SamplingParams(temperature=0.7))
+        with pytest.raises(NotImplementedError, match="greedy"):
+            eng.submit([2, 3, 4], max_new_tokens=2,
+                       sampling=SamplingParams(top_k=40))
+        eng.drain()
+
+    def test_sampling_params_validation(self):
+        with pytest.raises(ValueError, match="temperature"):
+            SamplingParams(temperature=-0.1)
+        with pytest.raises(ValueError, match="top_k"):
+            SamplingParams(top_k=-1)
+
+    def test_engine_config_slot_fields_validation(self):
+        with pytest.raises(ValueError, match="n_slots"):
+            EngineConfig(n_slots=1)
+        with pytest.raises(ValueError, match="max_seq_len"):
+            EngineConfig(max_seq_len=1)
+        EngineConfig(n_slots=0)
+        EngineConfig(n_slots=4)
