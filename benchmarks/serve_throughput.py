@@ -13,7 +13,10 @@ physical vs logical cache utilization land in the JSON so CI captures
 the hit-rate trajectory per PR — plus a RECURRENT trace (rwkv6 through
 the state-slot backend) so the recurrent families' throughput and TTFT
 are part of the per-run artifact now that every family routes through
-the one engine.
+the one engine — plus a SAMPLED-DECODE trace (half the requests on
+stochastic temperature/top-k/top-p RNG lanes, half greedy) reporting
+tok/s and TTFT against the all-greedy run of the same trace shape, so
+the cost of the batched sampler rides the per-run artifact too.
 
 Timing: an UNTIMED warmup drain (a throwaway engine over the same
 compiled steps — they are shared per (cfg, policy), see
@@ -172,6 +175,43 @@ def _bench_shared_prefix(cfg, params, seed: int) -> dict:
     return row
 
 
+def _bench_sampled(cfg, params, seed: int) -> dict:
+    """Sampled-decode trace: the same Poisson shape as the headline
+    rows, but half the requests decode stochastically (temperature
+    0.8, top-k 40, top-p 0.95, per-request seeds from the trace rng).
+    Both sides share the already-warm compiled forwards; the sampled
+    side additionally pays the batched sampler (compiled once at the
+    (max_batch, vocab) shape), so the tok/s delta IS the sampler
+    cost. Virtual TTFTs are deterministic per (trace, seed)."""
+    row = {"trace": "sampled_decode", "n_requests": 12,
+           "temperature": 0.8, "top_k": 40, "top_p": 0.95}
+    for label, frac in (("greedy", 0.0), ("mixed_sampled", 0.5)):
+        eng = ServeEngine(cfg, params=params,
+                          ecfg=EngineConfig(**ECFG, prefill_chunk=16),
+                          seed=seed)
+        eng.submit_trace(synth_trace(TrafficConfig(
+            n_requests=12, arrival_rate=1e6, prompt_len_min=4,
+            prompt_len_max=40, gen_len_min=4, gen_len_max=24,
+            vocab_size=cfg.vocab_size, seed=seed,
+            sampled_fraction=frac, temperature=0.8, top_k=40,
+            top_p=0.95)))
+        t0 = time.time()
+        eng.drain()
+        wall = time.time() - t0
+        m = eng.metrics()
+        row[label] = {
+            "wall_s": wall,
+            "tok_per_s": m["n_generated_tokens"] / max(wall, 1e-9),
+            "n_tokens": m["n_generated_tokens"],
+            "n_sampled_tokens": m["n_sampled_tokens"],
+            "mean_ttft_s": m["mean_ttft_s"],
+            "p99_ttft_s": m["p99_ttft_s"],
+            "p99_latency_s": m["p99_latency_s"],
+            "n_preemptions": m["n_preemptions"],
+        }
+    return row
+
+
 def _bench_recurrent(seed: int) -> dict:
     """Recurrent-family trace: rwkv6 through the state-slot backend —
     fixed-size per-lane state slots instead of growing KV pages, same
@@ -246,6 +286,14 @@ def run(smoke: bool = True, arch: str = "qwen3_8b",
           f"{sp['no_sharing']['physical_pages_allocated']} no-sharing "
           f"({sp['physical_pages_saved']} saved) | "
           f"{sp['sharing']['n_cow_forks']} COW forks")
+    sd = _bench_sampled(cfg, params, seed)
+    print(f"  sampled-decode: mixed "
+          f"{sd['mixed_sampled']['tok_per_s']:8.1f} tok/s wall "
+          f"({sd['mixed_sampled']['n_sampled_tokens']}/"
+          f"{sd['mixed_sampled']['n_tokens']} tokens sampled) vs greedy "
+          f"{sd['greedy']['tok_per_s']:8.1f} | p99-ttft "
+          f"{sd['mixed_sampled']['p99_ttft_s']*1e3:.3f} ms vs "
+          f"{sd['greedy']['p99_ttft_s']*1e3:.3f} ms (virtual)")
     rec = _bench_recurrent(seed)
     print(f"  recurrent ({rec['arch']}, state-slot backend): "
           f"{rec['tok_per_s']:8.1f} tok/s wall | p99 "
@@ -255,7 +303,7 @@ def run(smoke: bool = True, arch: str = "qwen3_8b",
     bench = {"bench": "serve_throughput", "arch": cfg.name,
              "smoke": smoke, "seed": seed, "compile_s": compile_s,
              "rows": rows, "long_prompt": lp, "shared_prefix": sp,
-             "recurrent": rec}
+             "sampled_decode": sd, "recurrent": rec}
     with open(OUT_PATH, "w") as f:
         json.dump(bench, f, indent=2)
     print("BENCH " + json.dumps(bench))

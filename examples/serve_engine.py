@@ -1,9 +1,11 @@
 """Continuous-batching engine walkthrough.
 
-Submits a handful of mixed-length requests to the `repro.serve` engine,
-steps it manually (so you can watch the scheduler compose chunked
-prefill batches with decode into mixed steps), then drains and prints
-the per-request outputs and engine metrics.
+Submits a handful of mixed-length requests — greedy plus one
+stochastic (temperature/top-k/top-p on its own RNG lane) — to the
+`repro.serve` engine, steps it manually (so you can watch the
+scheduler compose chunked prefill batches with decode into mixed
+steps), then drains and prints the per-request outputs and engine
+metrics.
 
 Every family rides the same engine via the `SequenceBackend` API: the
 default qwen3_8b arch serves over the paged-KV backend (watch for
@@ -21,7 +23,7 @@ import dataclasses
 import numpy as np
 
 from repro import configs
-from repro.serve import EngineConfig, ServeEngine
+from repro.serve import EngineConfig, SamplingParams, ServeEngine
 
 
 def main():
@@ -63,6 +65,16 @@ def main():
         rid = eng.submit(prompt, max_new_tokens=4, arrival_time=1e-6)
         print(f"  request {rid}: prompt {len(prompt)} tokens (shares "
               f"request 1's 17-token prompt as a prefix), gen 4")
+    # one stochastic request rides the same batches on its own RNG
+    # lane: its tokens are deterministic for (seed, prompt, params)
+    # no matter how the scheduler packs it with the greedy lanes
+    sampled = eng.submit(
+        rng.integers(2, cfg.vocab_size, 7).astype(np.int32),
+        max_new_tokens=6, arrival_time=1e-6,
+        sampling=SamplingParams(temperature=0.9, top_k=40, top_p=0.95,
+                                seed=7))
+    print(f"  request {sampled}: prompt 7 tokens, gen 6 SAMPLED "
+          f"(temperature 0.9, top-k 40, top-p 0.95, seed 7)")
 
     print("\nfirst 10 engine steps:")
     for _ in range(10):
@@ -92,8 +104,9 @@ def main():
 
     print("\nresults:")
     for rid, toks in eng.results().items():
+        tag = "" if eng.requests[rid].sampling.greedy else "  (sampled)"
         print(f"  request {rid}: {toks[:10].tolist()}"
-              f"{' ...' if len(toks) > 10 else ''}")
+              f"{' ...' if len(toks) > 10 else ''}{tag}")
     m = eng.metrics()
     line = (f"\n{m['n_generated_tokens']} tokens | cache utilization "
             f"{m['cache_utilization']:.2f} (logical "
@@ -103,7 +116,8 @@ def main():
                  f"{m['n_cow_forks']} COW forks")
     if "n_state_slots" in m:        # state-slot backend extras
         line += f" | {m['n_state_slots']} state slots"
-    print(line + f" | {m['n_preemptions']} preemptions | "
+    print(line + f" | {m['n_sampled_tokens']} sampled tokens | "
+          f"{m['n_preemptions']} preemptions | "
           f"{len(eng.events)} engine steps")
 
 

@@ -16,7 +16,11 @@ Two modes (the paper is inference-oriented; this is the serve driver):
                   backend (COW prefix sharing, `--prefix-groups` et
                   al.), the recurrent archs (rwkv6/zamba2) over the
                   state-slot backend (`--n-slots` sizes its pool) — see
-                  repro.serve.backend.
+                  repro.serve.backend. `--temperature/--top-k/--top-p/
+                  --sample-seed` switch the trace to stochastic decode
+                  on per-request RNG lanes (`--sampled-fraction` mixes
+                  greedy and sampled requests) — deterministic for a
+                  fixed seed, independent of batch composition.
 
 The ARTEMIS arithmetic policy applies to every matmul in both modes.
 """
@@ -95,9 +99,15 @@ def serve_engine(arch: str = "qwen3_8b", smoke: bool = True,
                  max_batch: int = 8, scheduler: str = "cost",
                  prefill_chunk: int = 32, prefix_sharing: bool = True,
                  prefix_groups: int = 0, prefix_len: int = 0,
-                 n_slots: int = 0, params=None) -> dict:
+                 n_slots: int = 0, sampled_fraction: float = 0.0,
+                 temperature: float = 0.8, top_k: int = 0,
+                 top_p: float = 1.0, sample_seed: int = -1,
+                 params=None) -> dict:
     """Continuous-batching serving over a synthetic Poisson trace (any
-    family — the engine routes to the right sequence backend)."""
+    family — the engine routes to the right sequence backend). With
+    `sampled_fraction > 0` that share of requests decodes stochastic
+    (temperature/top-k/top-p on per-request RNG lanes, deterministic
+    for a fixed trace seed); the rest stay greedy."""
     from repro.serve import (EngineConfig, ServeEngine, TrafficConfig,
                              synth_trace)
     cfg = configs.get_config(arch, smoke=smoke)
@@ -116,7 +126,9 @@ def serve_engine(arch: str = "qwen3_8b", smoke: bool = True,
         prompt_len_min=max(1, prompt_len // 2), prompt_len_max=prompt_len,
         gen_len_min=max(1, gen_len // 2), gen_len_max=gen_len,
         vocab_size=cfg.vocab_size, seed=seed,
-        n_prefix_groups=prefix_groups, prefix_len=prefix_len))
+        n_prefix_groups=prefix_groups, prefix_len=prefix_len,
+        sampled_fraction=sampled_fraction, temperature=temperature,
+        top_k=top_k, top_p=top_p, sample_seed=sample_seed))
     eng.submit_trace(trace)
     t0 = time.time()
     eng.drain()
@@ -162,7 +174,29 @@ def main() -> None:
                     help="engine: tokens shared within a prefix group")
     ap.add_argument("--seed", type=int, default=0,
                     help="params + synthetic trace seed")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="engine: sampling temperature for sampled "
+                         "requests (0 = all-greedy trace)")
+    ap.add_argument("--top-k", type=int, default=0,
+                    help="engine: top-k truncation for sampled "
+                         "requests (0 = none)")
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="engine: nucleus mass for sampled requests "
+                         "(1.0 = none)")
+    ap.add_argument("--sample-seed", type=int, default=-1,
+                    help="engine: fixed RNG-lane seed for every "
+                         "sampled request (-1 = per-request seeds "
+                         "from the trace rng)")
+    ap.add_argument("--sampled-fraction", type=float, default=None,
+                    help="engine: fraction of requests decoded "
+                         "stochastically (default: 1.0 when "
+                         "--temperature > 0, else 0)")
     args = ap.parse_args()
+    sampled_fraction = args.sampled_fraction
+    if sampled_fraction is None:
+        sampled_fraction = 1.0 if args.temperature > 0 else 0.0
+    elif sampled_fraction > 0 and args.temperature <= 0:
+        ap.error("--sampled-fraction > 0 requires --temperature > 0")
 
     if args.mode == "static":
         out = serve(arch=args.arch, smoke=not args.full, batch=args.batch,
@@ -182,10 +216,13 @@ def main() -> None:
         prefill_chunk=args.prefill_chunk,
         prefix_sharing=not args.no_prefix_sharing,
         prefix_groups=args.prefix_groups, prefix_len=args.prefix_len,
-        n_slots=args.n_slots)
+        n_slots=args.n_slots, sampled_fraction=sampled_fraction,
+        temperature=args.temperature, top_k=args.top_k,
+        top_p=args.top_p, sample_seed=args.sample_seed)
     m = out["metrics"]
     line = (f"engine: {m['n_done']} requests, "
-            f"{m['n_generated_tokens']} tokens | "
+            f"{m['n_generated_tokens']} tokens "
+            f"({m['n_sampled_tokens']} sampled) | "
             f"{m['wall_tok_per_s']:.1f} tok/s wall | "
             f"p50 {m['p50_latency_s']*1e3:.3f}ms "
             f"p99 {m['p99_latency_s']*1e3:.3f}ms "

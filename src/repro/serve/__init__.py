@@ -8,8 +8,11 @@ jit-stable forwards per memory model (`paged_model` / `state_model`),
 the paged-cache primitives (`paged_cache`: refcounting allocator,
 prefix index, copy-on-write), ARTEMIS-cost-aware mixed-step scheduling
 (`scheduler` + `cost`, priced by `repro.hwsim` over the composed token
-count), synthetic Poisson traffic with a shared-prefix mode
-(`traffic`), and the engine driver (`engine`).
+count), per-request stochastic sampling with batch-invariant RNG lanes
+(`sampler`: temperature / top-k / top-p at one compiled
+`(max_batch, vocab)` shape), synthetic Poisson traffic with
+shared-prefix and mixed greedy/sampled modes (`traffic`), and the
+engine driver (`engine`).
 
 Entry point: `python -m repro.launch.serve --mode engine` (any family).
 """
@@ -40,6 +43,7 @@ from repro.serve.paged_model import (
     make_paged_prefill,
 )
 from repro.serve.request import Request, RequestState, SamplingParams
+from repro.serve.sampler import lane_key, sample_tokens
 from repro.serve.scheduler import Action, Scheduler, SchedulerConfig
 from repro.serve.state_model import (
     init_slot_pool,
@@ -57,6 +61,7 @@ __all__ = [
     "init_paged_cache", "pad_to_page",
     "make_paged_chunked_prefill", "make_paged_decode", "make_paged_prefill",
     "Request", "RequestState", "SamplingParams",
+    "lane_key", "sample_tokens",
     "Action", "Scheduler", "SchedulerConfig",
     "init_slot_pool", "make_slot_decode", "make_slot_prefill_chunk",
     "TraceItem", "TrafficConfig", "synth_trace",

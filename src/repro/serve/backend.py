@@ -72,6 +72,19 @@ must never inspect; it is created by `admit()` and destroyed by
       backend-masked). The engine samples, appends, and bumps
       `seq_len` — the backend must have made the write target safe in
       prepare_decode().
+
+      BATCH-INVARIANCE CONSTRAINT: a request's per-lane logits from
+      decode_step AND from prefill_step's last valid position must
+      depend only on the request's own token history — bit-identical
+      regardless of batch composition, lane placement, chunk
+      boundaries, and recompute-after-preemption. The engine samples
+      every emitted token through `repro.serve.sampler`, whose
+      per-request RNG lanes make sampled streams deterministic ONLY
+      under this contract (greedy argmax tolerates logit noise;
+      sampled decode does not). Both existing backends satisfy it by
+      construction (per-lane independent forwards at fixed compiled
+      shapes); the sampled conformance suite in
+      tests/test_serve_backend.py pins it for any future backend.
   release(req)
       Drop all of req's sequence memory (refcounts for shared pages, a
       whole slot, ...) and clear `req.mem`. Called on preemption and

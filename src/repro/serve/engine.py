@@ -46,12 +46,21 @@ The engine keeps a VIRTUAL clock priced by the ARTEMIS cost model
 advances time by the simulated latency of its composed batch, so
 arrival interleaving, latency percentiles and the scheduler's
 decisions are deterministic functions of (trace, seed) — wall-clock
-throughput is measured separately by the benchmark. Greedy sampling
-end-to-end (`SamplingParams` is threaded through submit() for the
-planned temperature/top-k work, greedy-only for now): the engine's
-outputs are token-identical to decoding each request alone on the
-sequential single-request path, including through preemption landing
-mid-prefill and through prefix sharing (tests/test_serve.py and
+throughput is measured separately by the benchmark.
+
+SAMPLING: every token the engine emits — decode rounds and
+prefill-completion first tokens alike — goes through the one batched
+fixed-shape sampler (`repro.serve.sampler.sample_tokens`) at the
+compiled (max_batch, vocab) shape, each lane on its own RNG lane
+keyed by (request seed, tokens generated so far). Greedy
+(`temperature=0`, the default) lanes reduce to plain argmax,
+bit-identical to the pre-sampling `greedy_sample` path, and a sampled
+request's stream is deterministic and independent of batch
+composition, chunking, scheduler policy, and recompute-style
+preemption: the engine's outputs are token-identical to decoding each
+request alone, greedy pinned against the sequential single-request
+path and sampled pinned against a solo engine run
+(tests/test_serve.py, tests/test_sampling.py and
 tests/test_serve_backend.py pin this for both backends).
 """
 from __future__ import annotations
@@ -59,12 +68,13 @@ from __future__ import annotations
 import math
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core.policy import ArithmeticPolicy
-from repro.launch import steps as stepslib
 from repro.models import model
 from repro.models.config import ModelConfig
+from repro.serve import sampler
 from repro.serve.backend import EngineConfig, make_backend
 from repro.serve.cost import ArtemisCostModel
 from repro.serve.request import Request, RequestState, SamplingParams
@@ -110,6 +120,7 @@ class ServeEngine:
         self._util_sum = 0.0
         self._logical_util_sum = 0.0
         self._util_samples = 0
+        self._n_sampled_tokens = 0   # tokens drawn on non-greedy lanes
 
     # -- submission ---------------------------------------------------------
 
@@ -157,11 +168,6 @@ class ServeEngine:
                sampling: SamplingParams | None = None) -> int:
         prompt = self._validate_prompt(prompt)
         sampling = sampling if sampling is not None else SamplingParams()
-        if not sampling.greedy:
-            raise NotImplementedError(
-                "only greedy sampling (temperature=0, top_k=0) is "
-                "implemented; SamplingParams carries the planned "
-                "temperature/top-k surface")
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1")
         self.backend.validate(len(prompt), max_new_tokens)
@@ -173,7 +179,8 @@ class ServeEngine:
         return rid
 
     def submit_trace(self, items: list[TraceItem]) -> list[int]:
-        return [self.submit(it.prompt, it.max_new_tokens, it.arrival_time)
+        return [self.submit(it.prompt, it.max_new_tokens, it.arrival_time,
+                            sampling=it.sampling)
                 for it in items]
 
     # -- stepping -----------------------------------------------------------
@@ -279,6 +286,35 @@ class ServeEngine:
         return sorted(self._decoding(),
                       key=lambda r: self._admit_order[r.rid])
 
+    # -- sampling -----------------------------------------------------------
+
+    def _sample_rows(self, logits, rows: list[tuple[int, Request]]
+                     ) -> np.ndarray:
+        """Sample one token per (row, request) from `(max_batch, V)`
+        logits through the batched fixed-shape sampler. Each request
+        draws on its own RNG lane keyed by (its seed, its token count
+        so far) — never the engine step or the row — so its stream is
+        batch-invariant and preemption-replayable; greedy lanes reduce
+        to argmax, bit-identical to the pre-sampling greedy path.
+        Unlisted rows are sampled as greedy garbage and ignored."""
+        b = self.ecfg.max_batch
+        temp = np.zeros((b,), np.float32)
+        top_k = np.zeros((b,), np.int32)
+        top_p = np.ones((b,), np.float32)
+        seed = np.zeros((b,), np.uint32)
+        pos = np.zeros((b,), np.int32)
+        for row, req in rows:
+            sp = req.sampling
+            temp[row] = sp.temperature
+            top_k[row] = sp.top_k
+            top_p[row] = sp.top_p
+            seed[row] = sp.seed
+            pos[row] = len(req.generated)
+            if not sp.greedy:
+                self._n_sampled_tokens += 1
+        return np.asarray(sampler.sample_tokens(
+            logits, temp, top_k, top_p, seed, pos))
+
     def _do_mixed(self, action: Action) -> tuple | None:
         """Execute a prefill / decode / mixed step: fund all memory
         first (decode write targets, then prefill chunks — preemption
@@ -341,7 +377,8 @@ class ServeEngine:
             dec_batch = self._decoding()
         if dec_batch:
             logits = self.backend.decode_step(dec_batch)
-            dec_next = np.asarray(stepslib.greedy_sample(logits))
+            dec_next = self._sample_rows(
+                logits, [(r.lane, r) for r in dec_batch])
 
         # 4. chunked + batched prefill forward (the backend advances
         #    each request's prefill_pos / seq_len)
@@ -373,20 +410,32 @@ class ServeEngine:
 
         # 7. apply prefill results: a chunk that completes its prompt
         #    samples the next token from the last VALID chunk position
-        #    and flips the request to DECODE
-        chunk_plan = []
-        for i, (req, n) in enumerate(chunks):
-            chunk_plan.append((req.rid, n))
-            if req.prefill_pos < len(req.effective_prompt()):
-                continue
-            nxt = int(stepslib.greedy_sample(chunk_logits[i, n - 1]))
-            req.generated.append(nxt)
-            if req.t_first_token is None:
-                req.t_first_token = self.now
-            if req.done:
-                self._finish(req)
-            else:
-                req.state = RequestState.DECODE
+        #    and flips the request to DECODE. The completing rows'
+        #    last-position logits are gathered into one (max_batch, V)
+        #    buffer so prefill first-tokens go through the SAME
+        #    compiled sampler shape as decode rounds.
+        chunk_plan = [(req.rid, n) for req, n in chunks]
+        completing = [(i, req) for i, (req, n) in enumerate(chunks)
+                      if req.prefill_pos >= len(req.effective_prompt())]
+        if completing:
+            # device-side gather of row i's last valid position (only
+            # the completing rows matter; the rest sample as ignored
+            # greedy garbage) — never pull the whole (B, C, V) chunk
+            # logits to host for a handful of rows
+            b = self.ecfg.max_batch
+            pos = np.zeros((b,), np.int32)
+            for i, req in completing:
+                pos[i] = chunks[i][1] - 1
+            last = chunk_logits[jnp.arange(b), jnp.asarray(pos)]
+            nxts = self._sample_rows(last, completing)
+            for i, req in completing:
+                req.generated.append(int(nxts[i]))
+                if req.t_first_token is None:
+                    req.t_first_token = self.now
+                if req.done:
+                    self._finish(req)
+                else:
+                    req.state = RequestState.DECODE
 
         if action.kind == "decode" or not chunk_plan:
             return ("decode", tuple(dec_rids), self.now)
@@ -431,6 +480,7 @@ class ServeEngine:
             "p99_ttft_s": percentile(ttfts, 99),
             "n_preemptions": sum(r.n_preemptions
                                  for r in self.requests.values()),
+            "n_sampled_tokens": self._n_sampled_tokens,
             "cache_utilization": (self._util_sum
                                   / max(self._util_samples, 1)),
             "logical_cache_utilization": (self._logical_util_sum

@@ -19,8 +19,10 @@ never look inside it.
 A preempted request (from either PREFILL or DECODE) is re-queued in
 *recompute* style: its prompt becomes original-prompt +
 tokens-generated-so-far, the backend releases its `mem`, and a later
-admission re-prefills from scratch — for greedy sampling this is
-token-identical to never having been preempted.
+admission re-prefills from scratch — token-identical to never having
+been preempted for greedy AND sampled requests alike (a sampled
+request's RNG lane is keyed by `(seed, tokens generated so far)`, so
+replay re-draws the same tokens — see repro.serve.sampler).
 """
 from __future__ import annotations
 
@@ -40,16 +42,22 @@ class RequestState(enum.Enum):
 @dataclasses.dataclass(frozen=True)
 class SamplingParams:
     """Per-request sampling configuration, threaded through
-    `ServeEngine.submit()` into the `Request`.
+    `ServeEngine.submit()` into the `Request` and consumed by
+    `repro.serve.sampler`.
 
-    Greedy-only for now: `temperature=0.0` (argmax) is the single
-    implemented semantics and the anchor of the token-identity test
-    suite. The fields exist so the planned temperature/top-k work can
-    land without another submit()/Request API break; requesting them
-    today is rejected at submit() with NotImplementedError.
+    `temperature=0.0` is the greedy fast path: plain argmax, no RNG,
+    `top_k`/`top_p` irrelevant — the semantics every pre-sampling
+    token-identity suite pins. Any `temperature > 0` samples from the
+    temperature-scaled, top-k- then top-p-truncated distribution on a
+    per-request RNG lane keyed by `(seed, tokens generated so far)`,
+    so a request's sampled stream is deterministic and independent of
+    batch composition, chunking, scheduling, and preemption (the
+    contract `sampler.py` documents and tests pin over both backends).
     """
     temperature: float = 0.0     # 0.0 = greedy argmax
     top_k: int = 0               # 0 = no truncation
+    top_p: float = 1.0           # nucleus mass; 1.0 = no truncation
+    seed: int = 0                # RNG-lane seed for sampled decode
 
     def __post_init__(self):
         if self.temperature < 0.0:
@@ -57,10 +65,17 @@ class SamplingParams:
                 f"temperature must be >= 0, got {self.temperature}")
         if self.top_k < 0:
             raise ValueError(f"top_k must be >= 0, got {self.top_k}")
+        if not 0.0 < self.top_p <= 1.0:
+            raise ValueError(
+                f"top_p must be in (0, 1], got {self.top_p}")
+        if not 0 <= self.seed < 2 ** 32:
+            raise ValueError(
+                f"seed must be a uint32 (0 <= seed < 2**32), got "
+                f"{self.seed}")
 
     @property
     def greedy(self) -> bool:
-        return self.temperature == 0.0 and self.top_k == 0
+        return self.temperature == 0.0
 
 
 @dataclasses.dataclass

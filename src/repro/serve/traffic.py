@@ -14,12 +14,23 @@ Two prompt modes:
       [prompt_len_min, prompt_len_max] tokens. This is the few-shot /
       system-prompt traffic shape that prefix sharing in the paged KV
       cache multiplies capacity on.
+
+Orthogonally, SAMPLED-DECODE traffic (sampled_fraction > 0): each
+request is independently marked sampled with that probability and
+carries `SamplingParams(temperature, top_k, top_p)` plus a
+per-request RNG seed drawn from the trace rng (or the fixed
+`sample_seed` when >= 0) — the mixed greedy/sampled composition real
+serving sees. With sampled_fraction == 0 the trace stream is
+byte-identical to the pre-sampling generator, so every greedy
+token-identity suite replays unchanged.
 """
 from __future__ import annotations
 
 import dataclasses
 
 import numpy as np
+
+from repro.serve.request import SamplingParams
 
 
 @dataclasses.dataclass(frozen=True)
@@ -34,6 +45,13 @@ class TrafficConfig:
     seed: int = 0
     n_prefix_groups: int = 0         # 0 = independent prompts
     prefix_len: int = 0              # tokens shared within a group
+    sampled_fraction: float = 0.0    # P(request decodes sampled)
+    temperature: float = 0.8         # SamplingParams for sampled reqs
+    top_k: int = 0
+    top_p: float = 1.0
+    sample_seed: int = -1            # -1 = per-request seed from the
+    #                                  trace rng; >= 0 = every sampled
+    #                                  request uses exactly this seed
 
     def __post_init__(self):
         # mirror EngineConfig: bad bounds used to fail deep inside
@@ -73,6 +91,20 @@ class TrafficConfig:
         if self.n_prefix_groups == 0 and self.prefix_len != 0:
             raise ValueError(
                 f"prefix_len {self.prefix_len} needs n_prefix_groups > 0")
+        if not 0.0 <= self.sampled_fraction <= 1.0:
+            raise ValueError(
+                f"sampled_fraction must be in [0, 1], got "
+                f"{self.sampled_fraction}")
+        if self.sampled_fraction > 0:
+            if self.temperature <= 0:
+                raise ValueError(
+                    f"sampled traffic needs temperature > 0, got "
+                    f"{self.temperature}")
+            # surface bad top_k/top_p/sample_seed at config time, not
+            # per-item deep inside synth_trace
+            SamplingParams(temperature=self.temperature,
+                           top_k=self.top_k, top_p=self.top_p,
+                           seed=max(self.sample_seed, 0))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -81,6 +113,8 @@ class TraceItem:
     prompt: np.ndarray               # (S,) i32
     max_new_tokens: int
     prefix_group: int = -1           # -1 = independent prompt
+    sampling: SamplingParams = dataclasses.field(
+        default_factory=SamplingParams)
 
 
 def synth_trace(tc: TrafficConfig) -> list[TraceItem]:
@@ -104,5 +138,21 @@ def synth_trace(tc: TrafficConfig) -> list[TraceItem]:
             prompt = np.concatenate([prefixes[group], suffix])
         else:
             prompt = suffix
-        items.append(TraceItem(float(arrivals[i]), prompt, glen, group))
+        # sampled_fraction == 0 draws nothing, keeping the pre-sampling
+        # trace stream byte-identical for the greedy suites; above 0
+        # the draws are unconditional so neither the sampled coin nor
+        # a fixed sample_seed shifts the stream for later requests —
+        # the SAME prompts/lengths are emitted either way
+        sampling = SamplingParams()
+        if tc.sampled_fraction > 0:
+            sampled = rng.random() < tc.sampled_fraction
+            seed = int(rng.integers(0, 2 ** 31))
+            if tc.sample_seed >= 0:
+                seed = tc.sample_seed
+            if sampled:
+                sampling = SamplingParams(
+                    temperature=tc.temperature, top_k=tc.top_k,
+                    top_p=tc.top_p, seed=seed)
+        items.append(TraceItem(float(arrivals[i]), prompt, glen, group,
+                               sampling))
     return items

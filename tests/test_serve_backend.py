@@ -7,7 +7,12 @@ the paged-KV backend (attention families) and the state-slot backend
 budget-probe, and invariant checks, parametrized by family. The
 recurrent-specific acceptance pin — rwkv6 engine decode token-identical
 to the sequential static path — lives here too, alongside the
-submit-validation and SamplingParams satellites.
+submit-validation and SamplingParams satellites, and the SAMPLED-MODE
+conformance suite: a sampled request's token stream must be
+bit-identical to decoding it alone, regardless of batch composition,
+chunk size, scheduler policy, and forced recompute-style preemption
+(the batch-invariant RNG-lane contract of repro.serve.sampler), while
+greedy neighbors stay pinned to the static sequential reference.
 """
 import dataclasses
 import functools
@@ -351,6 +356,182 @@ def test_backend_survives_random_interleavings(ops, kind):
 
 
 # ---------------------------------------------------------------------------
+# sampled decode: the batch-invariant RNG-lane contract
+# ---------------------------------------------------------------------------
+
+
+SAMPLED = SamplingParams(temperature=0.9, top_k=24, top_p=0.95, seed=1234)
+
+_SOLO_CACHE: dict = {}
+
+
+def _solo_reference(kind, prompt, n_new, sampling):
+    """A request's stream decoded ALONE in a fresh engine — the
+    reference the batch-invariance contract pins sampled streams to
+    (greedy streams additionally match the static sequential path)."""
+    key = (kind, prompt.tobytes(), n_new, sampling)
+    if key not in _SOLO_CACHE:
+        eng = _engine(kind)
+        rid = eng.submit(prompt, max_new_tokens=n_new, sampling=sampling)
+        eng.drain()
+        _SOLO_CACHE[key] = eng.results()[rid].tolist()
+    return _SOLO_CACHE[key]
+
+
+@pytest.mark.parametrize("kind", list(BACKENDS))
+def test_sampled_batch_invariance(kind):
+    """The tentpole acceptance pin: a sampled request emits the SAME
+    tokens alone, packed with greedy and sampled neighbors, under a
+    different chunk size, and under the fcfs scheduler — the RNG lane
+    is keyed by (seed, position), never by batch composition."""
+    cfg, _ = _setup(kind)
+    rng = np.random.default_rng(41)
+    prompt = rng.integers(2, cfg.vocab_size, 11).astype(np.int32)
+    solo = _solo_reference(kind, prompt, 8, SAMPLED)
+
+    def packed_run(**overrides):
+        eng = _engine(kind, **overrides)
+        rid = eng.submit(prompt, max_new_tokens=8, sampling=SAMPLED)
+        other = np.random.default_rng(43)
+        for i, sp in enumerate((SamplingParams(),
+                                SamplingParams(temperature=1.2, seed=9))):
+            eng.submit(other.integers(2, cfg.vocab_size,
+                                      5 + 4 * i).astype(np.int32),
+                       max_new_tokens=5, sampling=sp)
+        eng.drain()
+        assert eng.metrics()["n_sampled_tokens"] >= 8 + 5
+        return eng.results()[rid].tolist()
+
+    assert packed_run() == solo
+    assert packed_run(prefill_chunk=3) == solo
+    assert packed_run(scheduler="fcfs") == solo
+
+
+@pytest.mark.parametrize("kind", list(BACKENDS))
+def test_sampled_preemption_replay(kind):
+    """Forced recompute-style preemption of a SAMPLED request (caught
+    in prefill and again in decode) replays bit-identically: the
+    effective prompt re-prefills and position len(generated) re-draws
+    on the same (seed, position) key it would have used un-preempted."""
+    cfg, _ = _setup(kind)
+    rng = np.random.default_rng(47)
+    prompt = rng.integers(2, cfg.vocab_size, 13).astype(np.int32)
+    solo = _solo_reference(kind, prompt, 8, SAMPLED)
+    eng = _engine(kind)
+    rid = eng.submit(prompt, max_new_tokens=8, sampling=SAMPLED)
+    eng.submit(rng.integers(2, cfg.vocab_size, 6).astype(np.int32),
+               max_new_tokens=4)
+    hit = {RequestState.PREFILL: 0, RequestState.DECODE: 0}
+    for _ in range(400):
+        req = eng.requests[rid]
+        if req.state in hit and not hit[req.state]:
+            hit[req.state] = 1
+            eng._preempt(req)
+            eng.backend.check_invariants()
+        if eng.step() is None:
+            break
+    eng.drain()
+    n_hit = sum(hit.values())
+    assert n_hit >= 1
+    assert eng.requests[rid].n_preemptions == n_hit
+    assert eng.results()[rid].tolist() == solo, \
+        f"sampled stream diverged after preemption ({kind})"
+
+
+@pytest.mark.parametrize("kind", list(BACKENDS))
+def test_sampled_trace_mixed_greedy_sampled_lanes(kind):
+    """A synth_trace with sampled_fraction=0.5 drains with every
+    request matching its solo reference: sampled neighbors do not
+    perturb greedy requests (still pinned to the static sequential
+    path) and vice versa."""
+    cfg, params = _setup(kind)
+    trace = synth_trace(TrafficConfig(
+        n_requests=6, arrival_rate=1e8, prompt_len_min=3,
+        prompt_len_max=14, gen_len_min=2, gen_len_max=6,
+        vocab_size=cfg.vocab_size, seed=51, sampled_fraction=0.5,
+        temperature=0.9, top_k=24, top_p=0.95))
+    kinds = {it.sampling.greedy for it in trace}
+    assert kinds == {True, False}, "trace should mix greedy + sampled"
+    eng = _engine(kind)
+    eng.submit_trace(trace)
+    eng.drain()
+    assert eng.metrics()["n_sampled_tokens"] > 0
+    for i, it in enumerate(trace):
+        got = eng.results()[i].tolist()
+        assert got == _solo_reference(kind, it.prompt, it.max_new_tokens,
+                                      it.sampling), \
+            f"request {i} ({'greedy' if it.sampling.greedy else 'sampled'})" \
+            f" diverged ({kind})"
+        if it.sampling.greedy:
+            assert got == _sequential_reference(cfg, params, it.prompt,
+                                                it.max_new_tokens)
+
+
+@pytest.mark.parametrize("kind", list(BACKENDS))
+def test_greedy_call_site_unaffected_by_sampler(kind):
+    """Regression for the dropped greedy-only guard: a pre-PR call
+    site — submit() with NO SamplingParams — still produces exactly
+    the static sequential stream, and explicitly passing the default
+    SamplingParams() is byte-for-byte the same submission."""
+    cfg, params = _setup(kind)
+    rng = np.random.default_rng(53)
+    prompt = rng.integers(2, cfg.vocab_size, 9).astype(np.int32)
+    streams = []
+    for sampling in (None, SamplingParams()):
+        eng = _engine(kind)
+        rid = (eng.submit(prompt, max_new_tokens=6) if sampling is None
+               else eng.submit(prompt, max_new_tokens=6, sampling=sampling))
+        eng.drain()
+        assert eng.metrics()["n_sampled_tokens"] == 0
+        streams.append(eng.results()[rid].tolist())
+    assert streams[0] == streams[1]
+    assert streams[0] == _sequential_reference(cfg, params, prompt, 6)
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 4)),
+                min_size=4, max_size=20),
+       st.sampled_from(sorted(BACKENDS)))
+def test_mixed_lanes_survive_random_interleavings(ops, kind):
+    """Property: random interleavings of greedy AND sampled
+    submissions, engine steps, and forced preemptions keep every
+    request's stream equal to its solo reference — the sampled twin
+    of test_backend_survives_random_interleavings."""
+    cfg, _ = _setup(kind)
+    eng = _engine(kind, max_batch=2, n_pages=32, max_pages_per_seq=6)
+    rng = np.random.default_rng(0)
+    subs = []
+
+    def submit(plen, glen):
+        p = rng.integers(2, cfg.vocab_size, plen).astype(np.int32)
+        # alternate greedy / sampled lanes deterministically
+        sp = SAMPLED if len(subs) % 2 else SamplingParams()
+        subs.append((p, glen, sp))
+        eng.submit(p, max_new_tokens=glen, arrival_time=eng.now,
+                   sampling=sp)
+
+    submit(5, 3)
+    submit(4, 3)
+    for code, x in ops:
+        if code == 0 and len(subs) < 6:
+            submit(3 + x * 2, 2 + x)
+        elif code == 1:
+            laned = [r for r in eng.requests.values()
+                     if r.state in (RequestState.PREFILL,
+                                    RequestState.DECODE)]
+            if laned:
+                eng._preempt(laned[x % len(laned)])
+        else:
+            eng.step()
+        eng.backend.check_invariants()
+    eng.drain()
+    eng.backend.check_invariants()
+    for i, (p, glen, sp) in enumerate(subs):
+        assert eng.results()[i].tolist() == _solo_reference(
+            kind, p, glen, sp), f"request {i} diverged ({kind})"
+
+
+# ---------------------------------------------------------------------------
 # submit() validation + SamplingParams satellites
 # ---------------------------------------------------------------------------
 
@@ -392,25 +573,66 @@ class TestSubmitValidation:
             eng.submit(np.array([2 ** 32 + 5], np.int64),
                        max_new_tokens=2)
 
-    def test_sampling_params_threaded_greedy_only(self):
+    def test_sampling_params_threaded_and_accepted(self):
+        """The greedy-only NotImplementedError guard is gone: sampled
+        params are accepted at submit() and generate a full stream."""
         eng = _engine("paged")
         sp = SamplingParams()
         assert sp.greedy
         rid = eng.submit([2, 3, 4], max_new_tokens=2, sampling=sp)
         assert eng.requests[rid].sampling is sp
-        with pytest.raises(NotImplementedError, match="greedy"):
-            eng.submit([2, 3, 4], max_new_tokens=2,
-                       sampling=SamplingParams(temperature=0.7))
-        with pytest.raises(NotImplementedError, match="greedy"):
-            eng.submit([2, 3, 4], max_new_tokens=2,
-                       sampling=SamplingParams(top_k=40))
+        hot = SamplingParams(temperature=0.7, top_k=40, top_p=0.9, seed=3)
+        rid2 = eng.submit([2, 3, 4], max_new_tokens=2, sampling=hot)
+        assert eng.requests[rid2].sampling is hot
         eng.drain()
+        assert len(eng.results()[rid2]) == 2
+        assert eng.metrics()["n_sampled_tokens"] == 2
 
     def test_sampling_params_validation(self):
         with pytest.raises(ValueError, match="temperature"):
             SamplingParams(temperature=-0.1)
         with pytest.raises(ValueError, match="top_k"):
             SamplingParams(top_k=-1)
+        with pytest.raises(ValueError, match="top_p"):
+            SamplingParams(top_p=0.0)
+        with pytest.raises(ValueError, match="seed"):
+            SamplingParams(seed=-1)
+
+    def test_traffic_sampled_fraction_validation(self):
+        with pytest.raises(ValueError, match="sampled_fraction"):
+            TrafficConfig(sampled_fraction=1.5)
+        with pytest.raises(ValueError, match="temperature"):
+            TrafficConfig(sampled_fraction=0.5, temperature=0.0)
+        with pytest.raises(ValueError, match="top_p"):
+            TrafficConfig(sampled_fraction=0.5, top_p=2.0)
+        # sampled_fraction == 0 keeps the trace stream byte-identical
+        # to the pre-sampling generator (greedy suites replay unchanged)
+        base = TrafficConfig(n_requests=4, seed=3)
+        for a, b in zip(synth_trace(base),
+                        synth_trace(dataclasses.replace(
+                            base, temperature=0.5))):
+            assert a.arrival_time == b.arrival_time
+            np.testing.assert_array_equal(a.prompt, b.prompt)
+            assert a.sampling == b.sampling == SamplingParams()
+
+    def test_traffic_fixed_sample_seed_only_changes_lane_seeds(self):
+        """--sample-seed pins every sampled request's RNG-lane seed
+        WITHOUT shifting the trace rng stream: prompts, arrivals, and
+        the greedy/sampled mask are identical to the per-request-seed
+        trace; only the seeds differ."""
+        base = TrafficConfig(n_requests=8, seed=5, sampled_fraction=0.5,
+                             temperature=0.8)
+        per_req = synth_trace(base)
+        fixed = synth_trace(dataclasses.replace(base, sample_seed=7))
+        assert any(not it.sampling.greedy for it in per_req)
+        for a, b in zip(per_req, fixed):
+            assert a.arrival_time == b.arrival_time
+            np.testing.assert_array_equal(a.prompt, b.prompt)
+            assert a.sampling.greedy == b.sampling.greedy
+            if not b.sampling.greedy:
+                assert b.sampling.seed == 7
+                assert b.sampling == dataclasses.replace(
+                    a.sampling, seed=7)
 
     def test_engine_config_slot_fields_validation(self):
         with pytest.raises(ValueError, match="n_slots"):
