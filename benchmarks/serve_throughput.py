@@ -18,6 +18,12 @@ stochastic temperature/top-k/top-p RNG lanes, half greedy) reporting
 tok/s and TTFT against the all-greedy run of the same trace shape, so
 the cost of the batched sampler rides the per-run artifact too.
 
+Every trace row additionally reports `energy_per_token_J` — the
+ARTEMIS cost model's total simulated energy for the drain divided by
+generated tokens — so the perf trajectory captures efficiency, not
+just tok/s (the per-phase split is in `engine.metrics()` and the
+Chrome trace export; see repro.serve.obs).
+
 Timing: an UNTIMED warmup drain (a throwaway engine over the same
 compiled steps — they are shared per (cfg, policy), see
 `repro.serve.backend._paged_steps` / `_slot_steps`) absorbs jit
@@ -91,7 +97,9 @@ def _bench_one(cfg, params, scheduler: str, n_requests: int,
         "p99_ttft_s": m["p99_ttft_s"],
         "cache_utilization": m["cache_utilization"],
         "n_preemptions": m["n_preemptions"],
-        "n_engine_steps": len(eng.events),
+        "n_engine_steps": m["n_events"],
+        "energy_per_token_J": m["energy_per_token_J"],
+        "total_energy_J": m["total_energy_J"],
     }
 
 
@@ -125,7 +133,8 @@ def _bench_long_prompt(cfg, params, seed: int) -> dict:
         m = eng.metrics()
         row[label] = {"p99_ttft_s": m["p99_ttft_s"],
                       "mean_ttft_s": m["mean_ttft_s"],
-                      "p99_latency_s": m["p99_latency_s"]}
+                      "p99_latency_s": m["p99_latency_s"],
+                      "energy_per_token_J": m["energy_per_token_J"]}
     row["p99_ttft_speedup"] = (row["unchunked_fcfs"]["p99_ttft_s"]
                                / max(row["chunked_cost"]["p99_ttft_s"],
                                      1e-12))
@@ -168,6 +177,7 @@ def _bench_shared_prefix(cfg, params, seed: int) -> dict:
             "logical_cache_utilization": m["logical_cache_utilization"],
             "p99_ttft_s": m["p99_ttft_s"],
             "n_preemptions": m["n_preemptions"],
+            "energy_per_token_J": m["energy_per_token_J"],
         }
     row["physical_pages_saved"] = (
         row["no_sharing"]["physical_pages_allocated"]
@@ -208,6 +218,7 @@ def _bench_sampled(cfg, params, seed: int) -> dict:
             "p99_ttft_s": m["p99_ttft_s"],
             "p99_latency_s": m["p99_latency_s"],
             "n_preemptions": m["n_preemptions"],
+            "energy_per_token_J": m["energy_per_token_J"],
         }
     return row
 
@@ -255,6 +266,8 @@ def _bench_recurrent(seed: int) -> dict:
         "slot_utilization": m["cache_utilization"],
         "n_state_slots": m["n_state_slots"],
         "n_preemptions": m["n_preemptions"],
+        "energy_per_token_J": m["energy_per_token_J"],
+        "total_energy_J": m["total_energy_J"],
     }
 
 

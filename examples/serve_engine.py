@@ -38,10 +38,13 @@ def main():
 
     cfg = dataclasses.replace(configs.get_config(args.arch, smoke=True),
                               compute_dtype="float32")
+    # observability="trace" retains the structured event log this
+    # walkthrough reads back (the default "metrics" level keeps only
+    # counters/histograms and retains no events)
     eng = ServeEngine(cfg, ecfg=EngineConfig(
         page_size=8, n_pages=64, max_batch=3, max_pages_per_seq=8,
         max_seq_len=64, prefill_chunk=args.prefill_chunk,
-        scheduler=args.scheduler))
+        scheduler=args.scheduler, observability="trace"))
     print(f"arch {cfg.name} ({cfg.family}) served by "
           f"{type(eng.backend).__name__}")
 
@@ -118,7 +121,19 @@ def main():
         line += f" | {m['n_state_slots']} state slots"
     print(line + f" | {m['n_sampled_tokens']} sampled tokens | "
           f"{m['n_preemptions']} preemptions | "
-          f"{len(eng.events)} engine steps")
+          f"{m['n_events']} engine events")
+    print(f"energy: {m['total_energy_J']*1e6:.2f} uJ total "
+          f"({m['energy_per_token_J']*1e9:.2f} nJ/token) — prefill "
+          f"{m['prefill_energy_J']*1e6:.2f} uJ, decode "
+          f"{m['decode_energy_J']*1e6:.2f} uJ")
+    # per-request attribution: where each request's joules went
+    print("per-request energy attribution (nJ):")
+    for rid, a in eng.attribution().items():
+        ph = a["phases"]
+        print(f"  request {rid}: prefill "
+              f"{ph['prefill']['energy_J']*1e9:8.1f} | decode "
+              f"{ph['decode']['energy_J']*1e9:8.1f} | "
+              f"{ph['sampling']['tokens']} sampled tokens")
 
 
 if __name__ == "__main__":

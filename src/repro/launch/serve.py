@@ -102,23 +102,31 @@ def serve_engine(arch: str = "qwen3_8b", smoke: bool = True,
                  n_slots: int = 0, sampled_fraction: float = 0.0,
                  temperature: float = 0.8, top_k: int = 0,
                  top_p: float = 1.0, sample_seed: int = -1,
+                 observability: str = "metrics",
+                 trace_json: str | None = None,
                  params=None) -> dict:
     """Continuous-batching serving over a synthetic Poisson trace (any
     family — the engine routes to the right sequence backend). With
     `sampled_fraction > 0` that share of requests decodes stochastic
     (temperature/top-k/top-p on per-request RNG lanes, deterministic
-    for a fixed trace seed); the rest stay greedy."""
+    for a fixed trace seed); the rest stay greedy. `trace_json` (which
+    implies observability="trace") exports the run's structured event
+    log as Chrome trace-event JSON — open it at https://ui.perfetto.dev
+    over the virtual ARTEMIS clock."""
     from repro.serve import (EngineConfig, ServeEngine, TrafficConfig,
-                             synth_trace)
+                             export_chrome_trace, synth_trace)
+    from repro.serve.traffic import trace_stats
     cfg = configs.get_config(arch, smoke=smoke)
     policy = ArithmeticPolicy(mode=policy_mode)
+    if trace_json is not None:
+        observability = "trace"
     max_len = prefix_len + prompt_len + gen_len
     ecfg = EngineConfig(
         page_size=page_size, n_pages=n_pages, max_batch=max_batch,
         max_pages_per_seq=max(1, -(-max_len // page_size)) + 1,
         prefill_chunk=prefill_chunk, scheduler=scheduler,
         prefix_sharing=prefix_sharing, n_slots=n_slots,
-        max_seq_len=max(max_len + 1, 2))
+        max_seq_len=max(max_len + 1, 2), observability=observability)
     eng = ServeEngine(cfg, params=params, policy=policy, ecfg=ecfg,
                       seed=seed)
     trace = synth_trace(TrafficConfig(
@@ -136,7 +144,13 @@ def serve_engine(arch: str = "qwen3_8b", smoke: bool = True,
     m = eng.metrics()
     m["wall_s"] = wall
     m["wall_tok_per_s"] = m["n_generated_tokens"] / max(wall, 1e-9)
-    return {"metrics": m, "results": eng.results(), "events": eng.events}
+    if trace_json is not None:
+        export_chrome_trace(
+            eng.events, trace_json,
+            metadata={"arch": arch, "seed": seed,
+                      "scheduler": scheduler, **trace_stats(trace)})
+    return {"metrics": m, "results": eng.results(),
+            "events": eng.events, "attribution": eng.attribution()}
 
 
 def main() -> None:
@@ -191,6 +205,13 @@ def main() -> None:
                     help="engine: fraction of requests decoded "
                          "stochastically (default: 1.0 when "
                          "--temperature > 0, else 0)")
+    ap.add_argument("--observability", default="metrics",
+                    choices=["metrics", "trace"],
+                    help="engine: 'trace' retains the structured "
+                         "event log (span assembly / Perfetto export)")
+    ap.add_argument("--trace-json", default=None, metavar="PATH",
+                    help="engine: export the run as Chrome trace-event "
+                         "JSON to PATH (implies --observability trace)")
     args = ap.parse_args()
     sampled_fraction = args.sampled_fraction
     if sampled_fraction is None:
@@ -218,7 +239,8 @@ def main() -> None:
         prefix_groups=args.prefix_groups, prefix_len=args.prefix_len,
         n_slots=args.n_slots, sampled_fraction=sampled_fraction,
         temperature=args.temperature, top_k=args.top_k,
-        top_p=args.top_p, sample_seed=args.sample_seed)
+        top_p=args.top_p, sample_seed=args.sample_seed,
+        observability=args.observability, trace_json=args.trace_json)
     m = out["metrics"]
     line = (f"engine: {m['n_done']} requests, "
             f"{m['n_generated_tokens']} tokens "
@@ -236,6 +258,16 @@ def main() -> None:
     if "n_state_slots" in m:         # state-slot backend extras
         line += f" | {m['n_state_slots']} state slots"
     print(line + f" | {m['n_preemptions']} preemptions")
+    print(f"energy: {m['total_energy_J']*1e6:.2f} uJ total "
+          f"({m['energy_per_token_J']*1e9:.2f} nJ/token) | "
+          f"prefill {m['prefill_energy_J']*1e6:.2f} uJ / "
+          f"decode {m['decode_energy_J']*1e6:.2f} uJ | "
+          f"busy {m['busy_virtual_s']*1e3:.3f} of "
+          f"{m['virtual_time_s']*1e3:.3f} virtual ms")
+    if args.trace_json:
+        print(f"trace: wrote {args.trace_json} "
+              f"({m['n_events']} counted events) — open at "
+              f"https://ui.perfetto.dev")
 
 
 if __name__ == "__main__":

@@ -11,8 +11,11 @@ prefix index, copy-on-write), ARTEMIS-cost-aware mixed-step scheduling
 count), per-request stochastic sampling with batch-invariant RNG lanes
 (`sampler`: temperature / top-k / top-p at one compiled
 `(max_batch, vocab)` shape), synthetic Poisson traffic with
-shared-prefix and mixed greedy/sampled modes (`traffic`), and the
-engine driver (`engine`).
+shared-prefix and mixed greedy/sampled modes (`traffic`), the
+observability layer (`obs`: typed lifecycle events, metrics registry
+with exact-percentile streaming histograms, per-request energy
+attribution, span assembly, Chrome trace export over the virtual
+clock), and the engine driver (`engine`).
 
 Entry point: `python -m repro.launch.serve --mode engine` (any family).
 """
@@ -29,6 +32,19 @@ from repro.serve.backend import (
 )
 from repro.serve.cost import ArtemisCostModel
 from repro.serve.engine import ServeEngine, percentile
+from repro.serve.obs import (
+    Event,
+    Histogram,
+    MetricsRegistry,
+    PhaseAttribution,
+    RequestTrace,
+    Tracer,
+    assemble_spans,
+    dumps_chrome_trace,
+    export_chrome_trace,
+    to_chrome_trace,
+    validate_chrome_trace,
+)
 from repro.serve.paged_cache import (
     PageAllocator,
     PagedKVCache,
@@ -57,6 +73,9 @@ __all__ = [
     "PagedKVBackend", "SequenceBackend", "SlotBudget", "StateSlotBackend",
     "make_backend",
     "ArtemisCostModel", "ServeEngine", "percentile",
+    "Event", "Histogram", "MetricsRegistry", "PhaseAttribution",
+    "RequestTrace", "Tracer", "assemble_spans", "dumps_chrome_trace",
+    "export_chrome_trace", "to_chrome_trace", "validate_chrome_trace",
     "PageAllocator", "PagedKVCache", "PrefixIndex", "cow_copy_page",
     "init_paged_cache", "pad_to_page",
     "make_paged_chunked_prefill", "make_paged_decode", "make_paged_prefill",

@@ -98,6 +98,34 @@ must never inspect; it is created by `admit()` and destroyed by
       Assert internal consistency (no aliasing/leaks, indexed memory
       resident, ...); the conformance suite calls it after every step.
 
+## Event-emission contract (observability)
+
+`make_backend` hands every backend the engine's `repro.serve.obs`
+Tracer (`obs`) and virtual-clock read (`clock() -> float`). A backend
+participates in observability through exactly two channels:
+
+  events — memory-lifecycle transitions the backend alone can see are
+      emitted as TYPED obs events stamped with `clock()`, never as raw
+      tuples: today `ShareEvent` (admission matched a resident prefix)
+      and `CowForkEvent` (a write forked a co-owned page). Emit
+      through `obs.emit(...)`; the Tracer decides whether the event is
+      retained (level="trace") or only counted (level="metrics") — the
+      backend must not branch on the level itself. Events must be
+      emitted AT the transition (inside admit()/fund_prefill()/
+      prepare_decode()), so span assembly sees them between the
+      request's admit and finish/preempt markers, and their
+      timestamps must be the current clock() — never a remembered one.
+  registry — monotone counters go into `obs.registry` under the
+      "backend/" prefix (the ONE namespace allowed to differ between
+      backends; every other registry namespace must be
+      backend-independent — the conformance suite pins this).
+      `snapshot_metrics()` reads the registry back so its dict stays
+      derivable from the registry alone.
+
+A new backend that has nothing to share or fork simply emits nothing —
+span assembly and the trace exporter treat backend events as optional
+annotations, never required structure.
+
 Adding a third backend (e.g. hybrid paged+slot for models mixing
 attention and SSM layers) means implementing this class and routing
 its families in `make_backend` — engine and scheduler need no changes.
@@ -114,6 +142,7 @@ import numpy as np
 
 from repro.core.policy import ArithmeticPolicy
 from repro.models.config import ModelConfig
+from repro.serve.obs import CowForkEvent, ShareEvent, Tracer
 from repro.serve.paged_cache import (
     TRASH_PAGE,
     PageAllocator,
@@ -155,6 +184,11 @@ class EngineConfig:
     max_seq_len: int = 512         # per-sequence prompt+gen cap for
     #                                state-slot backends (sizes zamba2's
     #                                attention ring)
+    observability: str = "metrics"   # "metrics" = counters/histograms
+    #                                  only, no per-event retention;
+    #                                  "trace" = keep the full typed
+    #                                  event log for span assembly and
+    #                                  Chrome trace export
 
     def __post_init__(self):
         if self.page_size < 1:
@@ -181,6 +215,10 @@ class EngineConfig:
         if self.max_seq_len < 2:
             raise ValueError(
                 f"max_seq_len must be >= 2, got {self.max_seq_len}")
+        if self.observability not in Tracer.LEVELS:
+            raise ValueError(
+                f"observability must be one of {Tracer.LEVELS}, got "
+                f"{self.observability!r}")
         jnp.dtype(self.cache_dtype)   # raises on nonsense dtypes
 
 
@@ -347,7 +385,7 @@ class PagedKVBackend(SequenceBackend):
     families = ("dense", "moe")
 
     def __init__(self, cfg: ModelConfig, ecfg: EngineConfig,
-                 policy: ArithmeticPolicy, params, emit, clock):
+                 policy: ArithmeticPolicy, params, obs: Tracer, clock):
         self.cfg = cfg
         self.ecfg = ecfg
         self.params = params
@@ -356,12 +394,8 @@ class PagedKVBackend(SequenceBackend):
             dtype=jnp.dtype(ecfg.cache_dtype))
         self.prefix = PrefixIndex(ecfg.page_size)
         self._prefill_fn, self._decode_fn = _paged_steps(cfg, policy)
-        self._emit = emit           # event sink: emit(tuple)
+        self._obs = obs             # Tracer: events + metrics registry
         self._now = clock           # virtual-clock read: now() -> float
-        self._n_prefix_hits = 0     # admissions that shared >= 1 token
-        self._shared_tokens = 0     # prompt tokens covered by sharing
-        self._prompt_tokens = 0     # prompt tokens over all admissions
-        self._n_cow = 0             # copy-on-write page forks
         # rid -> (index generation, matched, pages): the scheduler
         # probes every visible queued request each decide(), so match
         # results are memoized until the index mutates (a queued
@@ -407,7 +441,9 @@ class PagedKVBackend(SequenceBackend):
         reruns for its logits), and count the hit."""
         req.mem = PagedSeqState()
         ep = req.effective_prompt()
-        self._prompt_tokens += len(ep)
+        reg = self._obs.registry
+        reg.inc("backend/n_admissions")
+        reg.inc("backend/prompt_tokens", len(ep))
         if not self.ecfg.prefix_sharing:
             return AdmitPlan()
         matched, spages = self._match_prefix(req)
@@ -419,9 +455,10 @@ class PagedKVBackend(SequenceBackend):
         req.mem.shared_len = matched
         req.seq_len = matched
         req.prefill_pos = min(matched, len(ep) - 1)
-        self._n_prefix_hits += 1
-        self._shared_tokens += matched
-        self._emit(("share", req.rid, matched, self._now()))
+        reg.inc("backend/n_prefix_hits")
+        reg.inc("backend/shared_tokens", matched)
+        self._obs.emit(ShareEvent(ts=self._now(), rid=req.rid,
+                                  matched=matched))
         return AdmitPlan(shared_tokens=matched)
 
     def budget(self) -> PagedBudget:
@@ -498,8 +535,9 @@ class PagedKVBackend(SequenceBackend):
             self.cache.kv, jnp.int32(old), jnp.int32(new))
         req.mem.pages[j] = new
         self._forget_released([old], req.rid)
-        self._n_cow += 1
-        self._emit(("cow", req.rid, old, new, self._now()))
+        self._obs.registry.inc("backend/n_cow_forks")
+        self._obs.emit(CowForkEvent(ts=self._now(), rid=req.rid,
+                                    old_page=old, new_page=new))
         return True
 
     def prepare_decode(self, reqs: list[Request], evict) -> None:
@@ -632,11 +670,13 @@ class PagedKVBackend(SequenceBackend):
         return self.cache.utilization(), self.cache.logical_utilization()
 
     def snapshot_metrics(self) -> dict:
+        reg = self._obs.registry
         return {
-            "n_prefix_hits": self._n_prefix_hits,
-            "prefix_hit_rate": (self._shared_tokens
-                                / max(self._prompt_tokens, 1)),
-            "n_cow_forks": self._n_cow,
+            "n_prefix_hits": int(reg.count("backend/n_prefix_hits")),
+            "prefix_hit_rate": (
+                reg.count("backend/shared_tokens")
+                / max(reg.count("backend/prompt_tokens"), 1)),
+            "n_cow_forks": int(reg.count("backend/n_cow_forks")),
             "physical_pages_allocated":
                 self.cache.allocator.total_allocated,
         }
@@ -708,7 +748,7 @@ class StateSlotBackend(SequenceBackend):
     families = ("rwkv6", "zamba2")
 
     def __init__(self, cfg: ModelConfig, ecfg: EngineConfig,
-                 policy: ArithmeticPolicy, params, emit, clock):
+                 policy: ArithmeticPolicy, params, obs: Tracer, clock):
         self.cfg = cfg
         self.ecfg = ecfg
         self.params = params
@@ -721,7 +761,7 @@ class StateSlotBackend(SequenceBackend):
             cfg, self.n_slots, ecfg.max_seq_len,
             dtype=jnp.dtype(ecfg.cache_dtype))
         self._prefill_fn, self._decode_fn = _slot_steps(cfg, policy)
-        self._emit = emit
+        self._obs = obs
         self._now = clock
 
     # -- admission ----------------------------------------------------------
@@ -745,6 +785,9 @@ class StateSlotBackend(SequenceBackend):
         self.pool = reset_slot(self.pool, self.init_slot,
                                jnp.int32(slot))
         req.mem = SlotSeqState(slot=slot)
+        reg = self._obs.registry
+        reg.inc("backend/n_admissions")
+        reg.inc("backend/prompt_tokens", len(req.effective_prompt()))
         return AdmitPlan()
 
     def probe_shared(self, req: Request) -> int:
@@ -831,14 +874,16 @@ class StateSlotBackend(SequenceBackend):
 
 
 def make_backend(cfg: ModelConfig, ecfg: EngineConfig,
-                 policy: ArithmeticPolicy, params, emit,
+                 policy: ArithmeticPolicy, params, obs: Tracer,
                  clock) -> SequenceBackend:
-    """Route a model family to its sequence backend. `emit` is the
-    engine's event sink (emit(tuple)), `clock` reads the engine's
-    virtual time (clock() -> float)."""
+    """Route a model family to its sequence backend. `obs` is the
+    engine's observability hub (repro.serve.obs.Tracer: typed-event
+    sink + metrics registry), `clock` reads the engine's virtual time
+    (clock() -> float) — see the module docstring's event-emission
+    contract."""
     for backend_cls in (PagedKVBackend, StateSlotBackend):
         if cfg.family in backend_cls.families:
-            return backend_cls(cfg, ecfg, policy, params, emit, clock)
+            return backend_cls(cfg, ecfg, policy, params, obs, clock)
     served = PagedKVBackend.families + StateSlotBackend.families
     raise ValueError(
         f"no sequence backend serves family {cfg.family!r} "

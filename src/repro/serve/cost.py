@@ -16,6 +16,7 @@ cost-aware ordering (pure FCFS).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
 
 from repro.hwsim import DataflowConfig, simulate_model
@@ -29,9 +30,19 @@ class ArtemisCostModel:
     one full model pass on the ARTEMIS hardware model."""
     cfg: ModelConfig
     scheme: str = "token_PP"
-    # per-instance memo (excluded from eq/hash; dies with the instance)
-    _memo: dict = dataclasses.field(
-        default_factory=dict, repr=False, compare=False)
+    # bounded LRU memo over n_tokens (excluded from eq/hash; dies with
+    # the instance): chunk sizes and decode batch widths repeat
+    # constantly during a drain, but an adversarial token-count stream
+    # must not grow the map without bound
+    memo_size: int = 128
+    _memo: collections.OrderedDict = dataclasses.field(
+        default_factory=collections.OrderedDict, repr=False,
+        compare=False)
+
+    def __post_init__(self):
+        if self.memo_size < 1:
+            raise ValueError(
+                f"memo_size must be >= 1, got {self.memo_size}")
 
     def _workload(self, n_tokens: int) -> Workload:
         cfg = self.cfg
@@ -52,10 +63,15 @@ class ArtemisCostModel:
             # 1-token pass used to mask scheduler bugs that priced
             # nothing-to-run candidates
             raise ValueError(f"n_tokens must be >= 1, got {n_tokens}")
-        if n not in self._memo:
-            self._memo[n] = simulate_model(
-                self._workload(n), DataflowConfig(scheme=self.scheme))
-        return self._memo[n]
+        if n in self._memo:
+            self._memo.move_to_end(n)
+            return self._memo[n]
+        res = simulate_model(
+            self._workload(n), DataflowConfig(scheme=self.scheme))
+        self._memo[n] = res
+        while len(self._memo) > self.memo_size:
+            self._memo.popitem(last=False)
+        return res
 
     def price(self, n_tokens: int) -> float:
         """Latency (ns) of one model pass over n_tokens concurrent

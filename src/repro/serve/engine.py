@@ -62,10 +62,21 @@ request alone, greedy pinned against the sequential single-request
 path and sampled pinned against a solo engine run
 (tests/test_serve.py, tests/test_sampling.py and
 tests/test_serve_backend.py pin this for both backends).
+
+OBSERVABILITY: everything the engine publishes flows through one
+`repro.serve.obs.Tracer` — typed lifecycle events (queued / admit /
+prefill chunk / decode round / preempt / COW fork / finish, plus the
+scheduler's decision audit) and a metrics registry of counters and
+exact-percentile streaming histograms. At the default
+`EngineConfig.observability="metrics"` only the registry is fed and no
+per-event objects are retained; `observability="trace"` keeps the full
+event log for span assembly and Chrome trace export
+(`repro.serve.obs.export_chrome_trace`). Every executed step's ARTEMIS
+price/energy is split across its participating lanes into each
+request's `PhaseAttribution`, so per-request joules and
+virtual-seconds by phase sum back to the run's total simulated energy.
 """
 from __future__ import annotations
-
-import math
 
 import jax
 import jax.numpy as jnp
@@ -77,20 +88,25 @@ from repro.models.config import ModelConfig
 from repro.serve import sampler
 from repro.serve.backend import EngineConfig, make_backend
 from repro.serve.cost import ArtemisCostModel
+from repro.serve.obs import (
+    PHASES,
+    AdmitEvent,
+    AdvanceEvent,
+    DecodeStepEvent,
+    FinishEvent,
+    MixedStepEvent,
+    PreemptAllEvent,
+    PreemptEvent,
+    PrefillStepEvent,
+    QueuedEvent,
+    Tracer,
+    percentile,
+)
 from repro.serve.request import Request, RequestState, SamplingParams
 from repro.serve.scheduler import Action, Scheduler, SchedulerConfig
 from repro.serve.traffic import TraceItem
 
-
-def percentile(sorted_vals, p: float) -> float:
-    """Nearest-rank percentile over an ascending-sorted sequence:
-    element ceil(p/100 * n) of the 1-indexed list (so p50 of two values
-    is the LOWER one, and p100 is the max — no off-by-one upward)."""
-    n = len(sorted_vals)
-    if n == 0:
-        return 0.0
-    k = min(max(math.ceil(p / 100.0 * n), 1), n)
-    return float(sorted_vals[k - 1])
+__all__ = ["ServeEngine", "percentile"]
 
 
 class ServeEngine:
@@ -104,23 +120,28 @@ class ServeEngine:
             params = model.init(jax.random.PRNGKey(seed), cfg)
         self.params = params
         self.cost = ArtemisCostModel(cfg, scheme=ecfg.scheme)
-        self.events: list[tuple] = []
+        self.obs = Tracer(level=ecfg.observability)
         self.now = 0.0
         self.backend = make_backend(
             cfg, ecfg, policy, params,
-            emit=self.events.append, clock=lambda: self.now)
+            obs=self.obs, clock=lambda: self.now)
         self.scheduler = Scheduler(
             SchedulerConfig(policy=ecfg.scheduler),
-            self.cost, ecfg.prefill_chunk)
+            self.cost, ecfg.prefill_chunk,
+            obs=self.obs, clock=lambda: self.now)
         self.requests: dict[int, Request] = {}
         self.lanes: list[Request | None] = [None] * ecfg.max_batch
         self._next_rid = 0
         self._admit_seq = 0
         self._admit_order: dict[int, int] = {}   # rid -> admission counter
-        self._util_sum = 0.0
-        self._logical_util_sum = 0.0
-        self._util_samples = 0
-        self._n_sampled_tokens = 0   # tokens drawn on non-greedy lanes
+
+    @property
+    def events(self) -> list:
+        """The retained structured event log — populated only at
+        `observability="trace"`; empty at the default metrics level
+        (the whole point: a metrics-level drain keeps no per-event
+        objects)."""
+        return self.obs.events
 
     # -- submission ---------------------------------------------------------
 
@@ -176,6 +197,10 @@ class ServeEngine:
         self.requests[rid] = Request(
             rid=rid, prompt=prompt, max_new_tokens=max_new_tokens,
             arrival_time=float(arrival_time), sampling=sampling)
+        if self.obs.tracing:
+            self.obs.emit(QueuedEvent(
+                ts=float(arrival_time), rid=rid,
+                prompt_len=len(prompt), max_new_tokens=max_new_tokens))
         return rid
 
     def submit_trace(self, items: list[TraceItem]) -> list[int]:
@@ -209,9 +234,10 @@ class ServeEngine:
               if r is not None and r.state is RequestState.PREFILL]
         return sorted(pf, key=lambda r: self._admit_order[r.rid])
 
-    def step(self) -> tuple | None:
-        """Execute one scheduler action; returns the event or None when
-        there is nothing left to do."""
+    def step(self):
+        """Execute one scheduler action; returns the event (a typed
+        `repro.serve.obs` event, tuple-compatible with the legacy log)
+        or None when there is nothing left to do."""
         action = self.scheduler.decide(
             self._queued_visible(), self._next_arrival(),
             self._prefilling(), self._decoding(),
@@ -220,17 +246,15 @@ class ServeEngine:
             return None
         if action.kind == "advance":
             self.now = action.next_time
-            ev = ("advance", action.next_time)
-        else:
-            ev = self._do_mixed(action)
-        if ev is not None:
-            self.events.append(ev)
-            if ev[0] not in ("advance", "preempt_all"):
-                # utilization of EXECUTED batches
-                phys, logical = self.backend.utilization()
-                self._util_sum += phys
-                self._logical_util_sum += logical
-                self._util_samples += 1
+            return self.obs.emit(AdvanceEvent(ts=action.next_time))
+        ev = self._do_mixed(action)
+        if ev is not None and ev.kind != "preempt_all":
+            # utilization of EXECUTED batches
+            phys, logical = self.backend.utilization()
+            reg = self.obs.registry
+            reg.inc("engine/util_phys_sum", phys)
+            reg.inc("engine/util_logical_sum", logical)
+            reg.inc("engine/util_samples")
         return ev
 
     def drain(self, max_steps: int = 100_000) -> None:
@@ -251,7 +275,8 @@ class ServeEngine:
     # -- actions ------------------------------------------------------------
 
     def _evict_newest(self, exclude: Request | None = None,
-                      newer_than: Request | None = None) -> bool:
+                      newer_than: Request | None = None,
+                      reason: str = "memory_pressure") -> bool:
         """Backend eviction hook: preempt the latest-admitted laned
         request (optionally excluding one, optionally only requests
         admitted after `newer_than`). Returns False when no such
@@ -264,10 +289,12 @@ class ServeEngine:
         if not victims:
             return False
         self._preempt(max(victims,
-                          key=lambda r: self._admit_order[r.rid]))
+                          key=lambda r: self._admit_order[r.rid]),
+                      reason=reason)
         return True
 
-    def _preempt(self, req: Request) -> None:
+    def _preempt(self, req: Request,
+                 reason: str = "memory_pressure") -> None:
         phase = "prefill" if req.state is RequestState.PREFILL else "decode"
         # the backend drops only THIS request's memory (anything shared
         # with other requests stays resident)
@@ -278,7 +305,9 @@ class ServeEngine:
         req.lane = -1
         req.state = RequestState.QUEUED
         req.n_preemptions += 1
-        self.events.append(("preempt", req.rid, phase, self.now))
+        self.obs.registry.inc("engine/n_preemptions")
+        self.obs.emit(PreemptEvent(ts=self.now, rid=req.rid,
+                                   phase=phase, reason=reason))
 
     def _decode_growth_order(self) -> list[Request]:
         """Decode lanes oldest-admission first, so the backend's
@@ -303,6 +332,7 @@ class ServeEngine:
         top_p = np.ones((b,), np.float32)
         seed = np.zeros((b,), np.uint32)
         pos = np.zeros((b,), np.int32)
+        reg = self.obs.registry
         for row, req in rows:
             sp = req.sampling
             temp[row] = sp.temperature
@@ -310,12 +340,18 @@ class ServeEngine:
             top_p[row] = sp.top_p
             seed[row] = sp.seed
             pos[row] = len(req.generated)
-            if not sp.greedy:
-                self._n_sampled_tokens += 1
+            if sp.greedy:
+                reg.inc(sampler.N_GREEDY_KEY)
+            else:
+                reg.inc(sampler.N_SAMPLED_KEY)
+                # the virtual clock prices only the model forward, so
+                # the sampling phase carries the token mix at zero
+                # energy/time (see PhaseAttribution)
+                req.attr.add("sampling", 1, 0.0, 0.0)
         return np.asarray(sampler.sample_tokens(
             logits, temp, top_k, top_p, seed, pos))
 
-    def _do_mixed(self, action: Action) -> tuple | None:
+    def _do_mixed(self, action: Action):
         """Execute a prefill / decode / mixed step: fund all memory
         first (decode write targets, then prefill chunks — preemption
         between the halves is resolved before anything runs), then the
@@ -324,11 +360,17 @@ class ServeEngine:
         preempted_before = sum(r.n_preemptions
                                for r in self.requests.values())
 
+        def evict_decode(**kw):
+            return self._evict_newest(reason="decode_pressure", **kw)
+
+        def evict_prefill(**kw):
+            return self._evict_newest(reason="prefill_funding", **kw)
+
         # 1. make decode write targets safe, oldest admissions first
         #    so eviction pressure lands on the newest request
         if action.decode:
             self.backend.prepare_decode(self._decode_growth_order(),
-                                        self._evict_newest)
+                                        evict_decode)
 
         # 2. prefill chunk funding (plan order = admission order, then
         #    FCFS admissions); a request that was evicted after the
@@ -345,12 +387,16 @@ class ServeEngine:
                 req.state = RequestState.PREFILL
                 self._admit_order[req.rid] = self._admit_seq
                 self._admit_seq += 1
-                self.backend.admit(req)
+                plan = self.backend.admit(req)
+                if self.obs.tracing:
+                    self.obs.emit(AdmitEvent(
+                        ts=self.now, rid=req.rid, lane=lane,
+                        shared_tokens=plan.shared_tokens))
             elif req.state is not RequestState.PREFILL:
                 continue       # preempted between plan and execution
             remaining = len(req.effective_prompt()) - req.prefill_pos
             n = self.backend.fund_prefill(req, min(want, remaining),
-                                          self._evict_newest)
+                                          evict_prefill)
             if n <= 0:
                 continue
             chunks.append((req, n))
@@ -369,7 +415,7 @@ class ServeEngine:
         run_decode = bool(action.decode)
         if not chunks and not run_decode and self._decoding():
             self.backend.prepare_decode(self._decode_growth_order(),
-                                        self._evict_newest)
+                                        evict_decode)
             run_decode = True
         dec_batch: list[Request] = []
         dec_next = None
@@ -386,7 +432,8 @@ class ServeEngine:
         if chunks:
             chunk_logits = self.backend.prefill_step(chunks)
 
-        # 5. one clock advance for the whole composed step
+        # 5. one clock advance for the whole composed step, priced and
+        #    energy-attributed once over the composed token count
         n_total = len(dec_batch) + sum(n for _, n in chunks)
         if n_total == 0:
             preempted = sum(r.n_preemptions
@@ -395,16 +442,47 @@ class ServeEngine:
                 # nothing ran, but the released memory makes the
                 # re-queued requests immediately prefillable —
                 # progress, not a stall (drain keeps going)
-                return ("preempt_all", self.now)
+                return self.obs.emit(PreemptAllEvent(ts=self.now))
             return None
-        self.now += self.cost.price(n_total) * 1e-9
+        price_ns = self.cost.price(n_total)
+        energy_pj = self.cost.energy(n_total)
+        dur_s = price_ns * 1e-9
+        self.now += dur_s
+        reg = self.obs.registry
+        reg.inc("engine/busy_virtual_s", dur_s)
+        reg.inc("engine/energy_pj", energy_pj)
+        reg.observe("engine/step_tokens", n_total)
+        # split the step's price/energy across participating lanes by
+        # token share — summed over all requests this reproduces the
+        # run's total simulated energy exactly (modulo fp)
+        e_tok_J = energy_pj * 1e-12 / n_total
+        t_tok_s = dur_s / n_total
+        for req in dec_batch:
+            req.attr.add("decode", 1, e_tok_J, t_tok_s)
+        for req, n in chunks:
+            req.attr.add("prefill", n, n * e_tok_J, n * t_tok_s)
+
+        # the step event is emitted BEFORE results apply, so in the
+        # trace its execution slices precede the finish/preempt marks
+        # they lead to (span assembly relies on that nesting)
+        dec_rids = tuple(r.rid for r in dec_batch)
+        chunk_plan = tuple((req.rid, n) for req, n in chunks)
+        fields = dict(ts=self.now, chunks=chunk_plan,
+                      decode_rids=dec_rids, n_tokens=n_total,
+                      dur_s=dur_s, price_ns=price_ns,
+                      energy_pj=energy_pj)
+        if action.kind == "decode" or not chunk_plan:
+            ev = DecodeStepEvent(**fields)
+        elif action.kind == "prefill" or not dec_rids:
+            ev = PrefillStepEvent(**fields)
+        else:
+            ev = MixedStepEvent(**fields)
+        self.obs.emit(ev)
 
         # 6. apply decode results
-        dec_rids = []
         for req in dec_batch:
             req.generated.append(int(dec_next[req.lane]))
             req.seq_len += 1
-            dec_rids.append(req.rid)
             if req.done:
                 self._finish(req)
 
@@ -414,7 +492,6 @@ class ServeEngine:
         #    last-position logits are gathered into one (max_batch, V)
         #    buffer so prefill first-tokens go through the SAME
         #    compiled sampler shape as decode rounds.
-        chunk_plan = [(req.rid, n) for req, n in chunks]
         completing = [(i, req) for i, (req, n) in enumerate(chunks)
                       if req.prefill_pos >= len(req.effective_prompt())]
         if completing:
@@ -437,11 +514,7 @@ class ServeEngine:
                 else:
                     req.state = RequestState.DECODE
 
-        if action.kind == "decode" or not chunk_plan:
-            return ("decode", tuple(dec_rids), self.now)
-        if action.kind == "prefill" or not dec_rids:
-            return ("prefill", tuple(chunk_plan), self.now)
-        return ("mixed", tuple(chunk_plan), tuple(dec_rids), self.now)
+        return ev
 
     def _finish(self, req: Request) -> None:
         self.backend.release(req)
@@ -450,6 +523,23 @@ class ServeEngine:
             req.lane = -1
         req.state = RequestState.DONE
         req.t_done = self.now
+        reg = self.obs.registry
+        reg.inc("engine/n_done")
+        reg.inc("engine/n_generated_tokens", len(req.generated))
+        reg.observe("engine/latency_s", req.latency())
+        ttft = req.ttft()
+        if ttft is not None:
+            reg.observe("engine/ttft_s", ttft)
+        if self.obs.tracing:
+            a = req.attr
+            self.obs.emit(FinishEvent(
+                ts=self.now, rid=req.rid,
+                n_generated=len(req.generated),
+                prefill_energy_J=a.energy_J["prefill"],
+                decode_energy_J=a.energy_J["decode"],
+                sampling_energy_J=a.energy_J["sampling"],
+                prefill_s=a.virtual_s["prefill"],
+                decode_s=a.virtual_s["decode"]))
 
     # -- results ------------------------------------------------------------
 
@@ -457,33 +547,62 @@ class ServeEngine:
         return {rid: np.asarray(r.generated, np.int32)
                 for rid, r in sorted(self.requests.items())}
 
+    def attribution(self) -> dict[int, dict]:
+        """Per-request energy/cost attribution: rid -> the request's
+        `PhaseAttribution.summary()` (tokens / joules / virtual-seconds
+        split over prefill, decode, and sampling). Covers every
+        submitted request, finished or not; summing `total_energy_J`
+        over all rids reproduces `metrics()["total_energy_J"]` within
+        fp tolerance."""
+        return {rid: r.attr.summary()
+                for rid, r in sorted(self.requests.items())}
+
     def metrics(self) -> dict:
-        done = [r for r in self.requests.values()
-                if r.state is RequestState.DONE]
-        lats = sorted(r.latency() for r in done)
+        """Aggregate run metrics, read back from the obs registry
+        (every pre-obs key keeps its exact value — the registry's
+        histograms are exact under their bin budget, and counters
+        accumulate in the same order the old ad-hoc fields did)."""
+        reg = self.obs.registry
+        lat_h = reg.hist("engine/latency_s")
+        ttft_h = reg.hist("engine/ttft_s")
         # every request the engine admits generates >= 1 token (submit
         # rejects max_new_tokens < 1), so done requests always have a
-        # first-token time — but never let a None skew the percentile
-        # sort if an external driver bypasses submit()
-        ttfts = sorted(t for t in (r.ttft() for r in done)
-                       if t is not None)
-        n_tok = sum(len(r.generated) for r in done)
+        # first-token time — ttft_h simply has no entry otherwise
+        ttfts = ttft_h.values() if ttft_h is not None else []
+        n_tok = int(reg.count("engine/n_generated_tokens"))
+        samples = reg.count("engine/util_samples")
+        total_energy_J = reg.count("engine/energy_pj") * 1e-12
+        phase_energy_J = {p: 0.0 for p in PHASES}
+        phase_virtual_s = {p: 0.0 for p in PHASES}
+        for r in self.requests.values():
+            for p in PHASES:
+                phase_energy_J[p] += r.attr.energy_J[p]
+                phase_virtual_s[p] += r.attr.virtual_s[p]
         return {
-            "n_done": len(done),
+            "n_done": int(reg.count("engine/n_done")),
             "n_generated_tokens": n_tok,
             "virtual_time_s": self.now,
             "virtual_tok_per_s": n_tok / max(self.now, 1e-12),
-            "p50_latency_s": percentile(lats, 50),
-            "p99_latency_s": percentile(lats, 99),
+            "p50_latency_s": (lat_h.percentile(50) if lat_h else 0.0),
+            "p99_latency_s": (lat_h.percentile(99) if lat_h else 0.0),
             "mean_ttft_s": (float(np.mean(ttfts)) if ttfts else 0.0),
-            "p50_ttft_s": percentile(ttfts, 50),
-            "p99_ttft_s": percentile(ttfts, 99),
-            "n_preemptions": sum(r.n_preemptions
-                                 for r in self.requests.values()),
-            "n_sampled_tokens": self._n_sampled_tokens,
-            "cache_utilization": (self._util_sum
-                                  / max(self._util_samples, 1)),
-            "logical_cache_utilization": (self._logical_util_sum
-                                          / max(self._util_samples, 1)),
+            "p50_ttft_s": (ttft_h.percentile(50) if ttft_h else 0.0),
+            "p99_ttft_s": (ttft_h.percentile(99) if ttft_h else 0.0),
+            "n_preemptions": int(reg.count("engine/n_preemptions")),
+            "n_sampled_tokens": int(reg.count(sampler.N_SAMPLED_KEY)),
+            "cache_utilization": (reg.count("engine/util_phys_sum")
+                                  / max(samples, 1)),
+            "logical_cache_utilization": (
+                reg.count("engine/util_logical_sum") / max(samples, 1)),
+            # observability additions (PR 6)
+            "n_events": int(reg.count("engine/n_events")),
+            "busy_virtual_s": reg.count("engine/busy_virtual_s"),
+            "total_energy_J": total_energy_J,
+            "prefill_energy_J": phase_energy_J["prefill"],
+            "decode_energy_J": phase_energy_J["decode"],
+            "sampling_energy_J": phase_energy_J["sampling"],
+            "prefill_virtual_s": phase_virtual_s["prefill"],
+            "decode_virtual_s": phase_virtual_s["decode"],
+            "energy_per_token_J": total_energy_J / max(n_tok, 1),
             **self.backend.snapshot_metrics(),
         }

@@ -31,6 +31,8 @@ import enum
 
 import numpy as np
 
+from repro.serve.obs import PhaseAttribution
+
 
 class RequestState(enum.Enum):
     QUEUED = "queued"
@@ -97,6 +99,12 @@ class Request:
     # metrics (virtual-clock seconds)
     t_first_token: float | None = None
     t_done: float | None = None
+    # per-phase energy/time attribution: each executed step's ARTEMIS
+    # price is split across participating lanes by token share
+    # (repro.serve.obs.PhaseAttribution); recompute after preemption
+    # re-attributes — energy spent is energy spent
+    attr: PhaseAttribution = dataclasses.field(
+        default_factory=PhaseAttribution)
 
     @property
     def prompt_len(self) -> int:

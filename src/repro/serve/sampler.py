@@ -45,6 +45,13 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+# Metrics-registry keys the engine publishes sampler activity under
+# (repro.serve.obs.MetricsRegistry): one counter per token drawn on a
+# non-greedy RNG lane, one per greedy argmax token. Defined here so the
+# sampler's observable surface lives next to the sampling contract.
+N_SAMPLED_KEY = "sampler/n_sampled_tokens"
+N_GREEDY_KEY = "sampler/n_greedy_tokens"
+
 
 def lane_key(seed, pos):
     """RNG key for a request's `pos`-th sampled token: a pure function

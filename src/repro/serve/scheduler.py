@@ -33,6 +33,14 @@ Two policies:
          token than a busy decode batch and is deferred, preserving
          the original head-of-line guarantee when chunking is off.
 
+AUDIT TRAIL: when the engine runs at `observability="trace"` the
+scheduler emits one `DecisionEvent` (repro.serve.obs) per decide() —
+the candidate compositions it priced with their per-token cost/energy,
+what it chose and the reason code, the chunk plan, and every
+admit/defer outcome with the budget-probe numbers that drove it — so
+"why was this request deferred" is answerable from the event log
+alone. At the default metrics level no audit objects are built.
+
 The scheduler is a pure function of its inputs — determinism under a
 fixed trace is a test invariant. It knows NOTHING about how sequence
 memory is organized: each decide() receives a fresh `BudgetProbe` from
@@ -54,6 +62,7 @@ from __future__ import annotations
 import dataclasses
 
 from repro.serve.cost import ArtemisCostModel
+from repro.serve.obs import DecisionEvent, Tracer
 from repro.serve.request import Request
 
 
@@ -79,7 +88,11 @@ class SchedulerConfig:
 
 class Scheduler:
     def __init__(self, sched_cfg: SchedulerConfig,
-                 cost: ArtemisCostModel | None, prefill_chunk: int = 32):
+                 cost: ArtemisCostModel | None, prefill_chunk: int = 32,
+                 obs: Tracer | None = None, clock=None):
+        """`obs`/`clock` (the engine's Tracer and virtual-clock read)
+        enable the per-decide() audit trail; without them — or at the
+        default metrics level — decide() builds no audit objects."""
         if sched_cfg.policy == "cost" and cost is None:
             raise ValueError("cost policy needs a cost model")
         if prefill_chunk < 1:
@@ -87,14 +100,22 @@ class Scheduler:
         self.cfg = sched_cfg
         self.cost = cost
         self.prefill_chunk = prefill_chunk
+        self.obs = obs
+        self.clock = clock or (lambda: 0.0)
+
+    @property
+    def _auditing(self) -> bool:
+        return self.obs is not None and self.obs.tracing
 
     def _plan_chunks(self, queued: list[Request],
                      prefilling: list[Request], free_lanes: int,
-                     budget) -> tuple[tuple[int, int], ...]:
+                     budget, audit: dict | None = None
+                     ) -> tuple[tuple[int, int], ...]:
         """Compose this step's prefill chunk batch within the lane
         budget and the backend's memory budget. Continuing requests
         already own a lane; queued admissions consume one free lane
-        each."""
+        each. When `audit` is given, record each admit/defer outcome
+        into it (keys "admitted"/"deferred") with a reason code."""
         chunk = self.prefill_chunk
         plan: list[tuple[int, int]] = []
         for i, r in enumerate(prefilling):
@@ -102,17 +123,33 @@ class Scheduler:
             n = budget.grant_continue(r, min(chunk, remaining),
                                       forced=(i == 0))
             if n <= 0:
+                if audit is not None:
+                    audit["deferred"].append((r.rid, "budget_exhausted"))
                 continue
             plan.append((r.rid, n))
         lanes_left = free_lanes
+        blocked = None               # FCFS head that failed admission
         for r in queued:
             if lanes_left <= 0:
+                if audit is not None:
+                    audit["deferred"].append((r.rid, "no_free_lane"))
+                    continue         # keep auditing the rest
                 break
+            if blocked is not None:
+                # strict FCFS: the head is stuck, so is everyone behind
+                audit["deferred"].append((r.rid, "fcfs_head_blocked"))
+                continue
             n = budget.grant_admit(r, chunk)
             if n <= 0:
-                break   # strict FCFS: never skip the head to admit later
+                if audit is None:
+                    break   # never skip the head to admit later
+                audit["deferred"].append((r.rid, "budget_exhausted"))
+                blocked = r.rid
+                continue
             lanes_left -= 1
             plan.append((r.rid, n))
+            if audit is not None:
+                audit["admitted"].append((r.rid, n))
         return tuple(plan)
 
     def decide(self, queued: list[Request], next_arrival: float | None,
@@ -122,18 +159,37 @@ class Scheduler:
         mid-prefill requests in admission order; decoding: active
         decode-lane requests; budget: a fresh BudgetProbe from the
         engine's backend (consumed by this decide())."""
-        plan = self._plan_chunks(queued, prefilling, free_lanes, budget)
+        audit = ({"admitted": [], "deferred": []}
+                 if self._auditing else None)
+        budget_free = getattr(budget, "free", None) if audit else None
+        plan = self._plan_chunks(queued, prefilling, free_lanes, budget,
+                                 audit)
         n_chunk = sum(n for _, n in plan)
         n_dec = len(decoding)
 
+        def _record(chosen: str, reason: str,
+                    scored: tuple = ()) -> None:
+            if audit is None:
+                return
+            self.obs.emit(DecisionEvent(
+                ts=self.clock(), chosen=chosen, reason=reason,
+                candidates=scored, plan=plan, n_decode=n_dec,
+                admitted=tuple(audit["admitted"]),
+                deferred=tuple(audit["deferred"]),
+                budget_free=budget_free))
+
         if not n_chunk and not n_dec:
             if next_arrival is not None:
+                _record("advance", "nothing_runnable_before_arrival")
                 return Action("advance", next_time=next_arrival)
+            _record("idle", "no_work")
             return Action("idle")
 
         if self.cfg.policy == "fcfs":
             if n_chunk:
+                _record("prefill", "fcfs_prompt_first")
                 return Action("prefill", prefill=plan)
+            _record("decode", "fcfs_no_prefill_work")
             return Action("decode", decode=True)
 
         # cost: rank candidate compositions by simulated price per
@@ -149,6 +205,13 @@ class Scheduler:
             candidates,
             key=lambda c: (self.cost.price_per_token(c[2]),
                            self.cost.energy_per_token(c[2]), c[0]))[1]
+        if audit is not None:
+            scored = tuple(
+                (name, n, self.cost.price_per_token(n),
+                 self.cost.energy_per_token(n))
+                for _, name, n in candidates)
+            _record(kind, "only_candidate" if len(candidates) == 1
+                    else "cheapest_per_token", scored)
         if kind == "mixed":
             return Action("mixed", prefill=plan, decode=True)
         if kind == "prefill":

@@ -117,6 +117,24 @@ class TraceItem:
         default_factory=SamplingParams)
 
 
+def trace_stats(items: list[TraceItem]) -> dict:
+    """Summary statistics of a trace — the workload-shape metadata the
+    launch CLI stamps into exported Chrome traces so a serve_trace.json
+    is self-describing."""
+    if not items:
+        return {"n_requests": 0}
+    return {
+        "n_requests": len(items),
+        "total_prompt_tokens": int(sum(len(it.prompt) for it in items)),
+        "total_max_new_tokens": int(sum(it.max_new_tokens
+                                        for it in items)),
+        "n_sampled_requests": int(sum(1 for it in items
+                                      if not it.sampling.greedy)),
+        "first_arrival_s": float(min(it.arrival_time for it in items)),
+        "last_arrival_s": float(max(it.arrival_time for it in items)),
+    }
+
+
 def synth_trace(tc: TrafficConfig) -> list[TraceItem]:
     """Deterministic Poisson trace; sorted by arrival time."""
     rng = np.random.default_rng(tc.seed)

@@ -1,0 +1,478 @@
+"""Tests for the serve-layer observability stack (repro.serve.obs).
+
+Pins the PR's acceptance points: nearest-rank `percentile` edge cases
+(the single shared implementation), streaming-histogram exactness under
+the bin budget and graceful collapse past it, registry semantics, the
+legacy-tuple compatibility of typed events, tracer level gating (the
+default metrics level retains NO event objects), the bounded
+ArtemisCostModel simulate memo (cached == uncached, LRU-bounded),
+span-assembly well-formedness validation against hand-built malformed
+logs, per-request energy attribution summing to the run's total
+simulated energy, and the Chrome trace-event export: valid per
+`validate_chrome_trace`, `json.loads`-round-trippable, byte-identical
+across repeated exports of the same drain, and accepted by the
+`python -m repro.serve.obs` CLI validator.
+"""
+import dataclasses
+import json
+import math
+
+import jax
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.models import model
+from repro.serve import (
+    ArtemisCostModel,
+    EngineConfig,
+    Histogram,
+    MetricsRegistry,
+    ServeEngine,
+    Tracer,
+    TrafficConfig,
+    assemble_spans,
+    dumps_chrome_trace,
+    percentile,
+    synth_trace,
+    to_chrome_trace,
+    validate_chrome_trace,
+)
+from repro.serve import obs as obslib
+from repro.serve.obs import (
+    AdmitEvent,
+    AdvanceEvent,
+    DecodeStepEvent,
+    FinishEvent,
+    MixedStepEvent,
+    PrefillStepEvent,
+    PreemptEvent,
+    QueuedEvent,
+    ShareEvent,
+)
+
+
+# ---------------------------------------------------------------------------
+# percentile (the single shared implementation)
+# ---------------------------------------------------------------------------
+
+
+class TestPercentile:
+    def test_empty_is_zero(self):
+        assert percentile([], 50) == 0.0
+        assert percentile([], 0) == 0.0
+        assert percentile([], 100) == 0.0
+
+    def test_single_element_every_p(self):
+        for p in (0, 1, 50, 99, 100):
+            assert percentile([7.0], p) == 7.0
+
+    def test_nearest_rank_two_elements(self):
+        # p50 of two values is the LOWER one (ceil(0.5*2) = rank 1)
+        assert percentile([1.0, 9.0], 50) == 1.0
+        assert percentile([1.0, 9.0], 51) == 9.0
+        assert percentile([1.0, 9.0], 100) == 9.0
+
+    def test_p0_clamps_to_min_p100_to_max(self):
+        vals = [float(v) for v in range(1, 11)]
+        assert percentile(vals, 0) == 1.0
+        assert percentile(vals, 100) == 10.0
+        # no off-by-one upward: p90 of 10 values is rank 9
+        assert percentile(vals, 90) == 9.0
+        assert percentile(vals, 91) == 10.0
+
+    def test_matches_brute_force_nearest_rank(self):
+        rng = np.random.default_rng(0)
+        vals = sorted(rng.uniform(0, 1, 37).tolist())
+        for p in (1, 10, 25, 50, 75, 90, 99):
+            k = min(max(math.ceil(p / 100 * len(vals)), 1), len(vals))
+            assert percentile(vals, p) == vals[k - 1]
+
+    def test_engine_reexports_the_same_function(self):
+        # the dedupe satellite: engine.percentile IS obs.percentile
+        from repro.serve import engine as englib
+        assert englib.percentile is obslib.percentile
+
+
+# ---------------------------------------------------------------------------
+# streaming histogram
+# ---------------------------------------------------------------------------
+
+
+class TestHistogram:
+    def test_exact_mode_matches_sorted_list(self):
+        rng = np.random.default_rng(1)
+        vals = rng.uniform(1e-6, 1e3, 200).tolist()
+        h = Histogram()
+        for v in vals:
+            h.observe(v)
+        assert h.exact
+        assert h.values() == sorted(vals)
+        for p in (1, 50, 90, 99, 100):
+            assert h.percentile(p) == percentile(sorted(vals), p)
+        assert h.mean() == pytest.approx(np.mean(vals), rel=1e-12)
+        assert h.n == 200
+        assert h.vmin == min(vals) and h.vmax == max(vals)
+
+    def test_weighted_observation(self):
+        h = Histogram()
+        h.observe(3.0, n=5)
+        h.observe(1.0, n=1)
+        assert h.n == 6
+        assert h.values() == [1.0, 3.0, 3.0, 3.0, 3.0, 3.0]
+        assert h.percentile(50) == 3.0
+        assert h.mean() == pytest.approx(16.0 / 6)
+
+    def test_empty_snapshot(self):
+        s = Histogram().snapshot()
+        assert s == {"count": 0, "mean": 0.0, "min": 0.0, "max": 0.0,
+                     "p50": 0.0, "p90": 0.0, "p99": 0.0, "exact": True}
+
+    def test_collapse_bounds_memory_keeps_exact_aggregates(self):
+        rng = np.random.default_rng(2)
+        vals = rng.uniform(1.0, 1e4, 500).tolist()   # all distinct
+        h = Histogram(max_bins=64)
+        for v in vals:
+            h.observe(v)
+        assert not h.exact, "500 distinct values must exceed 64 bins"
+        # memory stays bounded: log-spaced bins over [1, 1e4] at
+        # 64/decade can't exceed ~4 decades * 64 + slack
+        assert len(h._counts) <= 64 * 5
+        # count / sum / min / max survive the collapse exactly
+        assert h.n == 500
+        assert h.total == pytest.approx(sum(vals), rel=1e-12)
+        assert h.vmin == min(vals) and h.vmax == max(vals)
+        # percentiles degrade to bin-representative (~1.8% at 64/dec)
+        for p in (50, 90, 99):
+            exact = percentile(sorted(vals), p)
+            assert h.percentile(p) == pytest.approx(exact, rel=0.05)
+        with pytest.raises(RuntimeError, match="collapsed"):
+            h.values()
+
+    def test_collapse_preserves_sign_and_zero(self):
+        h = Histogram(max_bins=4)
+        for v in (-3.0, -1.0, 0.0, 1.0, 3.0, 7.0):
+            h.observe(v)
+        assert not h.exact
+        assert h.vmin == -3.0 and h.vmax == 7.0
+        assert h.percentile(1) < 0 < h.percentile(100)
+        assert 0.0 in h._counts    # zero is kept exact, not log-binned
+
+    def test_validation(self):
+        with pytest.raises(ValueError, match="max_bins"):
+            Histogram(max_bins=0)
+        with pytest.raises(ValueError, match="bins_per_decade"):
+            Histogram(bins_per_decade=0)
+        with pytest.raises(ValueError, match="count"):
+            Histogram().observe(1.0, n=0)
+
+
+# ---------------------------------------------------------------------------
+# metrics registry
+# ---------------------------------------------------------------------------
+
+
+class TestMetricsRegistry:
+    def test_counters_gauges_hists(self):
+        reg = MetricsRegistry()
+        reg.inc("a/n")
+        reg.inc("a/n", 4)
+        assert reg.count("a/n") == 5
+        assert reg.count("missing") == 0
+        assert reg.count("missing", default=-1) == -1
+        reg.set_gauge("a/g", 0.25)
+        assert reg.gauge("a/g") == 0.25
+        assert reg.gauge("missing") == 0.0
+        reg.observe("a/h", 2.0)
+        reg.observe("a/h", 4.0)
+        assert reg.hist("a/h").n == 2
+        assert reg.hist("missing") is None
+        assert reg.keys() == ["a/g", "a/h", "a/n"]
+        snap = reg.snapshot()
+        assert snap["a/n"] == 5 and snap["a/g"] == 0.25
+        assert snap["a/h"]["count"] == 2
+        assert list(snap) == sorted(snap)
+
+    def test_int_counters_stay_int(self):
+        # prefix_hit_rate et al. depend on int counters staying int
+        reg = MetricsRegistry()
+        reg.inc("n", 2)
+        reg.inc("n", 3)
+        assert isinstance(reg.count("n"), int)
+
+
+# ---------------------------------------------------------------------------
+# typed events: legacy-tuple compatibility + tracer gating
+# ---------------------------------------------------------------------------
+
+
+class TestEventsAndTracer:
+    def test_events_index_and_unpack_like_legacy_tuples(self):
+        sh = ShareEvent(ts=2.5, rid=3, matched=16)
+        assert sh[0] == "share" and sh[1] == 3 and sh[2] == 16
+        kind, rid, matched, ts = sh
+        assert (kind, rid, matched, ts) == ("share", 3, 16, 2.5)
+        assert len(sh) == 4
+        pf = PrefillStepEvent(ts=1.0, chunks=((0, 8), (1, 4)),
+                              n_tokens=12, dur_s=0.5)
+        assert pf[0] == "prefill" and pf[1] == ((0, 8), (1, 4))
+        assert pf.t_start == pytest.approx(0.5)
+        mx = MixedStepEvent(ts=1.0, chunks=((0, 8),), decode_rids=(1, 2))
+        assert (mx[0], mx[1], mx[2]) == ("mixed", ((0, 8),), (1, 2))
+        adv = AdvanceEvent(ts=3.0)
+        assert tuple(adv) == ("advance", 3.0)
+        pre = PreemptEvent(ts=4.0, rid=1, phase="decode",
+                           reason="decode_pressure")
+        # legacy preempt tuple has NO reason field — length pinned
+        assert tuple(pre) == ("preempt", 1, "decode", 4.0)
+
+    def test_counted_kinds_match_legacy_log(self):
+        # exactly the kinds the old tuple log retained bump n_events
+        counted = {"advance", "preempt_all", "decode", "prefill",
+                   "mixed", "preempt", "share", "cow"}
+        uncounted = {"queued", "admit", "finish", "decision"}
+        for cls in (AdvanceEvent, PreemptEvent, ShareEvent,
+                    PrefillStepEvent, DecodeStepEvent, MixedStepEvent):
+            assert cls.kind in counted and cls.counted
+        for cls in (QueuedEvent, AdmitEvent, FinishEvent,
+                    obslib.DecisionEvent):
+            assert cls.kind in uncounted and not cls.counted
+
+    def test_metrics_level_counts_but_does_not_retain(self):
+        tr = Tracer()     # default level="metrics"
+        assert not tr.tracing
+        tr.emit(AdvanceEvent(ts=1.0))
+        tr.emit(ShareEvent(ts=2.0, rid=0, matched=8))
+        tr.emit(FinishEvent(ts=3.0, rid=0))      # not a counted kind
+        assert tr.events == []
+        assert tr.registry.count("engine/n_events") == 2
+
+    def test_trace_level_retains_in_order(self):
+        tr = Tracer(level="trace")
+        a = tr.emit(AdvanceEvent(ts=1.0))
+        b = tr.emit(FinishEvent(ts=2.0, rid=0))
+        assert tr.events == [a, b]
+        assert tr.registry.count("engine/n_events") == 1
+
+    def test_level_validation(self):
+        with pytest.raises(ValueError, match="observability level"):
+            Tracer(level="verbose")
+        with pytest.raises(ValueError, match="observability"):
+            EngineConfig(observability="debug")
+
+
+# ---------------------------------------------------------------------------
+# bounded cost-model memo
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def smoke_cfg():
+    return dataclasses.replace(configs.get_config("qwen3_8b", smoke=True),
+                               compute_dtype="float32")
+
+
+class TestCostMemo:
+    def test_cached_equals_uncached(self, smoke_cfg):
+        warm = ArtemisCostModel(smoke_cfg)
+        first = [(warm.price(n), warm.energy(n)) for n in (1, 7, 32)]
+        again = [(warm.price(n), warm.energy(n)) for n in (1, 7, 32)]
+        assert first == again, "memo hit changed the simulated price"
+        cold = ArtemisCostModel(smoke_cfg)   # fresh memo
+        assert [(cold.price(n), cold.energy(n))
+                for n in (1, 7, 32)] == first
+
+    def test_memo_is_bounded_lru(self, smoke_cfg):
+        cm = ArtemisCostModel(smoke_cfg, memo_size=4)
+        for n in range(1, 11):
+            cm.price(n)
+        assert len(cm._memo) == 4
+        assert list(cm._memo) == [7, 8, 9, 10]
+        cm.price(7)                  # touch 7 -> most recent
+        cm.price(99)                 # evicts 8 (now least recent)
+        assert list(cm._memo) == [9, 10, 7, 99]
+
+    def test_validation(self, smoke_cfg):
+        with pytest.raises(ValueError, match="memo_size"):
+            ArtemisCostModel(smoke_cfg, memo_size=0)
+        with pytest.raises(ValueError, match="n_tokens"):
+            ArtemisCostModel(smoke_cfg).price(0)
+
+
+# ---------------------------------------------------------------------------
+# span assembly: malformed logs must be rejected
+# ---------------------------------------------------------------------------
+
+
+class TestSpanAssembly:
+    def _good_log(self):
+        return [
+            QueuedEvent(ts=0.0, rid=0, prompt_len=8, max_new_tokens=2),
+            AdmitEvent(ts=1.0, rid=0, lane=0),
+            PrefillStepEvent(ts=2.0, chunks=((0, 8),), n_tokens=8,
+                             dur_s=1.0),
+            DecodeStepEvent(ts=3.0, decode_rids=(0,), n_tokens=1,
+                            dur_s=1.0),
+            FinishEvent(ts=3.0, rid=0, n_generated=2),
+        ]
+
+    def test_well_formed_log_assembles(self):
+        trees = assemble_spans(self._good_log())
+        tr = trees[0]
+        assert tr.queued_at == 0.0 and tr.finished_at == 3.0
+        assert tr.open_attempt_at is None
+        assert [s.name for s in tr.attempts] == ["completed"]
+        assert tr.attempts[0].t0 == 1.0 and tr.attempts[0].t1 == 3.0
+        assert [s.name for s in tr.slices] == ["prefill_chunk", "decode"]
+
+    def test_trailing_open_attempt_is_legal(self):
+        trees = assemble_spans(self._good_log()[:3])   # mid-run export
+        assert trees[0].open_attempt_at == 1.0
+        assert trees[0].finished_at is None
+
+    def test_finish_without_admit_rejected(self):
+        with pytest.raises(ValueError, match="without an open admit"):
+            assemble_spans([FinishEvent(ts=1.0, rid=0)])
+
+    def test_double_admit_rejected(self):
+        with pytest.raises(ValueError, match="still open"):
+            assemble_spans([AdmitEvent(ts=1.0, rid=0, lane=0),
+                            AdmitEvent(ts=2.0, rid=0, lane=1)])
+
+    def test_slice_outside_attempt_rejected(self):
+        with pytest.raises(ValueError, match="outside"):
+            assemble_spans([DecodeStepEvent(ts=1.0, decode_rids=(0,),
+                                            n_tokens=1, dur_s=0.5)])
+
+    def test_non_monotone_timestamps_rejected(self):
+        log = self._good_log()
+        # finish stamped BEFORE the decode slice that produced it
+        log[4] = dataclasses.replace(log[4], ts=2.5)
+        with pytest.raises(ValueError, match="monotone"):
+            assemble_spans(log)
+
+    def test_admit_before_arrival_rejected(self):
+        log = self._good_log()
+        log[0] = dataclasses.replace(log[0], ts=1.5)
+        with pytest.raises(ValueError, match="before its\n?.*arrival|"
+                                             "precedes earlier"):
+            assemble_spans(log)
+
+
+# ---------------------------------------------------------------------------
+# end-to-end: attribution + Chrome export over a real drain
+# ---------------------------------------------------------------------------
+
+
+@pytest.fixture(scope="module")
+def drained_engine(smoke_cfg):
+    cfg = smoke_cfg
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    trace = synth_trace(TrafficConfig(
+        n_requests=6, arrival_rate=1e8, prompt_len_min=3,
+        prompt_len_max=18, gen_len_min=2, gen_len_max=8,
+        vocab_size=cfg.vocab_size, seed=9,
+        sampled_fraction=0.4, temperature=0.8, top_k=20))
+    def run():
+        eng = ServeEngine(cfg, params=params, ecfg=EngineConfig(
+            page_size=8, n_pages=48, max_batch=3, max_pages_per_seq=8,
+            prefill_chunk=8, observability="trace"))
+        eng.submit_trace(trace)
+        eng.drain()
+        return eng
+    return run
+
+
+class TestEndToEnd:
+    def test_attribution_sums_to_total_energy(self, drained_engine):
+        eng = drained_engine()
+        m = eng.metrics()
+        attr = eng.attribution()
+        assert sorted(attr) == sorted(eng.requests)
+        total = sum(a["total_energy_J"] for a in attr.values())
+        assert total == pytest.approx(m["total_energy_J"], rel=1e-9)
+        for phase in ("prefill", "decode", "sampling"):
+            per_phase = sum(a["phases"][phase]["energy_J"]
+                            for a in attr.values())
+            assert per_phase == pytest.approx(
+                m[f"{phase}_energy_J"], rel=1e-9, abs=1e-30)
+        busy = sum(a["total_virtual_s"] for a in attr.values())
+        assert busy == pytest.approx(m["busy_virtual_s"], rel=1e-9)
+        # sampled tokens show up in the sampling phase at zero energy
+        n_sampled = sum(a["phases"]["sampling"]["tokens"]
+                        for a in attr.values())
+        assert n_sampled == m["n_sampled_tokens"] > 0
+        assert m["energy_per_token_J"] == pytest.approx(
+            m["total_energy_J"] / m["n_generated_tokens"])
+
+    def test_chrome_trace_valid_and_loads(self, drained_engine):
+        eng = drained_engine()
+        obj = to_chrome_trace(eng.events, metadata={"seed": 9})
+        info = validate_chrome_trace(obj)
+        assert info["n_spans"] > 0 and info["n_instants"] > 0
+        # one engine track + one track per request
+        assert info["n_tracks"] == len(eng.requests) + 1
+        assert obj["metadata"]["seed"] == 9
+        # round-trips through json
+        assert json.loads(dumps_chrome_trace(obj)) == obj
+        # every non-metadata event carries the required fields
+        for e in obj["traceEvents"]:
+            assert {"ph", "pid", "tid"} <= set(e)
+            if e["ph"] != "M":
+                assert isinstance(e["ts"], (int, float))
+            if e["ph"] == "X":
+                assert e["dur"] >= 0
+
+    def test_chrome_export_byte_deterministic(self, drained_engine,
+                                              tmp_path):
+        # the golden-file pin: two independent drains of the same trace
+        # export byte-identical files
+        blobs = []
+        for i in range(2):
+            eng = drained_engine()
+            path = tmp_path / f"trace_{i}.json"
+            obslib.export_chrome_trace(eng.events, str(path),
+                                       metadata={"seed": 9})
+            blobs.append(path.read_bytes())
+        assert blobs[0] == blobs[1], "export is not byte-deterministic"
+        # and the CLI validator accepts the artifact
+        assert obslib._main([str(tmp_path / "trace_0.json")]) == 0
+
+    def test_cli_validator_rejects_corrupt_trace(self, tmp_path):
+        bad = tmp_path / "bad.json"
+        bad.write_text(json.dumps({"traceEvents": [{"ph": "X"}]}))
+        assert obslib._main([str(bad)]) == 1
+
+    def test_validate_chrome_trace_rejections(self):
+        with pytest.raises(ValueError, match="traceEvents"):
+            validate_chrome_trace({})
+        with pytest.raises(ValueError, match="non-empty"):
+            validate_chrome_trace({"traceEvents": []})
+        with pytest.raises(ValueError, match="missing 'ph'"):
+            validate_chrome_trace({"traceEvents": [{"pid": 0, "tid": 0}]})
+        with pytest.raises(ValueError, match="unknown ph"):
+            validate_chrome_trace(
+                {"traceEvents": [{"ph": "Z", "pid": 0, "tid": 0}]})
+        with pytest.raises(ValueError, match="numeric 'ts'"):
+            validate_chrome_trace(
+                {"traceEvents": [{"ph": "i", "pid": 0, "tid": 0}]})
+        with pytest.raises(ValueError, match="non-negative 'dur'"):
+            validate_chrome_trace(
+                {"traceEvents": [{"ph": "X", "pid": 0, "tid": 0,
+                                  "ts": 1.0, "dur": -2.0}]})
+
+    def test_span_tree_reconstructs_every_lifecycle(self, drained_engine):
+        # the headline acceptance: a trace-level drain reconstructs
+        # every request's lifecycle — queued wait, closed attempts,
+        # execution slices, generated-token counts
+        eng = drained_engine()
+        trees = assemble_spans(eng.events)
+        assert sorted(trees) == sorted(eng.requests)
+        for rid, tr in trees.items():
+            assert tr.queued_at is not None
+            assert tr.finished_at is not None
+            assert tr.open_attempt_at is None
+            done = [s for s in tr.attempts if s.name == "completed"]
+            assert len(done) == 1
+            n_gen = dict(done[0].args)["n_generated"]
+            assert n_gen == len(eng.results()[rid])

@@ -491,7 +491,8 @@ def test_engine_preemption_under_cache_pressure(dense_setup):
     # MID-PREFILL (a half-prefilled request loses its pages, requeues,
     # and restarts its cursor from 0)
     ecfg = EngineConfig(page_size=4, n_pages=10, max_batch=3,
-                        max_pages_per_seq=8, prefill_chunk=6)
+                        max_pages_per_seq=8, prefill_chunk=6,
+                        observability="trace")
     eng = ServeEngine(cfg, params=params, ecfg=ecfg)
     trace = synth_trace(TrafficConfig(
         n_requests=6, arrival_rate=1e9, prompt_len_min=3,
@@ -571,7 +572,7 @@ def test_engine_deterministic_under_fixed_trace(dense_setup, scheduler):
     cfg, params = dense_setup
     ecfg = EngineConfig(page_size=8, n_pages=32, max_batch=2,
                         max_pages_per_seq=6, prefill_chunk=8,
-                        scheduler=scheduler)
+                        scheduler=scheduler, observability="trace")
     trace = synth_trace(TrafficConfig(
         n_requests=4, arrival_rate=1e9, prompt_len_min=3,
         prompt_len_max=16, gen_len_min=2, gen_len_max=8,
@@ -665,7 +666,8 @@ def test_engine_prefix_sharing_cow_and_sharer_preemption(dense_setup):
     sequential dense-cache decode."""
     cfg, params = dense_setup
     ecfg = EngineConfig(page_size=8, n_pages=64, max_batch=4,
-                        max_pages_per_seq=8, prefill_chunk=32)
+                        max_pages_per_seq=8, prefill_chunk=32,
+                        observability="trace")
     eng = ServeEngine(cfg, params=params, ecfg=ecfg)
     rng = np.random.default_rng(11)
     prefix = rng.integers(2, cfg.vocab_size, 16).astype(np.int32)  # 2 pages
@@ -764,7 +766,8 @@ def test_engine_sole_owner_write_invalidates_index(dense_setup):
     prompt would match stale K/V and decode garbage."""
     cfg, params = dense_setup
     ecfg = EngineConfig(page_size=8, n_pages=64, max_batch=3,
-                        max_pages_per_seq=8, prefill_chunk=32)
+                        max_pages_per_seq=8, prefill_chunk=32,
+                        observability="trace")
     eng = ServeEngine(cfg, params=params, ecfg=ecfg)
     rng = np.random.default_rng(21)
     base = rng.integers(2, cfg.vocab_size, 16).astype(np.int32)

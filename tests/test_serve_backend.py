@@ -48,7 +48,9 @@ from repro.serve import (
     SamplingParams,
     ServeEngine,
     StateSlotBackend,
+    Tracer,
     TrafficConfig,
+    assemble_spans,
     make_backend,
     synth_trace,
 )
@@ -134,7 +136,7 @@ def test_make_backend_routes_by_family():
 
     with pytest.raises(ValueError, match="no sequence backend"):
         make_backend(_FakeCfg(), ecfg, None, None,
-                     emit=lambda e: None, clock=lambda: 0.0)
+                     obs=Tracer(), clock=lambda: 0.0)
 
 
 @pytest.mark.parametrize("kind", list(BACKENDS))
@@ -300,7 +302,7 @@ def test_engine_deterministic_per_backend(kind):
     trace = _trace(cfg, n=4, seed=9)
     runs = []
     for _ in range(2):
-        eng = _engine(kind)
+        eng = _engine(kind, observability="trace")
         eng.submit_trace(trace)
         eng.drain()
         runs.append((eng.events, eng.results()))
@@ -641,3 +643,72 @@ class TestSubmitValidation:
             EngineConfig(max_seq_len=1)
         EngineConfig(n_slots=0)
         EngineConfig(n_slots=4)
+
+
+# ---------------------------------------------------------------------------
+# observability conformance: span trees + registry key surface
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("kind", list(BACKENDS))
+def test_span_tree_well_formed_per_backend(kind):
+    """Observability conformance: a full drain at level="trace" folds
+    into a well-formed span tree for EVERY request on BOTH backends —
+    assemble_spans validates (and raises on) unclosed attempts,
+    out-of-attempt slices, and non-monotone per-request timestamps, so
+    merely succeeding is most of the assertion."""
+    cfg, params = _setup(kind)
+    trace = _trace(cfg, n=4, seed=9)
+    eng = _engine(kind, observability="trace")
+    eng.submit_trace(trace)
+    eng.drain()
+    trees = assemble_spans(eng.events)
+    assert sorted(trees) == sorted(eng.requests)
+    for rid, tr in trees.items():
+        assert tr.queued_at is not None, f"request {rid} never queued"
+        assert tr.open_attempt_at is None, \
+            f"request {rid} drained with an unclosed lifecycle attempt"
+        assert tr.finished_at is not None
+        assert tr.attempts and tr.attempts[-1].name == "completed"
+        assert tr.slices, f"request {rid} executed no slices"
+        # prefill slices cover the whole prompt (>= under preemption,
+        # which re-prefills from scratch)
+        n_pf = sum(dict(s.args)["tokens"] for s in tr.slices
+                   if s.name == "prefill_chunk")
+        assert n_pf >= len(trace[rid].prompt), \
+            f"request {rid}: prefill slices cover {n_pf} of " \
+            f"{len(trace[rid].prompt)} prompt tokens"
+
+
+def test_metrics_registry_keys_backend_independent():
+    """`backend/` is the ONLY registry namespace allowed to differ
+    between sequence backends: after draining an equivalent trace,
+    every other published key is identical across the paged-KV and
+    state-slot backends (the contract documented in MetricsRegistry)."""
+    keysets = {}
+    for kind in BACKENDS:
+        cfg, params = _setup(kind)
+        eng = _engine(kind)
+        eng.submit_trace(_trace(cfg, n=4, seed=9))
+        eng.drain()
+        keys = set(eng.obs.registry.keys())
+        assert any(k.startswith("backend/") for k in keys), \
+            f"{kind} backend published nothing under backend/"
+        keysets[kind] = {k for k in keys if not k.startswith("backend/")}
+    assert keysets["paged"] == keysets["slot"], (
+        "non-backend registry keys diverged between backends:\n"
+        f"  paged only: {sorted(keysets['paged'] - keysets['slot'])}\n"
+        f"  slot only:  {sorted(keysets['slot'] - keysets['paged'])}")
+
+
+@pytest.mark.parametrize("kind", list(BACKENDS))
+def test_metrics_level_retains_no_events(kind):
+    """The default metrics level must cost ~nothing: a full drain
+    retains zero event objects while n_events still counts every
+    legacy-kind step."""
+    cfg, params = _setup(kind)
+    eng = _engine(kind)     # default observability="metrics"
+    eng.submit_trace(_trace(cfg, n=3, seed=4))
+    eng.drain()
+    assert eng.events == []
+    assert eng.metrics()["n_events"] > 0
