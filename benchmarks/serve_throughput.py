@@ -31,6 +31,11 @@ compilation of the chunked-prefill and decode steps; `compile_s`
 reports it separately so `tok_per_s` tracks steady-state throughput
 across PRs instead of XLA compile time.
 
+Wall-clock use here is intentional (this file MEASURES real tok/s and
+compile seconds) and carries `repro: allow[wall-clock-in-serve]`
+markers — the virtual-clock contract applies to serve-layer logic,
+not to the harness timing it.
+
 Run: PYTHONPATH=src python -m benchmarks.serve_throughput [--full]
 """
 from __future__ import annotations
@@ -65,9 +70,9 @@ def _warmup(cfg, params, seed: int) -> float:
     for plen, glen in ((20, 4), (7, 3)):
         eng.submit(rng.integers(2, cfg.vocab_size, plen).astype(np.int32),
                    max_new_tokens=glen)
-    t0 = time.time()
+    t0 = time.time()  # repro: allow[wall-clock-in-serve]
     eng.drain()
-    return time.time() - t0
+    return time.time() - t0  # repro: allow[wall-clock-in-serve]
 
 
 def _bench_one(cfg, params, scheduler: str, n_requests: int,
@@ -80,9 +85,9 @@ def _bench_one(cfg, params, scheduler: str, n_requests: int,
         gen_len_min=4, gen_len_max=24,
         vocab_size=cfg.vocab_size, seed=seed))
     eng.submit_trace(trace)
-    t0 = time.time()
+    t0 = time.time()  # repro: allow[wall-clock-in-serve]
     eng.drain()
-    wall = time.time() - t0
+    wall = time.time() - t0  # repro: allow[wall-clock-in-serve]
     m = eng.metrics()
     return {
         "scheduler": scheduler,
@@ -162,9 +167,9 @@ def _bench_shared_prefix(cfg, params, seed: int) -> dict:
         eng = ServeEngine(cfg, params=params, ecfg=EngineConfig(
             **ECFG, prefill_chunk=16, prefix_sharing=sharing), seed=seed)
         eng.submit_trace(trace)
-        t0 = time.time()
+        t0 = time.time()  # repro: allow[wall-clock-in-serve]
         eng.drain()
-        wall = time.time() - t0
+        wall = time.time() - t0  # repro: allow[wall-clock-in-serve]
         m = eng.metrics()
         row[label] = {
             "wall_s": wall,
@@ -205,9 +210,9 @@ def _bench_sampled(cfg, params, seed: int) -> dict:
             vocab_size=cfg.vocab_size, seed=seed,
             sampled_fraction=frac, temperature=0.8, top_k=40,
             top_p=0.95)))
-        t0 = time.time()
+        t0 = time.time()  # repro: allow[wall-clock-in-serve]
         eng.drain()
-        wall = time.time() - t0
+        wall = time.time() - t0  # repro: allow[wall-clock-in-serve]
         m = eng.metrics()
         row[label] = {
             "wall_s": wall,
@@ -236,18 +241,18 @@ def _bench_recurrent(seed: int) -> dict:
     # warmup drain compiles the slot chunk/decode steps off the clock
     warm = ServeEngine(cfg, params=params, ecfg=ecfg, seed=seed)
     warm.submit(np.arange(2, 20, dtype=np.int32), max_new_tokens=3)
-    t0 = time.time()
+    t0 = time.time()  # repro: allow[wall-clock-in-serve]
     warm.drain()
-    compile_s = time.time() - t0
+    compile_s = time.time() - t0  # repro: allow[wall-clock-in-serve]
     eng = ServeEngine(cfg, params=params, ecfg=ecfg, seed=seed)
     trace = synth_trace(TrafficConfig(
         n_requests=8, arrival_rate=1e6, prompt_len_min=4,
         prompt_len_max=32, gen_len_min=4, gen_len_max=16,
         vocab_size=cfg.vocab_size, seed=seed))
     eng.submit_trace(trace)
-    t0 = time.time()
+    t0 = time.time()  # repro: allow[wall-clock-in-serve]
     eng.drain()
-    wall = time.time() - t0
+    wall = time.time() - t0  # repro: allow[wall-clock-in-serve]
     m = eng.metrics()
     return {
         "trace": "recurrent_rwkv6",

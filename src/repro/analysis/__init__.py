@@ -1,0 +1,37 @@
+"""Static contract checker for the serve layer.
+
+The serving stack's correctness rests on contracts that runtime tests
+exercise only on executed paths: the virtual ARTEMIS clock (no wall
+clock in serve code), the PR 5 RNG-lane discipline (keys derive from
+`(seed, tokens_generated)` and nothing else), the compile-once jit
+design (no retraces, no host syncs inside traced code), the metrics
+registry namespaces, and the `SequenceBackend` protocol. This package
+checks them at the SOURCE level with a small AST rule framework:
+
+    python -m repro.analysis src tests benchmarks [--format json]
+
+Suppress an intentional violation at the call site with
+`# repro: allow[rule-id]` (same line, or a comment line directly
+above); grandfathered findings live in the committed, audited
+`analysis-baseline.json`. See the README "Static analysis" section
+for how to add a rule.
+
+Stdlib-only on purpose: the checker never imports the code it
+analyzes, so the CI gate needs no jax install and cannot be broken by
+the very bug it is trying to catch.
+"""
+from repro.analysis.baseline import Baseline
+from repro.analysis.core import (
+    AnalysisResult,
+    Rule,
+    all_rules,
+    analyze_project,
+    register,
+)
+from repro.analysis.findings import Finding
+from repro.analysis.project import Project
+
+__all__ = [
+    "AnalysisResult", "Baseline", "Finding", "Project", "Rule",
+    "all_rules", "analyze_project", "register",
+]

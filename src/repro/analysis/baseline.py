@@ -1,0 +1,69 @@
+"""Committed audited baseline of grandfathered findings.
+
+The gate is RATCHETING: a finding whose `(rule, path, line)` identity
+appears in the baseline is reported but does not fail the run; any
+other finding is NEW and fails it. Fixing a baselined finding leaves a
+STALE entry behind, which the CLI reports so the baseline can be
+re-written (`--write-baseline`) and shrink monotonically — it must
+never grow without an explicit audit.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+from pathlib import Path
+
+from repro.analysis.findings import Finding
+
+BASELINE_VERSION = 1
+DEFAULT_BASELINE = "analysis-baseline.json"
+
+
+@dataclasses.dataclass
+class Baseline:
+    entries: list[Finding]
+    path: str | None = None
+
+    @property
+    def keys(self) -> set[tuple[str, str, int]]:
+        return {e.key() for e in self.entries}
+
+    @classmethod
+    def load(cls, path: str | Path | None) -> "Baseline":
+        """Load a baseline file; a missing path is an empty baseline
+        (every finding is new)."""
+        if path is None or not Path(path).is_file():
+            return cls(entries=[], path=str(path) if path else None)
+        data = json.loads(Path(path).read_text())
+        if data.get("version") != BASELINE_VERSION:
+            raise ValueError(
+                f"unsupported baseline version {data.get('version')!r} "
+                f"in {path}")
+        return cls(entries=[Finding.from_dict(d)
+                            for d in data.get("findings", [])],
+                   path=str(path))
+
+    @staticmethod
+    def save(path: str | Path, findings: list[Finding]) -> None:
+        payload = {
+            "version": BASELINE_VERSION,
+            "comment": ("Audited grandfathered findings for "
+                        "`python -m repro.analysis`. Entries may only "
+                        "be REMOVED (fix the finding, re-run with "
+                        "--write-baseline); adding one requires an "
+                        "explicit audit in the PR that does it."),
+            "findings": [f.to_dict() for f in sorted(findings)],
+        }
+        Path(path).write_text(json.dumps(payload, indent=2) + "\n")
+
+    def split(self, findings: list[Finding]
+              ) -> tuple[list[Finding], list[Finding], list[Finding]]:
+        """(new, baselined, stale): findings not in the baseline,
+        findings covered by it, and baseline entries that no longer
+        fire (candidates for pruning)."""
+        known = self.keys
+        new = [f for f in findings if f.key() not in known]
+        baselined = [f for f in findings if f.key() in known]
+        live = {f.key() for f in findings}
+        stale = [e for e in self.entries if e.key() not in live]
+        return new, baselined, stale

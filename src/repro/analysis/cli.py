@@ -1,0 +1,114 @@
+"""`python -m repro.analysis [paths] [--format json]` — the CI gate.
+
+Exit codes: 0 = no new unsuppressed findings (baselined ones are
+reported but tolerated), 1 = new findings (or unparseable files),
+2 = usage error.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+from repro.analysis.baseline import DEFAULT_BASELINE, Baseline
+from repro.analysis.core import all_rules, analyze_project
+from repro.analysis.findings import Finding
+from repro.analysis.project import Project
+
+DEFAULT_PATHS = ["src", "tests", "benchmarks"]
+
+
+def _render_json(result, new, baselined, stale, rules) -> str:
+    return json.dumps({
+        "version": 1,
+        "n_files": result.n_files,
+        "rules": [{"id": r.id, "description": r.description}
+                  for r in rules],
+        "new": [f.to_dict() for f in new],
+        "baselined": [f.to_dict() for f in baselined],
+        "suppressed": [f.to_dict() for f in result.suppressed],
+        "stale_baseline": [list(e.key()) for e in stale],
+    }, indent=2)
+
+
+def _render_text(result, new, baselined, stale) -> str:
+    lines = [str(f) for f in new]
+    if baselined:
+        lines.append(f"-- {len(baselined)} baselined finding(s) "
+                     f"(grandfathered, not failing):")
+        lines.extend(f"   {f}" for f in baselined)
+    if stale:
+        lines.append(f"-- {len(stale)} stale baseline entr"
+                     f"{'y' if len(stale) == 1 else 'ies'} (fixed; "
+                     f"prune with --write-baseline):")
+        lines.extend(f"   {e.rule} {e.path}:{e.line}" for e in stale)
+    lines.append(
+        f"{result.n_files} files: {len(new)} new finding(s), "
+        f"{len(baselined)} baselined, {len(result.suppressed)} "
+        f"suppressed")
+    return "\n".join(lines)
+
+
+def main(argv: list[str] | None = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="python -m repro.analysis",
+        description=("AST-based contract checker for the serve-layer "
+                     "invariants (RNG discipline, virtual clock, "
+                     "jit/host-sync hazards, registry namespaces)."))
+    parser.add_argument("paths", nargs="*", default=None,
+                        help=f"files/dirs to analyze "
+                             f"(default: {' '.join(DEFAULT_PATHS)})")
+    parser.add_argument("--format", choices=("text", "json"),
+                        default="text")
+    parser.add_argument("--baseline", default=DEFAULT_BASELINE,
+                        help="baseline file of audited grandfathered "
+                             "findings (missing file = empty baseline)")
+    parser.add_argument("--write-baseline", action="store_true",
+                        help="write the current unsuppressed findings "
+                             "to the baseline file and exit 0")
+    parser.add_argument("--out", default=None,
+                        help="also write the report to this file")
+    parser.add_argument("--list-rules", action="store_true")
+    args = parser.parse_args(argv)
+
+    rules = all_rules()
+    if args.list_rules:
+        for r in rules:
+            print(f"{r.id}: {r.description}")
+        return 0
+
+    paths = args.paths or [p for p in DEFAULT_PATHS if Path(p).exists()]
+    if not paths:
+        print("no paths to analyze", file=sys.stderr)
+        return 2
+    project = Project.from_paths(paths)
+    result = analyze_project(project, rules)
+
+    if args.write_baseline:
+        Baseline.save(args.baseline, result.findings)
+        print(f"wrote {len(result.findings)} finding(s) to "
+              f"{args.baseline}")
+        return 0
+
+    baseline = Baseline.load(args.baseline)
+    new, baselined, stale = baseline.split(result.findings)
+
+    report = (_render_json(result, new, baselined, stale, rules)
+              if args.format == "json"
+              else _render_text(result, new, baselined, stale))
+    print(report)
+    if args.out:
+        Path(args.out).write_text(report + "\n")
+    return 1 if new else 0
+
+
+def run_paths(paths: list[str],
+              baseline: str | None = None
+              ) -> tuple[list[Finding], list[Finding]]:
+    """Library entry point used by tests: (new, suppressed) for a set
+    of real paths, optionally against a baseline file."""
+    project = Project.from_paths(paths)
+    result = analyze_project(project)
+    new, _, _ = Baseline.load(baseline).split(result.findings)
+    return new, result.suppressed

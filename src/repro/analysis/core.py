@@ -1,0 +1,124 @@
+"""Rule framework: base class, registry, and the analysis driver.
+
+A rule is a stateless object with an `id`, a `description`, a path
+`applies()` filter, and a `check(file, project)` that yields
+`Finding`s. Rules register themselves at import time via `@register`
+(importing `repro.analysis.rules` loads the whole set), so the CLI and
+the tests always agree on what the rule set is.
+
+`analyze_project` runs every applicable rule over every parsed file,
+honors `# repro: allow[rule-id]` suppressions, and reports files that
+failed to parse as `parse-error` findings instead of crashing — broken
+source must fail the CI gate, not the analyzer.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from repro.analysis.findings import Finding
+from repro.analysis.project import FileInfo, Project
+
+PARSE_ERROR_RULE = "parse-error"
+
+
+class Rule:
+    """One statically-checked contract. Subclasses set `id` and
+    `description`, narrow `applies` to the paths the contract governs,
+    and implement `check`."""
+
+    id: str = ""
+    description: str = ""
+
+    def applies(self, f: FileInfo) -> bool:
+        return True
+
+    def check(self, f: FileInfo, project: Project) -> list[Finding]:
+        raise NotImplementedError
+
+    # -- shared helpers ------------------------------------------------------
+
+    def finding(self, f: FileInfo, node, message: str) -> Finding:
+        return Finding(path=f.path, line=getattr(node, "lineno", 1),
+                       col=getattr(node, "col_offset", 0), rule=self.id,
+                       message=message)
+
+
+RULES: dict[str, Rule] = {}
+
+
+def register(rule_cls: type[Rule]) -> type[Rule]:
+    if not rule_cls.id:
+        raise ValueError(f"{rule_cls.__name__} has no id")
+    if rule_cls.id in RULES:
+        raise ValueError(f"duplicate rule id {rule_cls.id!r}")
+    RULES[rule_cls.id] = rule_cls()
+    return rule_cls
+
+
+def all_rules() -> list[Rule]:
+    """The registered rule set (importing the rules package as a side
+    effect, so callers never see a half-loaded registry)."""
+    import repro.analysis.rules  # noqa: F401  (registration side effect)
+    return [RULES[k] for k in sorted(RULES)]
+
+
+# -- path scopes shared by several rules -------------------------------------
+
+
+def in_serve(path: str) -> bool:
+    """Under the serve layer (`repro/serve/` wherever it is rooted)."""
+    return "repro/serve/" in path
+
+
+def is_backend_module(path: str) -> bool:
+    """A serve backend module — only the `backend/` registry namespace
+    is allowed there (the PR 6 constraint)."""
+    name = path.rsplit("/", 1)[-1]
+    return in_serve(path) and name.startswith("backend")
+
+
+# Files where wall-clock use is governed: the serve layer itself plus
+# the serve-facing launchers/benchmarks that drive it (bench timing is
+# the one legitimate use there, annotated with explicit suppressions).
+_WALL_CLOCK_EXTRA = ("benchmarks/serve_throughput.py", "benchmarks/run.py",
+                     "repro/launch/serve.py")
+
+
+def in_virtual_clock_scope(path: str) -> bool:
+    return (in_serve(path)
+            or any(path.endswith(p) for p in _WALL_CLOCK_EXTRA))
+
+
+# -- driver ------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class AnalysisResult:
+    findings: list[Finding]        # unsuppressed, sorted
+    suppressed: list[Finding]      # matched a `# repro: allow[...]`
+    n_files: int = 0
+
+
+def analyze_project(project: Project,
+                    rules: list[Rule] | None = None) -> AnalysisResult:
+    rules = rules if rules is not None else all_rules()
+    findings: list[Finding] = []
+    suppressed: list[Finding] = []
+    for f in project.files.values():
+        if f.tree is None:
+            findings.append(Finding(
+                path=f.path, line=1, col=0, rule=PARSE_ERROR_RULE,
+                message=f"file does not parse: {f.parse_error}"))
+            continue
+        for rule in rules:
+            if not rule.applies(f):
+                continue
+            for fd in rule.check(f, project):
+                ids = f.suppressions.get(fd.line, set())
+                if fd.rule in ids or "*" in ids:
+                    suppressed.append(fd)
+                else:
+                    findings.append(fd)
+    return AnalysisResult(findings=sorted(findings),
+                          suppressed=sorted(suppressed),
+                          n_files=len(project.files))

@@ -1,0 +1,38 @@
+"""Finding model for the static contract checker.
+
+A `Finding` is one rule violation at one source location. Identity for
+baseline matching is `(rule, path, line)` — messages may be reworded
+without invalidating a committed baseline, but a finding that moves
+(file renamed, line shifted) counts as NEW and must be re-audited.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True, order=True)
+class Finding:
+    """One rule violation: `path:line:col: rule message`."""
+
+    path: str          # posix-normalized, repo-relative
+    line: int          # 1-indexed
+    col: int           # 0-indexed (ast col_offset)
+    rule: str          # rule id, e.g. "wall-clock-in-serve"
+    message: str
+
+    def key(self) -> tuple[str, str, int]:
+        """Baseline identity (message excluded — see module docstring)."""
+        return (self.rule, self.path, self.line)
+
+    def to_dict(self) -> dict:
+        return {"rule": self.rule, "path": self.path, "line": self.line,
+                "col": self.col, "message": self.message}
+
+    @classmethod
+    def from_dict(cls, d: dict) -> "Finding":
+        return cls(path=d["path"], line=int(d["line"]),
+                   col=int(d.get("col", 0)), rule=d["rule"],
+                   message=d.get("message", ""))
+
+    def __str__(self) -> str:
+        return f"{self.path}:{self.line}:{self.col}: {self.rule} {self.message}"

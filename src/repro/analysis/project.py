@@ -1,0 +1,313 @@
+"""Project model: the file set one analysis run sees, plus the shared
+cross-file indexes rules consult.
+
+A `Project` owns a set of parsed `FileInfo`s and lazily builds:
+
+  * per-file import-alias maps (`FileInfo.aliases`) so rules can
+    resolve `jnp.asarray` / `from time import perf_counter` back to
+    canonical dotted names (`jax.numpy.asarray`, `time.perf_counter`);
+  * a module -> {NAME: "literal"} table of module-level string
+    constants, so a registry key published as `sampler.N_SAMPLED_KEY`
+    resolves to its literal value across files;
+  * the jit surface: names passed to `jax.jit(f)` directly, factory
+    names whose RETURN value is jitted (`jax.jit(make_decode(cfg))`),
+    and kernel names handed to `pallas_call` — the roots the
+    host-sync-in-jit rule grows its call graph from.
+
+Pure stdlib (`ast` only): the analyzer must import nothing from the
+code under analysis, so it runs in CI without jax installed.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import functools
+import re
+from pathlib import Path
+
+ALLOW_RE = re.compile(r"#\s*repro:\s*allow\[([A-Za-z0-9_\-*,\s]+)\]")
+_COMMENT_ONLY_RE = re.compile(r"^\s*#")
+
+
+def parse_suppressions(source: str) -> dict[int, set[str]]:
+    """Map line number -> rule ids suppressed there.
+
+    `# repro: allow[rule-id]` (comma-separated ids allowed) suppresses
+    findings on its own line; when the comment stands on a line of its
+    own, it suppresses the next non-comment line instead (so a
+    suppression can carry an explanation block above the flagged
+    statement)."""
+    lines = source.splitlines()
+    eff: dict[int, set[str]] = {}
+    for i, text in enumerate(lines, 1):
+        m = ALLOW_RE.search(text)
+        if m is None:
+            continue
+        ids = {s.strip() for s in m.group(1).split(",") if s.strip()}
+        if _COMMENT_ONLY_RE.match(text):
+            j = i + 1
+            while j <= len(lines) and _COMMENT_ONLY_RE.match(lines[j - 1]):
+                j += 1
+            eff.setdefault(j, set()).update(ids)
+        else:
+            eff.setdefault(i, set()).update(ids)
+    return eff
+
+
+def module_for_path(path: str) -> str:
+    """Best-effort dotted module name for a repo-relative path
+    (`src/repro/serve/engine.py` -> `repro.serve.engine`)."""
+    p = path.replace("\\", "/")
+    if p.startswith("src/"):
+        p = p[len("src/"):]
+    if p.endswith(".py"):
+        p = p[:-3]
+    if p.endswith("/__init__"):
+        p = p[: -len("/__init__")]
+    return p.replace("/", ".")
+
+
+def _resolve_relative(module: str, level: int, name: str | None) -> str:
+    """Resolve a `from ..x import y`-style base against `module`."""
+    parts = module.split(".")
+    base = parts[: max(len(parts) - level, 0)]
+    if name:
+        base.append(name)
+    return ".".join(base)
+
+
+def import_aliases(tree: ast.AST, module: str) -> dict[str, str]:
+    """Local name -> canonical dotted origin, from every import in the
+    file (any nesting level)."""
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                if a.asname:
+                    aliases[a.asname] = a.name
+                else:
+                    head = a.name.split(".")[0]
+                    aliases[head] = head
+        elif isinstance(node, ast.ImportFrom):
+            base = (node.module or "") if node.level == 0 else \
+                _resolve_relative(module, node.level, node.module)
+            for a in node.names:
+                if a.name == "*":
+                    continue
+                target = f"{base}.{a.name}" if base else a.name
+                aliases[a.asname or a.name] = target
+    return aliases
+
+
+def dotted_name(node: ast.AST, aliases: dict[str, str]) -> str | None:
+    """Canonical dotted name of a Name/Attribute chain, resolving the
+    leftmost segment through the file's import aliases. None for
+    anything that is not a plain dotted chain."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(aliases.get(node.id, node.id))
+    return ".".join(reversed(parts))
+
+
+@dataclasses.dataclass
+class FileInfo:
+    """One parsed source file. `tree` is None when the file failed to
+    parse (the analyzer reports that as a finding instead of dying)."""
+
+    path: str
+    source: str
+    tree: ast.Module | None
+    module: str
+    suppressions: dict[int, set[str]]
+    parse_error: str | None = None
+    _aliases: dict[str, str] | None = None
+    _parents: dict[int, ast.AST] | None = None
+
+    @property
+    def aliases(self) -> dict[str, str]:
+        if self._aliases is None:
+            self._aliases = (import_aliases(self.tree, self.module)
+                             if self.tree is not None else {})
+        return self._aliases
+
+    def parent(self, node: ast.AST) -> ast.AST | None:
+        """Syntactic parent of `node` (built lazily, once per file)."""
+        if self._parents is None:
+            self._parents = {}
+            if self.tree is not None:
+                for parent in ast.walk(self.tree):
+                    for child in ast.iter_child_nodes(parent):
+                        self._parents[id(child)] = parent
+        return self._parents.get(id(node))
+
+    def dotted(self, node: ast.AST) -> str | None:
+        return dotted_name(node, self.aliases)
+
+
+def _load(path: str, source: str) -> FileInfo:
+    module = module_for_path(path)
+    try:
+        tree = ast.parse(source, filename=path)
+        err = None
+    except SyntaxError as e:
+        tree, err = None, f"{e.msg} (line {e.lineno})"
+    return FileInfo(path=path, source=source, tree=tree, module=module,
+                    suppressions=parse_suppressions(source),
+                    parse_error=err)
+
+
+# Directory names never descended into when collecting files.
+EXCLUDED_DIRS = {"__pycache__", "analysis_fixtures", ".git", ".venv",
+                 "node_modules", ".ruff_cache", ".pytest_cache"}
+
+
+def collect_py_files(paths: list[str], root: Path | None = None
+                     ) -> list[Path]:
+    root = root or Path.cwd()
+    out: list[Path] = []
+    for p in paths:
+        path = Path(p) if Path(p).is_absolute() else root / p
+        if path.is_file() and path.suffix == ".py":
+            out.append(path)
+        elif path.is_dir():
+            for f in sorted(path.rglob("*.py")):
+                if not EXCLUDED_DIRS.intersection(f.parts):
+                    out.append(f)
+    return sorted(set(out))
+
+
+class Project:
+    """The analyzed file set plus lazily-built cross-file indexes."""
+
+    def __init__(self, files: dict[str, FileInfo]):
+        self.files = files
+
+    @classmethod
+    def from_paths(cls, paths: list[str], root: Path | None = None
+                   ) -> "Project":
+        root = root or Path.cwd()
+        files: dict[str, FileInfo] = {}
+        for f in collect_py_files(paths, root):
+            try:
+                rel = f.relative_to(root).as_posix()
+            except ValueError:
+                rel = f.as_posix()
+            files[rel] = _load(rel, f.read_text())
+        return cls(files)
+
+    @classmethod
+    def from_sources(cls, sources: dict[str, str]) -> "Project":
+        """Build from in-memory {path: source} — the fixture-test entry
+        point (paths may be virtual, e.g. `src/repro/serve/x.py`)."""
+        return cls({p: _load(p, s) for p, s in sources.items()})
+
+    # -- cross-file indexes --------------------------------------------------
+
+    @functools.cached_property
+    def constants(self) -> dict[str, dict[str, str]]:
+        """module -> {NAME: value} for module-level string constants."""
+        out: dict[str, dict[str, str]] = {}
+        for f in self.files.values():
+            if f.tree is None:
+                continue
+            consts: dict[str, str] = {}
+            for node in f.tree.body:
+                if (isinstance(node, ast.Assign)
+                        and isinstance(node.value, ast.Constant)
+                        and isinstance(node.value.value, str)):
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            consts[t.id] = node.value.value
+                elif (isinstance(node, ast.AnnAssign)
+                        and isinstance(node.target, ast.Name)
+                        and isinstance(node.value, ast.Constant)
+                        and isinstance(node.value.value, str)):
+                    consts[node.target.id] = node.value.value
+            out[f.module] = consts
+        return out
+
+    def lookup_constant(self, f: FileInfo, node: ast.AST) -> str | None:
+        """Resolve a Name/Attribute to a module-level string constant
+        anywhere in the project (via the file's import aliases)."""
+        if isinstance(node, ast.Name):
+            val = self.constants.get(f.module, {}).get(node.id)
+            if val is not None:
+                return val
+        dotted = f.dotted(node)
+        if dotted is None or "." not in dotted:
+            return None
+        mod, name = dotted.rsplit(".", 1)
+        return self.constants.get(mod, {}).get(name)
+
+    @functools.cached_property
+    def jit_surface(self) -> dict[str, set]:
+        """The project's jit boundary:
+
+        factories — simple names f where `jax.jit(f(...))` appears, OR
+                    `jax.jit(x)` where x was assigned `x = f(...)`:
+                    the factory's RETURNED inner function is the
+                    traced code
+        wrapped   — (module, name) pairs for `jax.jit(f)` where f is a
+                    plain function reference (module-exact, so a local
+                    variable named `step` in one file cannot mark
+                    unrelated `step` functions elsewhere)
+        kernels   — (module, name) pairs for `pallas_call(f, ...)`
+        """
+        factories: set[str] = set()
+        wrapped: set[tuple[str, str]] = set()
+        kernels: set[tuple[str, str]] = set()
+
+        def exact(f: FileInfo, node: ast.AST) -> tuple[str, str] | None:
+            dotted = f.dotted(node)
+            if dotted is None:
+                return None
+            if "." in dotted:
+                return tuple(dotted.rsplit(".", 1))
+            return (f.module, dotted)
+
+        for f in self.files.values():
+            if f.tree is None:
+                continue
+            # name -> callee for simple `x = f(...)` assignments: a
+            # jitted variable holding a factory product counts as a
+            # jitted factory call
+            assigned_from: dict[str, str] = {}
+            for node in ast.walk(f.tree):
+                if (isinstance(node, ast.Assign)
+                        and isinstance(node.value, ast.Call)):
+                    callee = f.dotted(node.value.func)
+                    if callee:
+                        for t in node.targets:
+                            if isinstance(t, ast.Name):
+                                assigned_from[t.id] = callee
+            for node in ast.walk(f.tree):
+                if not isinstance(node, ast.Call):
+                    continue
+                dotted = f.dotted(node.func)
+                if dotted == "jax.jit" and node.args:
+                    arg = node.args[0]
+                    if isinstance(arg, ast.Call):
+                        inner = f.dotted(arg.func)
+                        if inner:
+                            factories.add(inner.rsplit(".", 1)[-1])
+                    elif (isinstance(arg, ast.Name)
+                            and arg.id in assigned_from):
+                        factories.add(
+                            assigned_from[arg.id].rsplit(".", 1)[-1])
+                    else:
+                        pair = exact(f, arg)
+                        if pair:
+                            wrapped.add(pair)
+                elif (dotted is not None
+                        and (dotted == "pallas_call"
+                             or dotted.endswith(".pallas_call"))
+                        and node.args):
+                    pair = exact(f, node.args[0])
+                    if pair:
+                        kernels.add(pair)
+        return {"wrapped": wrapped, "factories": factories,
+                "kernels": kernels}

@@ -1,0 +1,11 @@
+"""The repo-specific rule set. Importing this package registers every
+rule with `repro.analysis.core.RULES` (that is its only job — see each
+module for the contract it enforces)."""
+from repro.analysis.rules import (  # noqa: F401
+    host_sync,
+    protocol,
+    registry_ns,
+    retrace,
+    rng_discipline,
+    wall_clock,
+)

@@ -1,0 +1,150 @@
+"""backend-protocol: static signature conformance of `SequenceBackend`
+implementers. The runtime conformance suite
+(tests/test_serve_backend.py) exercises behavior; this rule checks the
+part a typo survives until runtime on an unexercised path: every
+abstract method of the protocol is implemented, with the protocol's
+positional parameter names in the protocol's order (extra parameters
+must carry defaults so engine call sites keep working).
+
+The protocol is located structurally: a class named `SequenceBackend`
+whose methods are `@abc.abstractmethod`-decorated. Implementers are
+classes anywhere in the project with `SequenceBackend` among their
+bases; in-project intermediate bases are followed by name, so shared
+partial implementations resolve before a method counts as missing.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Rule, register
+from repro.analysis.findings import Finding
+from repro.analysis.project import FileInfo, Project
+
+PROTOCOL_CLASS = "SequenceBackend"
+_FN = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def _base_name(node: ast.AST) -> str | None:
+    if isinstance(node, ast.Name):
+        return node.id
+    if isinstance(node, ast.Attribute):
+        return node.attr
+    return None
+
+
+def _methods(cls: ast.ClassDef) -> dict[str, ast.FunctionDef]:
+    return {n.name: n for n in cls.body if isinstance(n, _FN)}
+
+
+def _positional_params(fn: ast.FunctionDef) -> list[str]:
+    a = fn.args
+    params = [p.arg for p in a.posonlyargs + a.args]
+    return params[1:] if params and params[0] in ("self", "cls") else params
+
+
+def _is_abstract(f: FileInfo, fn: ast.FunctionDef) -> bool:
+    for d in fn.decorator_list:
+        if f.dotted(d) in ("abc.abstractmethod", "abstractmethod"):
+            return True
+    return False
+
+
+def _has_varargs(fn: ast.FunctionDef) -> bool:
+    return fn.args.vararg is not None
+
+
+def _classes(project: Project):
+    for f in project.files.values():
+        if f.tree is None:
+            continue
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.ClassDef):
+                yield f, node
+
+
+def _find_protocol(project: Project):
+    for f, cls in _classes(project):
+        if cls.name != PROTOCOL_CLASS:
+            continue
+        abstract = {name: fn for name, fn in _methods(cls).items()
+                    if _is_abstract(f, fn)}
+        if abstract:
+            return f, cls, abstract
+    return None
+
+
+def _resolve_method(project: Project, cls: ast.ClassDef, name: str,
+                    seen: set[str]) -> ast.FunctionDef | None:
+    """Look up `name` on cls, then on in-project bases by simple name
+    (excluding the protocol itself — inheriting the abstract stub is
+    not an implementation)."""
+    own = _methods(cls).get(name)
+    if own is not None:
+        return own
+    for base in cls.bases:
+        bname = _base_name(base)
+        if bname is None or bname == PROTOCOL_CLASS or bname in seen:
+            continue
+        seen.add(bname)
+        for _, candidate in _classes(project):
+            if candidate.name == bname:
+                found = _resolve_method(project, candidate, name, seen)
+                if found is not None:
+                    return found
+    return None
+
+
+@register
+class BackendProtocol(Rule):
+    id = "backend-protocol"
+    description = ("SequenceBackend implementers must define every "
+                   "abstract method with the protocol's positional "
+                   "signature")
+
+    def check(self, f: FileInfo, project: Project) -> list[Finding]:
+        proto = _find_protocol(project)
+        if proto is None:
+            return []
+        _, proto_cls, abstract = proto
+        out: list[Finding] = []
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.ClassDef):
+                continue
+            if node.name == PROTOCOL_CLASS:
+                continue
+            if not any(_base_name(b) == PROTOCOL_CLASS
+                       for b in node.bases):
+                continue
+            for name, proto_fn in sorted(abstract.items()):
+                impl = _resolve_method(project, node, name, set())
+                if impl is None:
+                    out.append(self.finding(
+                        f, node,
+                        f"`{node.name}` does not implement abstract "
+                        f"`{name}` of the SequenceBackend protocol"))
+                    continue
+                if _is_abstract(f, impl):
+                    continue   # explicitly re-abstracted intermediate
+                if _has_varargs(impl):
+                    continue   # forwards everything; runtime suite owns it
+                want = _positional_params(proto_fn)
+                got = _positional_params(impl)
+                extra = got[len(want):]
+                defaults = impl.args.defaults
+                n_defaulted = len(defaults)
+                bad_extra = [p for i, p in enumerate(extra)
+                             if len(got) - (len(want) + i) > n_defaulted]
+                if got[:len(want)] != want:
+                    out.append(self.finding(
+                        f, impl,
+                        f"`{node.name}.{name}` positional parameters "
+                        f"{got[:len(want)]} do not match the protocol's "
+                        f"{want} — engine call sites pass these "
+                        f"positionally and by keyword"))
+                elif bad_extra:
+                    out.append(self.finding(
+                        f, impl,
+                        f"`{node.name}.{name}` adds required "
+                        f"parameter(s) {bad_extra} beyond the protocol "
+                        f"signature — extras must have defaults"))
+        return out

@@ -1,0 +1,82 @@
+"""registry-namespace: every `MetricsRegistry` key published (or read
+back) in the serve layer is a string LITERAL — or a module-level
+string constant, like `sampler.N_SAMPLED_KEY` — under one of the four
+namespaces `engine/`, `scheduler/`, `sampler/`, `backend/`. Backend
+modules may publish only under `backend/`: it is the ONE namespace
+allowed to differ between sequence backends (every other key set must
+be backend-independent — the conformance suite pins the runtime half
+of this; the static half is that nobody can even spell a key that
+would violate it).
+
+Receiver heuristic (the convention the serve layer already follows):
+registry method calls are checked when the receiver is a name `reg` /
+`registry` or any attribute chain ending in `.registry`
+(`self.obs.registry.inc(...)`). Bind registries to those names.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Rule, in_serve, is_backend_module, register
+from repro.analysis.findings import Finding
+from repro.analysis.project import FileInfo, Project
+
+NAMESPACES = ("engine/", "scheduler/", "sampler/", "backend/")
+# methods whose FIRST argument is a registry key
+KEYED_METHODS = {"inc", "set_gauge", "observe", "count", "gauge", "hist"}
+RECEIVER_NAMES = {"reg", "registry"}
+
+
+def _is_registry_receiver(node: ast.AST) -> bool:
+    if isinstance(node, ast.Name):
+        return node.id in RECEIVER_NAMES
+    if isinstance(node, ast.Attribute):
+        return node.attr in RECEIVER_NAMES
+    return False
+
+
+@register
+class RegistryNamespace(Rule):
+    id = "registry-namespace"
+    description = ("MetricsRegistry keys must be literals (or module "
+                   "constants) under engine/ scheduler/ sampler/ "
+                   "backend/; backend modules may only use backend/")
+
+    def applies(self, f: FileInfo) -> bool:
+        return in_serve(f.path)
+
+    def check(self, f: FileInfo, project: Project) -> list[Finding]:
+        out: list[Finding] = []
+        backend_mod = is_backend_module(f.path)
+        for node in ast.walk(f.tree):
+            if not (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in KEYED_METHODS
+                    and _is_registry_receiver(node.func.value)
+                    and node.args):
+                continue
+            key_node = node.args[0]
+            if (isinstance(key_node, ast.Constant)
+                    and isinstance(key_node.value, str)):
+                key = key_node.value
+            else:
+                key = project.lookup_constant(f, key_node)
+                if key is None:
+                    out.append(self.finding(
+                        f, node,
+                        "registry key is not a string literal or a "
+                        "module-level string constant — dynamic keys "
+                        "defeat the namespace audit"))
+                    continue
+            if not key.startswith(NAMESPACES):
+                out.append(self.finding(
+                    f, node,
+                    f"registry key {key!r} outside the serve "
+                    f"namespaces {'/'.join(n[:-1] for n in NAMESPACES)}"))
+            elif backend_mod and not key.startswith("backend/"):
+                out.append(self.finding(
+                    f, node,
+                    f"backend module publishes {key!r} — backends may "
+                    f"only use the `backend/` namespace (the one "
+                    f"namespace allowed to differ between backends)"))
+        return out

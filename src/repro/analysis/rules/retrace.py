@@ -1,0 +1,68 @@
+"""retrace-hazard: the serve layer compiles each step function exactly
+ONCE (fixed (max_batch, chunk) shapes; `_paged_steps`/`_slot_steps`
+lru_cache the jitted callables per (cfg, policy)). A `jax.jit` (or
+`pallas_call`) invocation sitting lexically inside a loop or a
+comprehension builds a FRESH wrapper per iteration, each with its own
+trace cache — compile time leaks into the iteration and the
+compile-once design of PR 2/4 is silently defeated. Hoist the wrapper
+out of the loop (module level, or an lru_cached factory).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Rule, register
+from repro.analysis.findings import Finding
+from repro.analysis.project import FileInfo, Project
+
+_LOOPS = (ast.For, ast.AsyncFor, ast.While)
+_COMPREHENSIONS = (ast.ListComp, ast.SetComp, ast.DictComp,
+                   ast.GeneratorExp)
+_BOUNDARIES = (ast.FunctionDef, ast.AsyncFunctionDef, ast.Lambda,
+               ast.Module)
+
+
+def _is_jit_wrapper(f: FileInfo, node: ast.Call) -> str | None:
+    dotted = f.dotted(node.func)
+    if dotted == "jax.jit":
+        return "jax.jit"
+    if dotted is not None and (dotted == "pallas_call"
+                               or dotted.endswith(".pallas_call")):
+        return "pallas_call"
+    if dotted == "functools.partial" and node.args:
+        if f.dotted(node.args[0]) == "jax.jit":
+            return "functools.partial(jax.jit, ...)"
+    return None
+
+
+@register
+class RetraceHazard(Rule):
+    id = "retrace-hazard"
+    description = ("jax.jit/pallas_call invoked inside a loop or "
+                   "comprehension — a fresh wrapper (and trace cache) "
+                   "per iteration defeats compile-once")
+
+    def check(self, f: FileInfo, project: Project) -> list[Finding]:
+        out: list[Finding] = []
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            wrapper = _is_jit_wrapper(f, node)
+            if wrapper is None:
+                continue
+            cur = f.parent(node)
+            while cur is not None and not isinstance(cur, _BOUNDARIES):
+                if isinstance(cur, _LOOPS + _COMPREHENSIONS):
+                    where = ("a comprehension"
+                             if isinstance(cur, _COMPREHENSIONS)
+                             else f"a `{'while' if isinstance(cur, ast.While) else 'for'}` loop")
+                    out.append(self.finding(
+                        f, node,
+                        f"`{wrapper}` invoked inside {where} — each "
+                        f"iteration builds a fresh wrapper with its own "
+                        f"trace cache; hoist it out (module level or an "
+                        f"lru_cached factory like serve.backend."
+                        f"_paged_steps)"))
+                    break
+                cur = f.parent(cur)
+        return out

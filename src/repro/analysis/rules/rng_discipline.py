@@ -1,0 +1,74 @@
+"""rng-key-discipline: the PR 5 batch-invariance contract. Every
+sampled token's key is `fold_in(PRNGKey(request.seed), tokens
+generated so far)` and NOTHING else — constructed in exactly one
+place, `repro/serve/sampler.py` (`lane_key`). Any other `PRNGKey`
+construction in the serve layer is a second RNG root that can
+decorrelate a request's stream from its (seed, position) identity, so
+it is flagged; keys reaching draw sites must arrive through
+`fold_in`/`split`, never be built inline at the draw.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Rule, in_serve, register
+from repro.analysis.findings import Finding
+from repro.analysis.project import FileInfo, Project
+
+KEY_CONSTRUCTORS = {"jax.random.PRNGKey", "jax.random.key"}
+# jax.random callables that CONSUME a key (first positional / key=)
+# without being key plumbing themselves
+_KEY_PLUMBING = {"PRNGKey", "key", "fold_in", "split", "wrap_key_data",
+                 "key_data", "clone"}
+
+SANCTIONED_FILES = ("repro/serve/sampler.py",)
+
+
+def _is_sanctioned(path: str) -> bool:
+    return any(path.endswith(p) for p in SANCTIONED_FILES)
+
+
+@register
+class RngKeyDiscipline(Rule):
+    id = "rng-key-discipline"
+    description = ("PRNGKey construction only in repro/serve/sampler.py; "
+                   "keys must flow through fold_in/split, never be "
+                   "built inline at a draw site")
+
+    def applies(self, f: FileInfo) -> bool:
+        return in_serve(f.path)
+
+    def check(self, f: FileInfo, project: Project) -> list[Finding]:
+        out: list[Finding] = []
+        sanctioned = _is_sanctioned(f.path)
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = f.dotted(node.func)
+            if dotted is None:
+                continue
+            if dotted in KEY_CONSTRUCTORS and not sanctioned:
+                out.append(self.finding(
+                    f, node,
+                    f"`{dotted}` constructed outside sampler.py — the "
+                    f"RNG-lane contract derives every serve key from "
+                    f"fold_in(PRNGKey(request.seed), tokens_generated) "
+                    f"in sampler.lane_key"))
+            elif (dotted.startswith("jax.random.")
+                    and dotted.rsplit(".", 1)[-1] not in _KEY_PLUMBING):
+                key_arg = None
+                if node.args:
+                    key_arg = node.args[0]
+                else:
+                    for kw in node.keywords:
+                        if kw.arg == "key":
+                            key_arg = kw.value
+                if (isinstance(key_arg, ast.Call)
+                        and f.dotted(key_arg.func) in KEY_CONSTRUCTORS):
+                    out.append(self.finding(
+                        f, node,
+                        f"fresh PRNGKey built inline at a `{dotted}` "
+                        f"draw site — reusing a root key here breaks "
+                        f"batch invariance; derive the key via "
+                        f"fold_in/split (sampler.lane_key)"))
+        return out

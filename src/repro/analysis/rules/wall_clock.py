@@ -1,0 +1,71 @@
+"""wall-clock-in-serve: the serve layer runs on the VIRTUAL ARTEMIS
+clock (every step advances `engine.now` by the hwsim-simulated latency
+of its composed batch). A single `time.time()` or stdlib-`random` draw
+in that layer silently decouples results from the cost model the paper
+is about, so none of it is allowed under `repro/serve/` — and the
+serve-facing benchmarks may use wall timing only with an explicit
+`# repro: allow[wall-clock-in-serve]` at the call site.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Rule, in_virtual_clock_scope, register
+from repro.analysis.findings import Finding
+from repro.analysis.project import FileInfo, Project
+
+BANNED_CALLS = {
+    "time.time", "time.time_ns",
+    "time.perf_counter", "time.perf_counter_ns",
+    "time.monotonic", "time.monotonic_ns",
+    "time.process_time", "time.process_time_ns",
+    "time.sleep",
+    "datetime.datetime.now", "datetime.datetime.utcnow",
+    "datetime.datetime.today", "datetime.date.today",
+}
+
+
+@register
+class WallClockInServe(Rule):
+    id = "wall-clock-in-serve"
+    description = ("no wall clock (time.time/perf_counter/datetime.now) "
+                   "or stdlib random in virtual-clock code "
+                   "(repro/serve + serve benchmarks)")
+
+    def applies(self, f: FileInfo) -> bool:
+        return in_virtual_clock_scope(f.path)
+
+    def check(self, f: FileInfo, project: Project) -> list[Finding]:
+        out: list[Finding] = []
+        for node in ast.walk(f.tree):
+            if isinstance(node, ast.Call):
+                dotted = f.dotted(node.func)
+                if dotted in BANNED_CALLS:
+                    out.append(self.finding(
+                        f, node,
+                        f"`{dotted}()` in virtual-clock code — serve "
+                        f"time comes from the ARTEMIS cost model "
+                        f"(engine.now), never the wall clock"))
+                elif dotted is not None and (
+                        dotted == "random" or dotted.startswith("random.")):
+                    out.append(self.finding(
+                        f, node,
+                        f"stdlib `{dotted}()` in virtual-clock code — "
+                        f"use np.random.default_rng(seed) (traffic) or "
+                        f"jax.random via sampler.lane_key (sampling)"))
+            elif isinstance(node, ast.Import):
+                for a in node.names:
+                    if a.name == "random" or a.name.startswith("random."):
+                        out.append(self.finding(
+                            f, node,
+                            "stdlib `random` imported in virtual-clock "
+                            "code — its global hidden-state RNG breaks "
+                            "(trace, seed) determinism"))
+            elif isinstance(node, ast.ImportFrom) and node.level == 0:
+                if node.module == "random":
+                    out.append(self.finding(
+                        f, node,
+                        "stdlib `random` imported in virtual-clock "
+                        "code — its global hidden-state RNG breaks "
+                        "(trace, seed) determinism"))
+        return out

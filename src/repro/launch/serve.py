@@ -23,6 +23,11 @@ Two modes (the paper is inference-oriented; this is the serve driver):
                   fixed seed, independent of batch composition.
 
 The ARTEMIS arithmetic policy applies to every matmul in both modes.
+
+Wall-clock use here is intentional (the CLI reports real prefill /
+decode / drain seconds next to the virtual-clock metrics) and carries
+`repro: allow[wall-clock-in-serve]` markers — the virtual-clock
+contract applies to serve-layer logic, not to the driver timing it.
 """
 from __future__ import annotations
 
@@ -63,14 +68,14 @@ def serve(arch: str = "qwen3_8b", smoke: bool = True,
         bt["prefix_embeds"] = frontend.synth_prefix_embeds(
             jax.random.PRNGKey(seed + 2), cfg, batch)
 
-    t0 = time.time()
+    t0 = time.time()  # repro: allow[wall-clock-in-serve]
     logits, cache = prefill(params, bt, cache)
     logits.block_until_ready()
-    t_prefill = time.time() - t0
+    t_prefill = time.time() - t0  # repro: allow[wall-clock-in-serve]
 
     out_tokens = []
     nxt = stepslib.greedy_sample(logits)
-    t0 = time.time()
+    t0 = time.time()  # repro: allow[wall-clock-in-serve]
     for _ in range(gen_len):
         # (B,) -> (B, 1); audio's (B, C) broadcasts to (B, 1, C) the
         # same way, so one expression covers both modalities
@@ -79,7 +84,7 @@ def serve(arch: str = "qwen3_8b", smoke: bool = True,
         nxt = stepslib.greedy_sample(logits)
         out_tokens.append(nxt)
     jax.block_until_ready(out_tokens[-1])
-    t_decode = time.time() - t0
+    t_decode = time.time() - t0  # repro: allow[wall-clock-in-serve]
 
     gen = jnp.stack(out_tokens, axis=1)
     return {
@@ -138,9 +143,9 @@ def serve_engine(arch: str = "qwen3_8b", smoke: bool = True,
         sampled_fraction=sampled_fraction, temperature=temperature,
         top_k=top_k, top_p=top_p, sample_seed=sample_seed))
     eng.submit_trace(trace)
-    t0 = time.time()
+    t0 = time.time()  # repro: allow[wall-clock-in-serve]
     eng.drain()
-    wall = time.time() - t0
+    wall = time.time() - t0  # repro: allow[wall-clock-in-serve]
     m = eng.metrics()
     m["wall_s"] = wall
     m["wall_tok_per_s"] = m["n_generated_tokens"] / max(wall, 1e-9)

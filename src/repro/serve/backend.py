@@ -129,6 +129,19 @@ annotations, never required structure.
 Adding a third backend (e.g. hybrid paged+slot for models mixing
 attention and SSM layers) means implementing this class and routing
 its families in `make_backend` — engine and scheduler need no changes.
+
+## Static enforcement (`repro.analysis`)
+
+The machine-checkable half of these contracts is enforced by the AST
+checker (`PYTHONPATH=src python -m repro.analysis`, CI job `analyze`):
+`backend-protocol` pins implementer signatures against the abstract
+protocol below; `registry-namespace` pins the "backend/"-only registry
+rule above (and the four serve namespaces everywhere else);
+`wall-clock-in-serve` / `rng-key-discipline` / `host-sync-in-jit` /
+`retrace-hazard` guard the virtual clock, the sampler's RNG-lane
+derivation, and the compile-once jit design this module's
+`_paged_steps`/`_slot_steps` factories implement. See the "Static
+analysis" section of README.md for rules and suppression syntax.
 """
 from __future__ import annotations
 

@@ -117,6 +117,10 @@ class ServeEngine:
         self.ecfg = ecfg
         self.policy = policy
         if params is None:
+            # One-time parameter init, not a sampling key: per-request
+            # sampling keys are derived exclusively in sampler.lane_key
+            # (fold_in(PRNGKey(request.seed), tokens_generated)).
+            # repro: allow[rng-key-discipline]
             params = model.init(jax.random.PRNGKey(seed), cfg)
         self.params = params
         self.cost = ArtemisCostModel(cfg, scheme=ecfg.scheme)

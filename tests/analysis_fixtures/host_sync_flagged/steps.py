@@ -1,0 +1,26 @@
+# virtual-path: src/repro/kernels/fixture_steps.py
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def decode_step(x):
+    s = _normalize(x)
+    return s * float(x.mean())  # expect: host-sync-in-jit
+
+
+def _normalize(x):
+    peak = x.max()
+    v = peak.item()  # expect: host-sync-in-jit
+    arr = np.asarray(x)  # expect: host-sync-in-jit
+    return x / jnp.maximum(peak, 1e-6) + arr.sum() * v
+
+
+def make_step(cfg):
+    def step(x):
+        return int(x[0])  # expect: host-sync-in-jit
+    return step
+
+
+run = jax.jit(make_step(None))

@@ -1,0 +1,32 @@
+# virtual-path: src/repro/serve/fixture_backend_ok.py
+import abc
+
+
+class SequenceBackend(abc.ABC):
+    @abc.abstractmethod
+    def admit(self, request, budget):
+        ...
+
+    @abc.abstractmethod
+    def release(self, seq_id):
+        ...
+
+
+class _SharedRelease:
+    def release(self, seq_id):
+        del seq_id
+
+
+class GoodBackend(_SharedRelease, SequenceBackend):
+    def admit(self, request, budget, warm=True):
+        del request, budget, warm
+        return True
+
+
+class ForwardingBackend(SequenceBackend):
+    def admit(self, *args, **kwargs):
+        del args, kwargs
+        return True
+
+    def release(self, *args):
+        del args

@@ -1,0 +1,24 @@
+# virtual-path: src/repro/serve/fixture_backend_impls.py
+import abc
+
+
+class SequenceBackend(abc.ABC):
+    @abc.abstractmethod
+    def admit(self, request, budget):
+        ...
+
+    @abc.abstractmethod
+    def release(self, seq_id):
+        ...
+
+    @abc.abstractmethod
+    def utilization(self):
+        ...
+
+
+class BadBackend(SequenceBackend):  # expect: backend-protocol
+    def admit(self, req, budget):  # expect: backend-protocol
+        return True
+
+    def release(self, seq_id, force):  # expect: backend-protocol
+        del seq_id, force

@@ -1,0 +1,6 @@
+# virtual-path: src/repro/serve/backend_extra.py
+
+
+def snapshot_metrics(registry):
+    registry.inc("engine/n_events")  # expect: registry-namespace
+    registry.inc("backend/pages_used")

@@ -1,0 +1,2 @@
+# virtual-path: src/repro/serve/fixture_keys.py
+N_TOKENS_KEY = "sampler/fixture_n_tokens"

@@ -1,0 +1,7 @@
+# virtual-path: src/repro/serve/fixture_metrics_ok.py
+from repro.serve import fixture_keys
+
+
+def publish(reg):
+    reg.inc(fixture_keys.N_TOKENS_KEY)
+    reg.observe("backend/fixture_util", 0.5)

@@ -1,0 +1,8 @@
+# virtual-path: src/repro/serve/fixture_metrics.py
+
+
+def publish(reg, name):
+    reg.inc("latency/total")  # expect: registry-namespace
+    reg.observe("engine/" + name, 1.0)  # expect: registry-namespace
+    reg.set_gauge(f"engine/{name}", 2)  # expect: registry-namespace
+    reg.inc("engine/n_steps")

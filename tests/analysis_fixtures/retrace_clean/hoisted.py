@@ -1,0 +1,23 @@
+# virtual-path: src/repro/launch/fixture_hoisted.py
+import functools
+
+import jax
+
+
+def _step(x):
+    return x + 1
+
+
+run_step = jax.jit(_step)
+
+
+@functools.lru_cache(maxsize=None)
+def make_runner(chunk: int):
+    # jitting inside an lru_cached factory is the sanctioned
+    # compile-once idiom (serve.backend._paged_steps)
+    del chunk
+    return jax.jit(_step)
+
+
+def sweep(batches):
+    return [run_step(b) for b in batches]

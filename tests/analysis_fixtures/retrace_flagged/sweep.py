@@ -1,0 +1,20 @@
+# virtual-path: src/repro/launch/fixture_sweep.py
+import jax
+from jax.experimental import pallas as pl
+
+
+def _step(x):
+    return x + 1
+
+
+def sweep(batches):
+    outs = []
+    for b in batches:
+        f = jax.jit(_step)  # expect: retrace-hazard
+        outs.append(f(b))
+    fns = [jax.jit(_step) for _ in range(4)]  # expect: retrace-hazard
+    k = None
+    while batches:
+        k = pl.pallas_call(_step, out_shape=None)  # expect: retrace-hazard
+        batches = batches[:-1]
+    return outs, fns, k

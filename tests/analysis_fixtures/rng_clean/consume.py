@@ -1,0 +1,7 @@
+# virtual-path: src/repro/serve/fixture_consume.py
+import jax
+
+
+def sample(key, logits):
+    k0, _k1 = jax.random.split(key)
+    return jax.random.categorical(k0, logits)

@@ -1,0 +1,6 @@
+# virtual-path: src/repro/serve/sampler.py
+import jax
+
+
+def lane_key(seed, n):
+    return jax.random.fold_in(jax.random.PRNGKey(seed), n)

@@ -1,0 +1,8 @@
+# virtual-path: src/repro/serve/fixture_lanes.py
+import jax
+
+
+def resample(logits, seed):
+    key = jax.random.PRNGKey(seed)  # expect: rng-key-discipline
+    del key
+    return jax.random.categorical(jax.random.PRNGKey(0), logits)  # expect: rng-key-discipline

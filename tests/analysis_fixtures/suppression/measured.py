@@ -1,0 +1,12 @@
+# virtual-path: src/repro/serve/fixture_suppressed.py
+import time
+
+
+def measure(engine):
+    t0 = time.time()  # repro: allow[wall-clock-in-serve]
+    # A comment-only suppression applies to the next non-comment
+    # line, so an audit explanation can sit above the flagged call:
+    # repro: allow[wall-clock-in-serve]
+    t1 = time.time()
+    t2 = time.time()  # repro: allow[*]
+    return t0, t1, t2

@@ -1,0 +1,8 @@
+# virtual-path: src/repro/hwsim/fixture_bench.py
+import time
+
+
+def wall(fn):
+    t0 = time.time()
+    fn()
+    return time.time() - t0

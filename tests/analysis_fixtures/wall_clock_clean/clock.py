@@ -1,0 +1,6 @@
+# virtual-path: src/repro/serve/fixture_clock.py
+
+
+def advance(engine, cost_s):
+    engine.now += cost_s
+    return engine.now

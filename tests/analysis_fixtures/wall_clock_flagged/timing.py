@@ -1,0 +1,12 @@
+# virtual-path: src/repro/serve/fixture_timing.py
+import random  # expect: wall-clock-in-serve
+import time
+from datetime import datetime
+
+
+def step_clock(engine):
+    t0 = time.time()  # expect: wall-clock-in-serve
+    jitter = random.random()  # expect: wall-clock-in-serve
+    stamp = datetime.now()  # expect: wall-clock-in-serve
+    time.sleep(0.01)  # expect: wall-clock-in-serve
+    return t0, jitter, stamp

@@ -1,0 +1,210 @@
+"""Tests for `repro.analysis` — the AST contract checker.
+
+The fixture corpus under tests/analysis_fixtures/ is the rule
+specification: one directory per case, each file carrying a
+`# virtual-path:` header (so path-scoped rules see serve-layer paths)
+and `# expect: rule-id` markers on exactly the lines a rule must flag.
+The parametrized test below asserts the analyzer's findings equal the
+marker set — both directions: no missed line, no extra line.
+
+The fixture directory is EXCLUDED from real analysis runs
+(`project.EXCLUDED_DIRS`) and from ruff (pyproject), because flagged
+fixtures exist to violate the contracts on purpose.
+"""
+from __future__ import annotations
+
+import json
+import re
+from pathlib import Path
+
+import pytest
+
+from repro.analysis import (Baseline, Finding, Project, all_rules,
+                            analyze_project)
+from repro.analysis.cli import main as cli_main
+from repro.analysis.core import PARSE_ERROR_RULE
+from repro.analysis.project import EXCLUDED_DIRS, parse_suppressions
+
+REPO = Path(__file__).resolve().parents[1]
+FIXTURES = Path(__file__).resolve().parent / "analysis_fixtures"
+
+_VPATH_RE = re.compile(r"^#\s*virtual-path:\s*(\S+)")
+_EXPECT_RE = re.compile(
+    r"#\s*expect:\s*([a-z][a-z\-]*(?:\s*,\s*[a-z][a-z\-]*)*)")
+
+# fixture-directory slug -> the rule its flagged/clean pair pins
+RULE_SLUGS = {
+    "wall_clock": "wall-clock-in-serve",
+    "rng": "rng-key-discipline",
+    "host_sync": "host-sync-in-jit",
+    "retrace": "retrace-hazard",
+    "registry": "registry-namespace",
+    "protocol": "backend-protocol",
+}
+
+
+def load_case(case_dir: Path):
+    """({virtual_path: source}, {(rule, virtual_path, line), ...})."""
+    sources: dict[str, str] = {}
+    expected: set[tuple[str, str, int]] = set()
+    for f in sorted(case_dir.glob("*.py")):
+        text = f.read_text()
+        m = _VPATH_RE.match(text.splitlines()[0])
+        assert m, f"{f} lacks a `# virtual-path:` header"
+        vpath = m.group(1)
+        assert vpath not in sources, f"duplicate virtual path {vpath}"
+        sources[vpath] = text
+        for lineno, line in enumerate(text.splitlines(), 1):
+            em = _EXPECT_RE.search(line)
+            if em:
+                for rid in em.group(1).split(","):
+                    expected.add((rid.strip(), vpath, lineno))
+    return sources, expected
+
+
+CASES = sorted(p.name for p in FIXTURES.iterdir() if p.is_dir())
+
+
+@pytest.mark.parametrize("case", CASES)
+def test_fixture_findings_match_expect_markers(case):
+    sources, expected = load_case(FIXTURES / case)
+    result = analyze_project(Project.from_sources(sources))
+    got = {(f.rule, f.path, f.line) for f in result.findings}
+    assert got == expected, (
+        f"case {case}: findings {sorted(got - expected)} not expected; "
+        f"expected {sorted(expected - got)} not found")
+
+
+def test_every_rule_has_flagged_and_clean_fixture():
+    rule_ids = {r.id for r in all_rules()}
+    assert set(RULE_SLUGS.values()) == rule_ids
+    by_case = {c: load_case(FIXTURES / c)[1] for c in CASES}
+    for slug, rule in RULE_SLUGS.items():
+        flagged = [c for c in CASES if c.startswith(slug)
+                   and any(e[0] == rule for e in by_case[c])]
+        assert flagged, f"no flagged fixture for {rule}"
+        clean = [c for c in CASES if c == f"{slug}_clean"]
+        assert clean, f"no clean fixture for {rule}"
+        assert not by_case[clean[0]], (
+            f"clean fixture {clean[0]} has expect markers")
+
+
+def test_registry_rule_has_backend_scoped_fixture():
+    _, expected = load_case(FIXTURES / "registry_backend_flagged")
+    assert {(r, p.rsplit("/", 1)[-1]) for r, p, _ in expected} == {
+        ("registry-namespace", "backend_extra.py")}
+
+
+# -- suppressions -------------------------------------------------------------
+
+
+def test_suppressions_same_line_block_above_and_wildcard():
+    sources, expected = load_case(FIXTURES / "suppression")
+    assert not expected
+    result = analyze_project(Project.from_sources(sources))
+    assert result.findings == []
+    assert [f.rule for f in result.suppressed] == \
+        ["wall-clock-in-serve"] * 3
+
+
+def test_parse_suppressions_comment_block_targets_next_code_line():
+    src = ("x = 1\n"
+           "# why: benchmark timing\n"
+           "# repro: allow[wall-clock-in-serve, rng-key-discipline]\n"
+           "# more commentary\n"
+           "y = 2\n")
+    sup = parse_suppressions(src)
+    assert sup == {5: {"wall-clock-in-serve", "rng-key-discipline"}}
+
+
+# -- baseline ratchet ---------------------------------------------------------
+
+
+def _fd(rule="wall-clock-in-serve", path="src/x.py", line=3):
+    return Finding(path=path, line=line, col=0, rule=rule, message="m")
+
+
+def test_baseline_roundtrip_and_split(tmp_path):
+    known = _fd(line=3)
+    fixed = _fd(line=9)
+    Baseline.save(tmp_path / "b.json", [known, fixed])
+    bl = Baseline.load(tmp_path / "b.json")
+    fresh = _fd(line=20)
+    new, baselined, stale = bl.split([known, fresh])
+    assert [f.key() for f in new] == [fresh.key()]
+    assert [f.key() for f in baselined] == [known.key()]
+    assert [e.key() for e in stale] == [fixed.key()]
+
+
+def test_baseline_missing_file_is_empty(tmp_path):
+    bl = Baseline.load(tmp_path / "nope.json")
+    new, baselined, stale = bl.split([_fd()])
+    assert len(new) == 1 and not baselined and not stale
+
+
+def test_baseline_rejects_unknown_version(tmp_path):
+    p = tmp_path / "b.json"
+    p.write_text(json.dumps({"version": 99, "findings": []}))
+    with pytest.raises(ValueError, match="version"):
+        Baseline.load(p)
+
+
+def test_unparseable_file_is_a_failing_finding():
+    result = analyze_project(Project.from_sources(
+        {"src/repro/serve/broken.py": "def f(:\n"}))
+    assert [f.rule for f in result.findings] == [PARSE_ERROR_RULE]
+
+
+# -- the real tree ------------------------------------------------------------
+
+
+def test_analysis_package_analyzes_itself_cleanly():
+    project = Project.from_paths(["src/repro/analysis"], root=REPO)
+    result = analyze_project(project)
+    assert result.findings == [] and result.suppressed == []
+
+
+def test_serve_tree_has_zero_unsuppressed_findings():
+    project = Project.from_paths(["src/repro/serve"], root=REPO)
+    result = analyze_project(project)
+    assert result.findings == []
+
+
+def test_committed_baseline_has_no_serve_entries():
+    bl = Baseline.load(REPO / "analysis-baseline.json")
+    assert not [e for e in bl.entries if "repro/serve/" in e.path]
+
+
+def test_fixture_corpus_is_excluded_from_real_runs():
+    assert "analysis_fixtures" in EXCLUDED_DIRS
+
+
+# -- CLI ----------------------------------------------------------------------
+
+
+def test_cli_clean_run_json_report(tmp_path, capsys, monkeypatch):
+    monkeypatch.chdir(REPO)
+    out = tmp_path / "findings.json"
+    rc = cli_main(["src/repro/analysis", "--format", "json",
+                   "--out", str(out)])
+    assert rc == 0
+    report = json.loads(out.read_text())
+    assert report["new"] == []
+    assert {r["id"] for r in report["rules"]} >= set(RULE_SLUGS.values())
+    assert json.loads(capsys.readouterr().out) == report
+
+
+def test_cli_fails_on_new_finding(tmp_path, capsys):
+    bad = tmp_path / "src" / "repro" / "serve" / "hot.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import time\n\n\ndef f():\n    return time.time()\n")
+    rc = cli_main([str(bad), "--baseline", str(tmp_path / "none.json")])
+    assert rc == 1
+    assert "wall-clock-in-serve" in capsys.readouterr().out
+
+
+def test_cli_list_rules(capsys):
+    assert cli_main(["--list-rules"]) == 0
+    out = capsys.readouterr().out
+    for rule in RULE_SLUGS.values():
+        assert rule in out
