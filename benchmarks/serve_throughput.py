@@ -16,7 +16,12 @@ are part of the per-run artifact now that every family routes through
 the one engine — plus a SAMPLED-DECODE trace (half the requests on
 stochastic temperature/top-k/top-p RNG lanes, half greedy) reporting
 tok/s and TTFT against the all-greedy run of the same trace shape, so
-the cost of the batched sampler rides the per-run artifact too.
+the cost of the batched sampler rides the per-run artifact too — plus
+a SHARDED-DECODE trace (mesh_shards=8 through the tensor-parallel
+ShardedPagedBackend on a simulated host mesh, skipped with a reason
+when fewer than 8 devices are visible) against the single-device run
+of the same trace, reporting the tok/s / TTFT / energy-per-token
+ratios so the sharded step's trajectory lands in the artifact too.
 
 Every trace row additionally reports `energy_per_token_J` — the
 ARTEMIS cost model's total simulated energy for the drain divided by
@@ -228,6 +233,67 @@ def _bench_sampled(cfg, params, seed: int) -> dict:
     return row
 
 
+def _bench_sharded(cfg, params, seed: int) -> dict:
+    """Tensor-parallel trace: the same Poisson shape as the headline
+    rows served at mesh_shards=8 (the ShardedPagedBackend over a
+    simulated 8-way mesh) against mesh_shards=1 (the plain paged
+    backend). Outputs are token-identical (pinned in tests); the row
+    captures what the sharding COSTS on a host-simulated mesh — wall
+    tok/s ratio, virtual TTFT, and energy/token, where the energy side
+    carries the cost model's per-shard duplication plus the priced ring
+    all-reduce. On real multi-chip hardware the wall ratio flips to a
+    speedup; the simulated-mesh trajectory still catches regressions in
+    the sharded step itself."""
+    n = 8
+    if jax.device_count() < n:
+        return {"trace": "sharded_decode", "skipped":
+                f"needs {n} devices, have {jax.device_count()} (set "
+                f"XLA_FLAGS=--xla_force_host_platform_device_count={n})"}
+    row = {"trace": "sharded_decode", "mesh_shards": n, "n_requests": 12}
+    tcfg = TrafficConfig(
+        n_requests=12, arrival_rate=1e6, prompt_len_min=4,
+        prompt_len_max=40, gen_len_min=4, gen_len_max=24,
+        vocab_size=cfg.vocab_size, seed=seed)
+    for label, shards in (("single_device", 1), ("sharded", n)):
+        ecfg = EngineConfig(**ECFG, prefill_chunk=16, mesh_shards=shards)
+        # per-side untimed warmup: the sharded steps compile separately
+        warm = ServeEngine(cfg, params=params, ecfg=ecfg, seed=seed)
+        warm.submit(np.arange(2, 22, dtype=np.int32), max_new_tokens=3)
+        t0 = time.time()  # repro: allow[wall-clock-in-serve]
+        warm.drain()
+        compile_s = time.time() - t0  # repro: allow[wall-clock-in-serve]
+        eng = ServeEngine(cfg, params=params, ecfg=ecfg, seed=seed)
+        eng.submit_trace(synth_trace(tcfg))
+        t0 = time.time()  # repro: allow[wall-clock-in-serve]
+        eng.drain()
+        wall = time.time() - t0  # repro: allow[wall-clock-in-serve]
+        m = eng.metrics()
+        row[label] = {
+            "mesh_shards": shards,
+            "compile_s": compile_s,
+            "wall_s": wall,
+            "n_tokens": m["n_generated_tokens"],
+            "tok_per_s": m["n_generated_tokens"] / max(wall, 1e-9),
+            "virtual_tok_per_s": m["virtual_tok_per_s"],
+            "mean_ttft_s": m["mean_ttft_s"],
+            "p99_ttft_s": m["p99_ttft_s"],
+            "p99_latency_s": m["p99_latency_s"],
+            "cache_utilization": m["cache_utilization"],
+            "n_preemptions": m["n_preemptions"],
+            "energy_per_token_J": m["energy_per_token_J"],
+        }
+    row["tok_per_s_ratio"] = (row["sharded"]["tok_per_s"]
+                              / max(row["single_device"]["tok_per_s"],
+                                    1e-9))
+    row["p99_ttft_ratio"] = (row["sharded"]["p99_ttft_s"]
+                             / max(row["single_device"]["p99_ttft_s"],
+                                   1e-12))
+    row["energy_per_token_ratio"] = (
+        row["sharded"]["energy_per_token_J"]
+        / max(row["single_device"]["energy_per_token_J"], 1e-30))
+    return row
+
+
 def _bench_recurrent(seed: int) -> dict:
     """Recurrent-family trace: rwkv6 through the state-slot backend —
     fixed-size per-lane state slots instead of growing KV pages, same
@@ -277,7 +343,8 @@ def _bench_recurrent(seed: int) -> dict:
 
 
 def run(smoke: bool = True, arch: str = "qwen3_8b",
-        n_requests: int = 12, seed: int = 0) -> list[dict]:
+        n_requests: int = 12, seed: int = 0,
+        out_path: str | None = None) -> list[dict]:
     cfg = configs.get_config(arch, smoke=smoke)
     cfg = dataclasses.replace(cfg, compute_dtype="float32")
     params = model.init(jax.random.PRNGKey(seed), cfg)
@@ -312,6 +379,16 @@ def run(smoke: bool = True, arch: str = "qwen3_8b",
           f"{sd['greedy']['tok_per_s']:8.1f} | p99-ttft "
           f"{sd['mixed_sampled']['p99_ttft_s']*1e3:.3f} ms vs "
           f"{sd['greedy']['p99_ttft_s']*1e3:.3f} ms (virtual)")
+    sh = _bench_sharded(cfg, params, seed)
+    if "skipped" in sh:
+        print(f"  sharded-decode: skipped — {sh['skipped']}")
+    else:
+        print(f"  sharded-decode ({sh['mesh_shards']}-way, simulated): "
+              f"{sh['sharded']['tok_per_s']:8.1f} tok/s wall vs "
+              f"{sh['single_device']['tok_per_s']:8.1f} single "
+              f"({sh['tok_per_s_ratio']:.2f}x) | energy/token "
+              f"{sh['energy_per_token_ratio']:.2f}x | p99-ttft "
+              f"{sh['sharded']['p99_ttft_s']*1e3:.3f} ms (virtual)")
     rec = _bench_recurrent(seed)
     print(f"  recurrent ({rec['arch']}, state-slot backend): "
           f"{rec['tok_per_s']:8.1f} tok/s wall | p99 "
@@ -321,11 +398,12 @@ def run(smoke: bool = True, arch: str = "qwen3_8b",
     bench = {"bench": "serve_throughput", "arch": cfg.name,
              "smoke": smoke, "seed": seed, "compile_s": compile_s,
              "rows": rows, "long_prompt": lp, "shared_prefix": sp,
-             "sampled_decode": sd, "recurrent": rec}
-    with open(OUT_PATH, "w") as f:
+             "sampled_decode": sd, "sharded_decode": sh, "recurrent": rec}
+    out_path = out_path or OUT_PATH
+    with open(out_path, "w") as f:
         json.dump(bench, f, indent=2)
     print("BENCH " + json.dumps(bench))
-    print(f"wrote {OUT_PATH}")
+    print(f"wrote {out_path}")
     return rows
 
 
@@ -335,9 +413,11 @@ def main() -> None:
     ap.add_argument("--arch", default="qwen3_8b")
     ap.add_argument("--n-requests", type=int, default=12)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--out", default=None,
+                    help=f"sidecar JSON path (default {OUT_PATH})")
     args = ap.parse_args()
     run(smoke=not args.full, arch=args.arch, n_requests=args.n_requests,
-        seed=args.seed)
+        seed=args.seed, out_path=args.out)
 
 
 if __name__ == "__main__":

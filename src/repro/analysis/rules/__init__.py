@@ -3,6 +3,7 @@ rule with `repro.analysis.core.RULES` (that is its only job — see each
 module for the contract it enforces)."""
 from repro.analysis.rules import (  # noqa: F401
     host_sync,
+    mesh_discipline,
     protocol,
     registry_ns,
     retrace,

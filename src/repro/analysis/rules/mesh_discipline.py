@@ -1,0 +1,69 @@
+"""mesh-discipline: the mesh-seam contract from the tensor-parallel
+serve PR. Device topology enters the repo as a VALUE (`ServeMesh`,
+built once by `repro/serve/mesh.py`; the launch layer's production
+meshes live in `repro/launch/mesh.py` under explicit suppressions) and
+the collectives that consume it live under `repro/parallel/`. Any
+other `repro/` module asking jax about devices — `jax.devices()`,
+`jax.device_count()`, `jax.make_mesh(...)`, constructing a
+`jax.sharding.Mesh` — reintroduces the implicit global topology the
+seam exists to remove: code that silently behaves differently on a
+different machine, untestable under a simulated mesh, and branchy in
+layers (engine, scheduler) that must stay mesh-oblivious.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Rule, register
+from repro.analysis.findings import Finding
+from repro.analysis.project import FileInfo, Project
+
+BANNED = {
+    "jax.devices": "device inventory query",
+    "jax.local_devices": "device inventory query",
+    "jax.device_count": "device count query",
+    "jax.local_device_count": "device count query",
+    "jax.make_mesh": "mesh construction",
+    "jax.sharding.Mesh": "mesh construction",
+    "jax.experimental.mesh_utils.create_device_mesh": "mesh construction",
+}
+
+# The two modules allowed to own topology: the serve seam and the
+# parallel collectives layer it hands meshes to.
+EXEMPT_SUFFIX = ("repro/serve/mesh.py",)
+EXEMPT_DIR = "repro/parallel/"
+
+
+def _governed(path: str) -> bool:
+    if "repro/" not in path:
+        return False
+    sub = path.split("repro/", 1)[1]
+    return not (("repro/" + sub).startswith(EXEMPT_DIR)
+                or any(path.endswith(s) for s in EXEMPT_SUFFIX))
+
+
+@register
+class MeshDiscipline(Rule):
+    id = "mesh-discipline"
+    description = ("no jax.devices()/device_count()/make_mesh()/"
+                   "Mesh(...) outside repro/serve/mesh.py and "
+                   "repro/parallel/ — topology flows as a ServeMesh "
+                   "value")
+
+    def applies(self, f: FileInfo) -> bool:
+        return _governed(f.path)
+
+    def check(self, f: FileInfo, project: Project) -> list[Finding]:
+        out: list[Finding] = []
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = f.dotted(node.func)
+            if dotted in BANNED:
+                out.append(self.finding(
+                    f, node,
+                    f"`{dotted}(...)` ({BANNED[dotted]}) outside the "
+                    f"mesh seam — take a `ServeMesh` value (built by "
+                    f"repro/serve/mesh.py) instead of asking jax about "
+                    f"device topology"))
+        return out

@@ -13,11 +13,15 @@ def make_production_mesh(*, multi_pod: bool = False):
     multi-pod:  (pod=2, data=16, model=16) = 512 chips."""
     shape = (2, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    # why: the launch layer's production mesh factory — the serve seam
+    # (repro/serve/mesh.py) covers serving; this covers training runs
+    # repro: allow[mesh-discipline]
     return jax.make_mesh(shape, axes)
 
 
 def make_smoke_mesh(data: int = 2, model: int = 2):
     """Tiny mesh for CPU integration tests (requires forced host devices)."""
+    # repro: allow[mesh-discipline]
     return jax.make_mesh((data, model), ("data", "model"))
 
 

@@ -21,6 +21,9 @@ Two modes (the paper is inference-oriented; this is the serve driver):
                   on per-request RNG lanes (`--sampled-fraction` mixes
                   greedy and sampled requests) — deterministic for a
                   fixed seed, independent of batch composition.
+                  `--mesh-shards N` (attention archs) serves tensor-
+                  parallel over the sharded paged backend; on CPU set
+                  XLA_FLAGS=--xla_force_host_platform_device_count=N.
 
 The ARTEMIS arithmetic policy applies to every matmul in both modes.
 
@@ -109,6 +112,7 @@ def serve_engine(arch: str = "qwen3_8b", smoke: bool = True,
                  top_p: float = 1.0, sample_seed: int = -1,
                  observability: str = "metrics",
                  trace_json: str | None = None,
+                 mesh_shards: int = 1,
                  params=None) -> dict:
     """Continuous-batching serving over a synthetic Poisson trace (any
     family — the engine routes to the right sequence backend). With
@@ -131,7 +135,8 @@ def serve_engine(arch: str = "qwen3_8b", smoke: bool = True,
         max_pages_per_seq=max(1, -(-max_len // page_size)) + 1,
         prefill_chunk=prefill_chunk, scheduler=scheduler,
         prefix_sharing=prefix_sharing, n_slots=n_slots,
-        max_seq_len=max(max_len + 1, 2), observability=observability)
+        max_seq_len=max(max_len + 1, 2), observability=observability,
+        mesh_shards=mesh_shards)
     eng = ServeEngine(cfg, params=params, policy=policy, ecfg=ecfg,
                       seed=seed)
     trace = synth_trace(TrafficConfig(
@@ -217,6 +222,12 @@ def main() -> None:
     ap.add_argument("--trace-json", default=None, metavar="PATH",
                     help="engine: export the run as Chrome trace-event "
                          "JSON to PATH (implies --observability trace)")
+    ap.add_argument("--mesh-shards", type=int, default=1,
+                    help="engine: tensor-parallel degree — >1 serves "
+                         "attention archs over the sharded paged "
+                         "backend (on CPU, simulate devices with "
+                         "XLA_FLAGS="
+                         "--xla_force_host_platform_device_count=N)")
     args = ap.parse_args()
     sampled_fraction = args.sampled_fraction
     if sampled_fraction is None:
@@ -245,7 +256,8 @@ def main() -> None:
         n_slots=args.n_slots, sampled_fraction=sampled_fraction,
         temperature=args.temperature, top_k=args.top_k,
         top_p=args.top_p, sample_seed=args.sample_seed,
-        observability=args.observability, trace_json=args.trace_json)
+        observability=args.observability, trace_json=args.trace_json,
+        mesh_shards=args.mesh_shards)
     m = out["metrics"]
     line = (f"engine: {m['n_done']} requests, "
             f"{m['n_generated_tokens']} tokens "

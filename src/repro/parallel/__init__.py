@@ -3,6 +3,7 @@ from repro.parallel.sharding import (
     batch_axes,
     batch_specs,
     cache_specs,
+    paged_pool_spec,
     param_specs,
 )
 from repro.parallel.context import (
@@ -20,7 +21,7 @@ from repro.parallel.compress import (
 
 __all__ = [
     "ShardingRules", "param_specs", "batch_specs", "cache_specs",
-    "batch_axes", "activation_constraint", "use_sharding", "sharding_ctx",
+    "batch_axes", "paged_pool_spec", "activation_constraint", "use_sharding", "sharding_ctx",
     "ring_attention", "split_kv_attention",
     "CompressionState", "compressed_psum", "init_compression",
 ]

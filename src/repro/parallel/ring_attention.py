@@ -27,6 +27,21 @@ import jax
 import jax.numpy as jnp
 
 NEG_INF = -1e30
+_EMPTY = 2**31 - 1   # INT32_MAX position = unwritten cache slot
+
+
+def _repeat_kv(h: int, k, v):
+    """Native GQA: repeat (B, S, KV, D) K/V heads up to the H query
+    heads (KV must divide H). Head order matches the serve layer's
+    grouped-query reshape (q head i -> kv head i // g)."""
+    kvh = k.shape[2]
+    if kvh == h:
+        return k, v
+    if h % kvh:
+        raise ValueError(
+            f"query heads ({h}) must be a multiple of KV heads ({kvh})")
+    g = h // kvh
+    return jnp.repeat(k, g, axis=2), jnp.repeat(v, g, axis=2)
 
 
 def _chunk_attn(q, k, v, q_pos, k_pos, scale, causal):
@@ -36,9 +51,14 @@ def _chunk_attn(q, k, v, q_pos, k_pos, scale, causal):
     """
     s = jnp.einsum("bqhd,bkhd->bhqk", q, k,
                    preferred_element_type=jnp.float32) * scale
+    # INT32_MAX-position slots mark unwritten cache entries: masked under
+    # BOTH modes (the causal comparison used to be the only thing hiding
+    # them, so non-causal attention read garbage K/V — surfaced when the
+    # sharded serve path started calling these with padded paged views)
+    keep = (k_pos < _EMPTY)[:, None, None, :]
     if causal:
-        keep = q_pos[:, None, :, None] >= k_pos[:, None, None, :]
-        s = jnp.where(keep, s, NEG_INF)
+        keep = keep & (q_pos[:, None, :, None] >= k_pos[:, None, None, :])
+    s = jnp.where(keep, s, NEG_INF)
     m = jnp.max(s, axis=-1)                       # (B,H,Sq)
     # guard fully-masked rows (m == NEG_INF): exp(s - m) would be exp(0)=1
     m_safe = jnp.maximum(m, -1e29)
@@ -64,40 +84,46 @@ def ring_attention(q, k, v, *, axis_name: str, causal: bool = True,
                    q_positions=None, kv_positions=None):
     """Sequence-sharded attention over `axis_name` (call inside shard_map).
 
-    q, k, v: (B, S_local, H|KV, Dh). GQA is handled by the caller repeating
-    KV heads (or by equal H). Returns (B, S_local, H, Dh) in q.dtype.
+    q: (B, Sq_local, H, Dh); k, v: (B, Sk_local, H|KV, Dh) — KV-head
+    counts that divide H are repeated internally (GQA), and the K/V
+    chunk length may differ from the query chunk length (the sharded
+    paged-serve path rings a gathered cache view past short prompt
+    chunks). `q_positions`/`kv_positions` are per-device GLOBAL
+    positions of the local chunks (defaults assume contiguous layout);
+    a device's kv positions travel the ring WITH its K/V chunk, so
+    striped / paged layouts mask correctly on every hop. Returns
+    (B, Sq_local, H, Dh) in q.dtype.
     """
     n = jax.lax.psum(1, axis_name)
     idx = jax.lax.axis_index(axis_name)
     b, s_local, h, d = q.shape
+    k, v = _repeat_kv(h, k, v)
+    s_k = k.shape[1]
     if scale is None:
         scale = 1.0 / (d ** 0.5)
     if q_positions is None:
         q_positions = idx * s_local + jnp.arange(s_local, dtype=jnp.int32)
         q_positions = jnp.broadcast_to(q_positions[None], (b, s_local))
+    if kv_positions is None:
+        kv_positions = idx * s_k + jnp.arange(s_k, dtype=jnp.int32)
+        kv_positions = jnp.broadcast_to(kv_positions[None], (b, s_k))
 
     qf = q.astype(jnp.float32)
 
-    def body(carry, step):
-        o, m, l, kc, vc = carry
-        # the K/V chunk currently held arrived from device (idx - step) % n
-        src = jnp.remainder(idx - step, n)
-        if kv_positions is None:
-            k_pos = src * kc.shape[1] + jnp.arange(kc.shape[1],
-                                                   dtype=jnp.int32)
-            k_pos = jnp.broadcast_to(k_pos[None], (b, kc.shape[1]))
-        else:
-            k_pos = kv_positions  # caller-supplied (striped layouts)
+    def body(carry, _):
+        o, m, l, kc, vc, pc = carry
         oc, mc, lc = _chunk_attn(qf, kc.astype(jnp.float32),
                                  vc.astype(jnp.float32),
-                                 q_positions, k_pos, scale, causal)
+                                 q_positions, pc, scale, causal)
         o, m, l = _merge(o, m, l, oc, mc, lc)
-        # ring step: pass the chunk to the next device (paper Fig 5(b)
+        # ring step: pass the chunk (and its positions — they describe
+        # the chunk, not the device) to the next device (paper Fig 5(b)
         # Rounds 3-4); ppermute overlaps with the next step's compute
         perm = [(i, (i + 1) % n) for i in range(n)]
         kc = jax.lax.ppermute(kc, axis_name, perm)
         vc = jax.lax.ppermute(vc, axis_name, perm)
-        return (o, m, l, kc, vc), None
+        pc = jax.lax.ppermute(pc, axis_name, perm)
+        return (o, m, l, kc, vc, pc), None
 
     o0 = jnp.zeros((b, s_local, h, d), jnp.float32)
     m0 = jnp.full((b, s_local, h), NEG_INF, jnp.float32)
@@ -110,8 +136,8 @@ def ring_attention(q, k, v, *, axis_name: str, causal: bool = True,
     pvary = getattr(jax.lax, "pvary", None)
     if pvary is not None:
         o0, m0, l0 = (pvary(a, axis_name) for a in (o0, m0, l0))
-    (o, m, l, _, _), _ = jax.lax.scan(
-        body, (o0, m0, l0, k, v), jnp.arange(n))
+    (o, m, l, _, _, _), _ = jax.lax.scan(
+        body, (o0, m0, l0, k, v, kv_positions), None, length=n)
     l = jnp.maximum(l, 1e-30)
     return (o / l[..., None]).astype(q.dtype)
 
@@ -126,6 +152,7 @@ def layer_dataflow_attention(q, k, v, *, axis_name: str,
     n = jax.lax.psum(1, axis_name)
     idx = jax.lax.axis_index(axis_name)
     b, s_local, h, d = q.shape
+    k, v = _repeat_kv(h, k, v)
     if scale is None:
         scale = 1.0 / (d ** 0.5)
     kg = jax.lax.all_gather(k, axis_name, axis=1, tiled=True)

@@ -228,6 +228,19 @@ def cache_specs(cfg: ModelConfig, mesh: Mesh, batch: int,
     }
 
 
+def paged_pool_spec(cfg: ModelConfig, mesh: Mesh) -> P:
+    """Spec for the serve layer's paged KV pool
+    (L, n_pages, page, KV, hd): per-shard K/V partitioned along the
+    KV-HEAD axis when it divides the TP degree, replicated otherwise.
+    The pool's page axis is indexed by host-side block tables (an
+    arbitrary permutation, not a sequence), so unlike `cache_specs`
+    there is no token axis to shard — the paged analogue of the token
+    dataflow lives in the attention core (split-KV / ring over the
+    gathered view), not the pool layout."""
+    kv_ax = _guard(mesh, cfg.n_kv_heads, "model")
+    return P(None, None, None, kv_ax, None)
+
+
 def named(mesh: Mesh, spec_tree):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec_tree,

@@ -18,28 +18,30 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
-from repro.parallel.ring_attention import _chunk_attn
+from repro.parallel.ring_attention import NEG_INF, _chunk_attn, _repeat_kv
 
-NEG_INF = -1e30
+__all__ = ["NEG_INF", "split_kv_attention"]
 
 
 def split_kv_attention(q, k_local, v_local, *, axis_name: str,
                        q_positions, kv_positions_local,
-                       scale: float | None = None):
+                       scale: float | None = None, causal: bool = True):
     """q: (B, Sq, H, D) REPLICATED across `axis_name` (Sq = 1 for decode);
-    k_local/v_local: (B, S_shard, H, D) — this device's token shard.
+    k_local/v_local: (B, S_shard, H|KV, D) — this device's token shard
+    (KV-head counts that divide H are repeated internally: GQA).
     kv_positions_local: (B, S_shard) global positions (INT32_MAX = empty).
 
     Returns (B, Sq, H, D) replicated (identical on every shard).
     """
     b, sq, h, d = q.shape
+    k_local, v_local = _repeat_kv(h, k_local, v_local)
     if scale is None:
         scale = 1.0 / (d ** 0.5)
     o, m, l = _chunk_attn(q.astype(jnp.float32),
                           k_local.astype(jnp.float32),
                           v_local.astype(jnp.float32),
                           q_positions, kv_positions_local, scale,
-                          causal=True)
+                          causal=causal)
     # cross-shard LSE merge (one pmax + two psums on (B,Sq,H)-sized terms —
     # the 'transfer in binary, compressed' insight: only statistics cross
     # the link, never the S-sized score matrix)

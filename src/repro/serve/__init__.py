@@ -15,7 +15,10 @@ shared-prefix and mixed greedy/sampled modes (`traffic`), the
 observability layer (`obs`: typed lifecycle events, metrics registry
 with exact-percentile streaming histograms, per-request energy
 attribution, span assembly, Chrome trace export over the virtual
-clock), and the engine driver (`engine`).
+clock), the device-mesh seam with its tensor-parallel paged backend
+(`mesh` / `sharded_backend`: single-device default is a strict no-op,
+`mesh_shards > 1` serves attention families tensor-parallel), and the
+engine driver (`engine`).
 
 Entry point: `python -m repro.launch.serve --mode engine` (any family).
 """
@@ -32,6 +35,7 @@ from repro.serve.backend import (
 )
 from repro.serve.cost import ArtemisCostModel
 from repro.serve.engine import ServeEngine, percentile
+from repro.serve.mesh import ServeMesh, make_serve_mesh
 from repro.serve.obs import (
     Event,
     Histogram,
@@ -60,6 +64,7 @@ from repro.serve.paged_model import (
 )
 from repro.serve.request import Request, RequestState, SamplingParams
 from repro.serve.sampler import lane_key, sample_tokens
+from repro.serve.sharded_backend import ShardedPagedBackend
 from repro.serve.scheduler import Action, Scheduler, SchedulerConfig
 from repro.serve.state_model import (
     init_slot_pool,
@@ -73,6 +78,7 @@ __all__ = [
     "PagedKVBackend", "SequenceBackend", "SlotBudget", "StateSlotBackend",
     "make_backend",
     "ArtemisCostModel", "ServeEngine", "percentile",
+    "ServeMesh", "make_serve_mesh", "ShardedPagedBackend",
     "Event", "Histogram", "MetricsRegistry", "PhaseAttribution",
     "RequestTrace", "Tracer", "assemble_spans", "dumps_chrome_trace",
     "export_chrome_trace", "to_chrome_trace", "validate_chrome_trace",

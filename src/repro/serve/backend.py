@@ -155,6 +155,12 @@ import numpy as np
 
 from repro.core.policy import ArithmeticPolicy
 from repro.models.config import ModelConfig
+from repro.serve.mesh import (
+    ServeMesh,
+    kv_pool_sharding,
+    make_serve_mesh,
+    param_shardings,
+)
 from repro.serve.obs import CowForkEvent, ShareEvent, Tracer
 from repro.serve.paged_cache import (
     TRASH_PAGE,
@@ -202,6 +208,11 @@ class EngineConfig:
     #                                  "trace" = keep the full typed
     #                                  event log for span assembly and
     #                                  Chrome trace export
+    mesh_shards: int = 1             # tensor-parallel degree: 1 = the
+    #                                  single-device strict no-op; > 1
+    #                                  routes paged families through
+    #                                  ShardedPagedBackend on a
+    #                                  serve-mesh (serve/mesh.py)
 
     def __post_init__(self):
         if self.page_size < 1:
@@ -232,6 +243,9 @@ class EngineConfig:
             raise ValueError(
                 f"observability must be one of {Tracer.LEVELS}, got "
                 f"{self.observability!r}")
+        if self.mesh_shards < 1:
+            raise ValueError(
+                f"mesh_shards must be >= 1, got {self.mesh_shards}")
         jnp.dtype(self.cache_dtype)   # raises on nonsense dtypes
 
 
@@ -393,20 +407,34 @@ class PagedKVBackend(SequenceBackend):
     are SHARED (refcount + 1) instead of re-prefilled, prefill skips
     their writes via the chunk's write_from mask, and a write landing
     in a co-owned page COW-forks it to a private device copy first.
+
+    Device placement flows through the `serve.mesh` seam: parameters
+    and the KV pool carry shardings from `parallel.sharding`
+    (`_place_params` / `init_paged_cache(sharding=...)`), and on the
+    default single-device mesh every placement helper is None — a
+    strict no-op, bit-pinned by the conformance suite. Page ids,
+    block tables, the allocator, and the PrefixIndex are LOGICAL
+    (host-side), so the sharing/COW machinery is mesh-oblivious;
+    `ShardedPagedBackend` (serve/sharded_backend.py) only overrides
+    the jitted step factory.
     """
 
     families = ("dense", "moe")
 
     def __init__(self, cfg: ModelConfig, ecfg: EngineConfig,
-                 policy: ArithmeticPolicy, params, obs: Tracer, clock):
+                 policy: ArithmeticPolicy, params, obs: Tracer, clock,
+                 mesh: ServeMesh | None = None):
         self.cfg = cfg
         self.ecfg = ecfg
-        self.params = params
+        self.mesh = mesh if mesh is not None \
+            else make_serve_mesh(ecfg.mesh_shards)
+        self.params = self._place_params(params)
         self.cache = init_paged_cache(
             cfg, ecfg.n_pages, ecfg.page_size,
-            dtype=jnp.dtype(ecfg.cache_dtype))
+            dtype=jnp.dtype(ecfg.cache_dtype),
+            sharding=kv_pool_sharding(self.mesh, cfg))
         self.prefix = PrefixIndex(ecfg.page_size)
-        self._prefill_fn, self._decode_fn = _paged_steps(cfg, policy)
+        self._prefill_fn, self._decode_fn = self._steps(policy)
         self._obs = obs             # Tracer: events + metrics registry
         self._now = clock           # virtual-clock read: now() -> float
         # rid -> (index generation, matched, pages): the scheduler
@@ -414,6 +442,22 @@ class PagedKVBackend(SequenceBackend):
         # results are memoized until the index mutates (a queued
         # request's effective prompt is fixed; invalidated on release)
         self._match_memo: dict[int, tuple[int, int, list[int]]] = {}
+
+    # -- mesh seam ----------------------------------------------------------
+
+    def _place_params(self, params):
+        """Pin parameters to the mesh's TP shardings; identity (no
+        device_put at all) on the single-device mesh."""
+        shardings = param_shardings(self.mesh, self.cfg, params)
+        if shardings is None:
+            return params
+        return jax.device_put(params, shardings)
+
+    def _steps(self, policy: ArithmeticPolicy):
+        """Jitted (prefill, decode) step pair. The single-device base
+        uses the shared `_paged_steps` cache; `ShardedPagedBackend`
+        overrides this with mesh-sharded steps."""
+        return _paged_steps(self.cfg, policy)
 
     # -- admission ----------------------------------------------------------
 
@@ -888,12 +932,24 @@ class StateSlotBackend(SequenceBackend):
 
 def make_backend(cfg: ModelConfig, ecfg: EngineConfig,
                  policy: ArithmeticPolicy, params, obs: Tracer,
-                 clock) -> SequenceBackend:
-    """Route a model family to its sequence backend. `obs` is the
-    engine's observability hub (repro.serve.obs.Tracer: typed-event
-    sink + metrics registry), `clock` reads the engine's virtual time
-    (clock() -> float) — see the module docstring's event-emission
-    contract."""
+                 clock, mesh: ServeMesh | None = None) -> SequenceBackend:
+    """Route a model family (and mesh) to its sequence backend. `obs`
+    is the engine's observability hub (repro.serve.obs.Tracer:
+    typed-event sink + metrics registry), `clock` reads the engine's
+    virtual time (clock() -> float) — see the module docstring's
+    event-emission contract. `mesh` is the engine's serve-mesh seam
+    (defaults from ecfg.mesh_shards); a multi-shard mesh routes paged
+    families through the tensor-parallel `ShardedPagedBackend`."""
+    mesh = mesh if mesh is not None else make_serve_mesh(ecfg.mesh_shards)
+    if not mesh.is_single:
+        from repro.serve.sharded_backend import ShardedPagedBackend
+        if cfg.family in ShardedPagedBackend.families:
+            return ShardedPagedBackend(cfg, ecfg, policy, params, obs,
+                                       clock, mesh=mesh)
+        raise ValueError(
+            f"family {cfg.family!r} has no multi-device backend "
+            f"(state-slot families serve single-device; set "
+            f"mesh_shards=1)")
     for backend_cls in (PagedKVBackend, StateSlotBackend):
         if cfg.family in backend_cls.families:
             return backend_cls(cfg, ecfg, policy, params, obs, clock)

@@ -88,6 +88,7 @@ from repro.models.config import ModelConfig
 from repro.serve import sampler
 from repro.serve.backend import EngineConfig, make_backend
 from repro.serve.cost import ArtemisCostModel
+from repro.serve.mesh import make_serve_mesh
 from repro.serve.obs import (
     PHASES,
     AdmitEvent,
@@ -123,12 +124,14 @@ class ServeEngine:
             # repro: allow[rng-key-discipline]
             params = model.init(jax.random.PRNGKey(seed), cfg)
         self.params = params
-        self.cost = ArtemisCostModel(cfg, scheme=ecfg.scheme)
+        self.cost = ArtemisCostModel(cfg, scheme=ecfg.scheme,
+                                     n_shards=ecfg.mesh_shards)
         self.obs = Tracer(level=ecfg.observability)
         self.now = 0.0
+        self.mesh = make_serve_mesh(ecfg.mesh_shards)
         self.backend = make_backend(
             cfg, ecfg, policy, params,
-            obs=self.obs, clock=lambda: self.now)
+            obs=self.obs, clock=lambda: self.now, mesh=self.mesh)
         self.scheduler = Scheduler(
             SchedulerConfig(policy=ecfg.scheduler),
             self.cost, ecfg.prefill_chunk,

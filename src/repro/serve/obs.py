@@ -385,6 +385,28 @@ class MixedStepEvent(ExecStepEvent):
 
 
 @dataclasses.dataclass(frozen=True)
+class ShardStepEvent(Event):
+    """One mesh shard's share of an executed backend forward (sharded
+    backends emit one per shard per prefill/decode forward, stamped
+    with the clock at step START — the engine's exec-step event that
+    follows carries the step's duration, so trace export renders the
+    shard slices against that step's [t_start, ts] window). Span
+    assembly ignores these (they are per-shard, not per-request);
+    they surface as per-shard tracks in the Chrome trace."""
+    shard: int = -1
+    n_shards: int = 1
+    phase: str = ""              # "prefill" | "decode"
+    n_tokens: int = 0            # tokens this shard processed (TP:
+    #                              every shard sees the full token
+    #                              batch, a head/sequence slice each)
+    kind: ClassVar[str] = "shard_step"
+    counted: ClassVar[bool] = False
+
+    def legacy(self) -> tuple:
+        return (self.kind, self.shard, self.phase, self.ts)
+
+
+@dataclasses.dataclass(frozen=True)
 class FinishEvent(Event):
     """Request completed. Carries its final per-phase energy/time
     attribution so a trace alone reconstructs the cost story."""
@@ -642,6 +664,7 @@ def assemble_spans(events) -> dict[int, RequestTrace]:
 # ---------------------------------------------------------------------------
 
 _ENGINE_TID = 0
+_SHARD_PID = 1      # Chrome-trace process grouping per-shard tracks
 
 
 def _us(t_s: float) -> float:
@@ -658,8 +681,8 @@ def to_chrome_trace(events, metadata: dict | None = None) -> dict:
     traces = assemble_spans(events)   # validates well-formedness
     te: list[dict] = []
 
-    def meta(tid: int, name: str) -> None:
-        te.append({"ph": "M", "pid": 0, "tid": tid,
+    def meta(tid: int, name: str, pid: int = 0) -> None:
+        te.append({"ph": "M", "pid": pid, "tid": tid,
                    "name": "thread_name", "args": {"name": name}})
 
     te.append({"ph": "M", "pid": 0, "tid": 0, "name": "process_name",
@@ -667,9 +690,23 @@ def to_chrome_trace(events, metadata: dict | None = None) -> dict:
     meta(_ENGINE_TID, "engine")
     for rid in sorted(traces):
         meta(rid + 1, f"request {rid}")
+    shard_ids = sorted({ev.shard for ev in events
+                        if isinstance(ev, ShardStepEvent)})
+    if shard_ids:
+        te.append({"ph": "M", "pid": _SHARD_PID, "tid": 0,
+                   "name": "process_name",
+                   "args": {"name": "backend shards"}})
+        for s in shard_ids:
+            meta(s, f"shard {s}", pid=_SHARD_PID)
 
+    # shard slices emitted DURING a step carry only its start time; the
+    # engine's exec-step event that follows carries the duration, so
+    # pending shard events render against that step's window
+    pending_shards: list[ShardStepEvent] = []
     for ev in events:
-        if isinstance(ev, ExecStepEvent):
+        if isinstance(ev, ShardStepEvent):
+            pending_shards.append(ev)
+        elif isinstance(ev, ExecStepEvent):
             te.append({
                 "ph": "X", "pid": 0, "tid": _ENGINE_TID,
                 "name": f"step:{ev.kind}", "cat": "step",
@@ -677,6 +714,15 @@ def to_chrome_trace(events, metadata: dict | None = None) -> dict:
                 "args": {"n_tokens": ev.n_tokens,
                          "price_ns": ev.price_ns,
                          "energy_pj": ev.energy_pj}})
+            for sev in pending_shards:
+                te.append({
+                    "ph": "X", "pid": _SHARD_PID, "tid": sev.shard,
+                    "name": f"shard{sev.shard}:{sev.phase}",
+                    "cat": "backend",
+                    "ts": _us(ev.t_start), "dur": _us(ev.dur_s),
+                    "args": {"n_tokens": sev.n_tokens,
+                             "n_shards": sev.n_shards}})
+            pending_shards.clear()
         elif isinstance(ev, AdvanceEvent):
             te.append({"ph": "i", "pid": 0, "tid": _ENGINE_TID,
                        "name": "advance", "cat": "engine", "s": "g",

@@ -104,8 +104,36 @@ def make_paged_prefill(cfg: ModelConfig,
 # ---------------------------------------------------------------------------
 
 
+def _attn_core(qg, kall, vall, positions, cfg: ModelConfig, policy):
+    """Default (single-device) grouped-query attention over the
+    gathered KV view. qg: (B, S, KV, G, Dh) grouped queries; kall/vall:
+    (B, Smax, KV, Dh); positions: (B, S) absolute query positions.
+    Returns the context tensor (B, S, KV, G, Dh).
+
+    Pluggable seam: `ShardedPagedBackend` swaps in a mesh-sharded core
+    (split-KV / ring attention over the same view) via the step
+    builders' `attn_core` argument — the rest of the paged forward is
+    layout-oblivious.
+    """
+    hd = qg.shape[-1]
+    smax = kall.shape[1]
+    scores = L.qeinsum("bskgd,btkd->bkgst", qg, kall, policy)
+    scores = scores.astype(jnp.float32) * (hd ** -0.5)
+    # page j of a block table holds positions [j*page, (j+1)*page), so
+    # the gathered view's kv position IS its index t; causal within the
+    # chunk because each query's own position bounds the mask
+    t = jnp.arange(smax, dtype=jnp.int32)[None, None, :]  # (1, 1, Smax)
+    keep = t <= positions[:, :, None]                     # (B, S, Smax)
+    if cfg.attn_window:
+        keep = keep & (t > positions[:, :, None] - cfg.attn_window)
+    scores = jnp.where(keep[:, None, None, :, :], scores, -1e30)
+    probs = jax.nn.softmax(scores, axis=-1).astype(qg.dtype)
+    return L.qeinsum("bkgst,btkd->bskgd", probs, vall, policy)
+
+
 def _paged_attn_block(lp, x, cfg: ModelConfig, policy, positions,
-                      ckl, cvl, block_tables, page_idx, offset):
+                      ckl, cvl, block_tables, page_idx, offset,
+                      attn_core=None):
     """One layer's attention with paged K/V. x: (B, S, d).
 
     ckl/cvl: this layer's page pool (P, page, KV, Dh); positions,
@@ -140,24 +168,15 @@ def _paged_attn_block(lp, x, cfg: ModelConfig, policy, positions,
 
     g = h // kvh
     qg = qh.reshape(b, s, kvh, g, hd)
-    scores = L.qeinsum("bskgd,btkd->bkgst", qg, kall, policy)
-    scores = scores.astype(jnp.float32) * (hd ** -0.5)
-    # page j of a block table holds positions [j*page, (j+1)*page), so
-    # the gathered view's kv position IS its index t; causal within the
-    # chunk because each query's own position bounds the mask
-    t = jnp.arange(smax, dtype=jnp.int32)[None, None, :]  # (1, 1, Smax)
-    keep = t <= positions[:, :, None]                     # (B, S, Smax)
-    if cfg.attn_window:
-        keep = keep & (t > positions[:, :, None] - cfg.attn_window)
-    scores = jnp.where(keep[:, None, None, :, :], scores, -1e30)
-    probs = jax.nn.softmax(scores, axis=-1).astype(x.dtype)
-    ctx = L.qeinsum("bkgst,btkd->bskgd", probs, vall, policy)
+    core = attn_core if attn_core is not None else _attn_core
+    ctx = core(qg, kall, vall, positions, cfg, policy)
     ctx = ctx.reshape(b, s, h * hd)
     return L.mm(ctx, p["wo"], policy), ckl, cvl
 
 
 def _paged_forward(params, cfg: ModelConfig, policy, tokens, kv,
-                   block_tables, positions, page_idx, offset):
+                   block_tables, positions, page_idx, offset,
+                   attn_core=None):
     """Full-model paged step: embed -> layers -> logits (B, S, V)."""
     dtype = jnp.dtype(cfg.compute_dtype)
     x = transformer._embed_tokens(params, cfg, tokens, dtype)   # (B, S, d)
@@ -171,7 +190,8 @@ def _paged_forward(params, cfg: ModelConfig, policy, tokens, kv,
         cvl = jax.lax.dynamic_index_in_dim(cv, li, 0, False)
         h, ckl, cvl = _paged_attn_block(
             lp, ln(lp["ln1"], x), cfg, policy, positions,
-            ckl, cvl, block_tables, page_idx, offset)
+            ckl, cvl, block_tables, page_idx, offset,
+            attn_core=attn_core)
         x = x + h
         if cfg.family == "moe":
             f, _ = M.moe_ffn(lp["moe"], ln(lp["ln2"], x), cfg, policy)
@@ -197,7 +217,8 @@ def _paged_forward(params, cfg: ModelConfig, policy, tokens, kv,
 
 
 def make_paged_chunked_prefill(cfg: ModelConfig,
-                               policy: ArithmeticPolicy = ArithmeticPolicy()):
+                               policy: ArithmeticPolicy = ArithmeticPolicy(),
+                               attn_core=None):
     """Returns chunked_prefill(params, tokens, kv, block_tables,
     start_pos, chunk_lens, active, write_from) -> (logits (B, C, V), kv).
 
@@ -228,7 +249,8 @@ def make_paged_chunked_prefill(cfg: ModelConfig,
         page_idx = jnp.where(do_write, slot, TRASH_PAGE)
         offset = jnp.where(do_write, positions % page, 0)
         return _paged_forward(params, cfg, policy, tokens, kv,
-                              block_tables, positions, page_idx, offset)
+                              block_tables, positions, page_idx, offset,
+                              attn_core=attn_core)
 
     return chunked_prefill
 
@@ -239,7 +261,8 @@ def make_paged_chunked_prefill(cfg: ModelConfig,
 
 
 def make_paged_decode(cfg: ModelConfig,
-                      policy: ArithmeticPolicy = ArithmeticPolicy()):
+                      policy: ArithmeticPolicy = ArithmeticPolicy(),
+                      attn_core=None):
     """Returns decode(params, tokens, kv, block_tables, seq_lens, active)
     -> (logits (B, V), kv). One token per lane at a fixed batch shape."""
     _check_family(cfg)
@@ -255,7 +278,7 @@ def make_paged_decode(cfg: ModelConfig,
         offset = jnp.where(active, seq_lens % page, 0)[:, None]
         logits, kv = _paged_forward(params, cfg, policy, tokens, kv,
                                     block_tables, positions, page_idx,
-                                    offset)
+                                    offset, attn_core=attn_core)
         return logits[:, 0], kv
 
     return decode

@@ -1,0 +1,9 @@
+# virtual-path: src/repro/serve/fixture_consumer.py
+"""Governed serve code that takes the mesh as a VALUE is clean — it
+never queries the device inventory."""
+
+
+def place(mesh, pool):
+    if mesh is None:
+        return pool
+    return pool.reshape(mesh.n_shards, -1)

@@ -1,0 +1,10 @@
+# virtual-path: src/repro/serve/mesh.py
+"""The seam module itself is exempt: this is the ONE governed place
+allowed to construct a mesh."""
+import jax
+
+
+def make_serve_mesh(n_shards):
+    if n_shards == 1:
+        return None
+    return jax.make_mesh((n_shards,), ("model",))

@@ -1,0 +1,8 @@
+# virtual-path: src/repro/launch/fixture_deploy.py
+"""A launch-layer module is governed too: topology questions belong to
+the seam (repro/serve/mesh.py) or the suppressed launch mesh factory."""
+import jax
+
+
+def shard_count():
+    return len(jax.devices())  # expect: mesh-discipline

@@ -1,0 +1,19 @@
+# virtual-path: src/repro/serve/fixture_topology.py
+import jax
+from jax.sharding import Mesh
+from jax.experimental import mesh_utils
+
+
+def pick_backend(cfg):
+    n = jax.device_count()  # expect: mesh-discipline
+    local = jax.local_device_count()  # expect: mesh-discipline
+    inv = jax.devices()  # expect: mesh-discipline
+    here = jax.local_devices()  # expect: mesh-discipline
+    return n, local, inv, here
+
+
+def build_topology(n):
+    mesh = jax.make_mesh((n,), ("model",))  # expect: mesh-discipline
+    devs = mesh_utils.create_device_mesh((n,))  # expect: mesh-discipline
+    raw = Mesh(devs, ("model",))  # expect: mesh-discipline
+    return mesh, raw

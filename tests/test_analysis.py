@@ -40,6 +40,7 @@ RULE_SLUGS = {
     "retrace": "retrace-hazard",
     "registry": "registry-namespace",
     "protocol": "backend-protocol",
+    "mesh_discipline": "mesh-discipline",
 }
 
 

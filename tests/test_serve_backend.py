@@ -47,6 +47,7 @@ from repro.serve import (
     PagedKVBackend,
     SamplingParams,
     ServeEngine,
+    ShardedPagedBackend,
     StateSlotBackend,
     Tracer,
     TrafficConfig,
@@ -57,16 +58,29 @@ from repro.serve import (
 from repro.serve.request import RequestState
 
 # the conformance axis: one arch per backend, all fp32 so greedy
-# token-identity is numerically comfortable
+# token-identity is numerically comfortable. "sharded" serves the SAME
+# arch as "paged" on a simulated 8-way TP mesh (conftest forces
+# XLA_FLAGS=--xla_force_host_platform_device_count=8), so every
+# conformance pin below — sequential token identity, preemption
+# recovery, sampled batch invariance, span trees — runs against the
+# tensor-parallel backend too.
 BACKENDS = {
-    "paged": ("qwen3_8b", PagedKVBackend),
-    "slot": ("rwkv6_3b", StateSlotBackend),
+    "paged": ("qwen3_8b", PagedKVBackend, {}),
+    "slot": ("rwkv6_3b", StateSlotBackend, {}),
+    "sharded": ("qwen3_8b", ShardedPagedBackend, {"mesh_shards": 8}),
 }
+
+# hypothesis property suites stay on the single-device backends: each
+# example drains a whole engine, and the sharded engine's per-step
+# collective overhead on a simulated mesh would dominate the suite
+# (the sharded backend shares all host-side logic with "paged" anyway;
+# its device math is pinned by the parametrized tests)
+PROPERTY_KINDS = ("paged", "slot")
 
 
 @functools.lru_cache(maxsize=None)
 def _setup(kind):
-    arch, _ = BACKENDS[kind]
+    arch = BACKENDS[kind][0]
     cfg = dataclasses.replace(configs.get_config(arch, smoke=True),
                               compute_dtype="float32")
     params = model.init(jax.random.PRNGKey(0), cfg)
@@ -77,7 +91,11 @@ def _engine(kind, **overrides):
     cfg, params = _setup(kind)
     kw = dict(page_size=8, n_pages=64, max_batch=3, max_pages_per_seq=8,
               prefill_chunk=8, max_seq_len=64, cache_dtype="float32")
+    kw.update(BACKENDS[kind][2])
     kw.update(overrides)
+    if kw.get("mesh_shards", 1) > jax.device_count():
+        pytest.skip(f"needs {kw['mesh_shards']} devices, have "
+                    f"{jax.device_count()}")
     return ServeEngine(cfg, params=params, ecfg=EngineConfig(**kw))
 
 
@@ -126,7 +144,7 @@ def _trace(cfg, n=4, seed=1, plo=3, phi=18, glo=2, ghi=8):
 
 def test_make_backend_routes_by_family():
     ecfg = EngineConfig()
-    for kind, (arch, cls) in BACKENDS.items():
+    for kind, (arch, cls, _) in BACKENDS.items():
         eng = _engine(kind)
         assert isinstance(eng.backend, cls)
         assert eng.cfg.family in cls.families
@@ -229,6 +247,43 @@ def test_preemption_recovers_token_identically(kind):
     eng.backend.check_invariants()
 
 
+def test_sharded_drain_matches_single_device_paged():
+    """The mesh tentpole's acceptance pin, stated directly: draining
+    the SAME mixed greedy/sampled trace — with a forced mid-flight
+    preemption — on the simulated 8-way ShardedPagedBackend produces
+    byte-identical token streams to the single-device PagedKVBackend
+    reference engine."""
+    cfg, _ = _setup("paged")
+    trace = synth_trace(TrafficConfig(
+        n_requests=5, arrival_rate=1e8, prompt_len_min=3,
+        prompt_len_max=18, gen_len_min=2, gen_len_max=8,
+        vocab_size=cfg.vocab_size, seed=61, sampled_fraction=0.5,
+        temperature=0.9, top_k=24, top_p=0.95))
+
+    def drain(kind):
+        eng = _engine(kind)
+        eng.submit_trace(trace)
+        preempted = False
+        for _ in range(600):
+            if not preempted:
+                decoding = [r for r in eng.requests.values()
+                            if r.state is RequestState.DECODE]
+                if decoding:
+                    eng._preempt(decoding[0])
+                    preempted = True
+            if eng.step() is None:
+                break
+        eng.drain()
+        assert preempted, "trace never reached a preemptable decode"
+        eng.backend.check_invariants()
+        return {i: eng.results()[i].tolist() for i in range(len(trace))}
+
+    single = drain("paged")
+    sharded = drain("sharded")
+    assert sharded == single, (
+        "sharded drain diverged from the single-device paged reference")
+
+
 @pytest.mark.parametrize("kind", list(BACKENDS))
 def test_budget_probe_is_a_snapshot(kind):
     """Granting against a BudgetProbe must not touch real backend
@@ -319,7 +374,7 @@ def test_engine_deterministic_per_backend(kind):
 @settings(max_examples=8, deadline=None)
 @given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 4)),
                 min_size=4, max_size=24),
-       st.sampled_from(sorted(BACKENDS)))
+       st.sampled_from(PROPERTY_KINDS))
 def test_backend_survives_random_interleavings(ops, kind):
     """Property: any interleaving of late submissions, engine steps,
     and forced preemptions keeps the backend invariants after every
@@ -493,7 +548,7 @@ def test_greedy_call_site_unaffected_by_sampler(kind):
 @settings(max_examples=6, deadline=None)
 @given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 4)),
                 min_size=4, max_size=20),
-       st.sampled_from(sorted(BACKENDS)))
+       st.sampled_from(PROPERTY_KINDS))
 def test_mixed_lanes_survive_random_interleavings(ops, kind):
     """Property: random interleavings of greedy AND sampled
     submissions, engine steps, and forced preemptions keep every
