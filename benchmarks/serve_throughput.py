@@ -75,9 +75,9 @@ def _warmup(cfg, params, seed: int) -> float:
     for plen, glen in ((20, 4), (7, 3)):
         eng.submit(rng.integers(2, cfg.vocab_size, plen).astype(np.int32),
                    max_new_tokens=glen)
-    t0 = time.time()  # repro: allow[wall-clock-in-serve]
+    t0 = time.time()  # repro: allow[wall-clock-in-serve] -- measured throughput/compile wall time IS the result
     eng.drain()
-    return time.time() - t0  # repro: allow[wall-clock-in-serve]
+    return time.time() - t0  # repro: allow[wall-clock-in-serve] -- measured throughput/compile wall time IS the result
 
 
 def _bench_one(cfg, params, scheduler: str, n_requests: int,
@@ -90,9 +90,9 @@ def _bench_one(cfg, params, scheduler: str, n_requests: int,
         gen_len_min=4, gen_len_max=24,
         vocab_size=cfg.vocab_size, seed=seed))
     eng.submit_trace(trace)
-    t0 = time.time()  # repro: allow[wall-clock-in-serve]
+    t0 = time.time()  # repro: allow[wall-clock-in-serve] -- measured throughput/compile wall time IS the result
     eng.drain()
-    wall = time.time() - t0  # repro: allow[wall-clock-in-serve]
+    wall = time.time() - t0  # repro: allow[wall-clock-in-serve] -- measured throughput/compile wall time IS the result
     m = eng.metrics()
     return {
         "scheduler": scheduler,
@@ -172,9 +172,9 @@ def _bench_shared_prefix(cfg, params, seed: int) -> dict:
         eng = ServeEngine(cfg, params=params, ecfg=EngineConfig(
             **ECFG, prefill_chunk=16, prefix_sharing=sharing), seed=seed)
         eng.submit_trace(trace)
-        t0 = time.time()  # repro: allow[wall-clock-in-serve]
+        t0 = time.time()  # repro: allow[wall-clock-in-serve] -- measured throughput/compile wall time IS the result
         eng.drain()
-        wall = time.time() - t0  # repro: allow[wall-clock-in-serve]
+        wall = time.time() - t0  # repro: allow[wall-clock-in-serve] -- measured throughput/compile wall time IS the result
         m = eng.metrics()
         row[label] = {
             "wall_s": wall,
@@ -215,9 +215,9 @@ def _bench_sampled(cfg, params, seed: int) -> dict:
             vocab_size=cfg.vocab_size, seed=seed,
             sampled_fraction=frac, temperature=0.8, top_k=40,
             top_p=0.95)))
-        t0 = time.time()  # repro: allow[wall-clock-in-serve]
+        t0 = time.time()  # repro: allow[wall-clock-in-serve] -- measured throughput/compile wall time IS the result
         eng.drain()
-        wall = time.time() - t0  # repro: allow[wall-clock-in-serve]
+        wall = time.time() - t0  # repro: allow[wall-clock-in-serve] -- measured throughput/compile wall time IS the result
         m = eng.metrics()
         row[label] = {
             "wall_s": wall,
@@ -259,14 +259,14 @@ def _bench_sharded(cfg, params, seed: int) -> dict:
         # per-side untimed warmup: the sharded steps compile separately
         warm = ServeEngine(cfg, params=params, ecfg=ecfg, seed=seed)
         warm.submit(np.arange(2, 22, dtype=np.int32), max_new_tokens=3)
-        t0 = time.time()  # repro: allow[wall-clock-in-serve]
+        t0 = time.time()  # repro: allow[wall-clock-in-serve] -- measured throughput/compile wall time IS the result
         warm.drain()
-        compile_s = time.time() - t0  # repro: allow[wall-clock-in-serve]
+        compile_s = time.time() - t0  # repro: allow[wall-clock-in-serve] -- measured throughput/compile wall time IS the result
         eng = ServeEngine(cfg, params=params, ecfg=ecfg, seed=seed)
         eng.submit_trace(synth_trace(tcfg))
-        t0 = time.time()  # repro: allow[wall-clock-in-serve]
+        t0 = time.time()  # repro: allow[wall-clock-in-serve] -- measured throughput/compile wall time IS the result
         eng.drain()
-        wall = time.time() - t0  # repro: allow[wall-clock-in-serve]
+        wall = time.time() - t0  # repro: allow[wall-clock-in-serve] -- measured throughput/compile wall time IS the result
         m = eng.metrics()
         row[label] = {
             "mesh_shards": shards,
@@ -307,18 +307,18 @@ def _bench_recurrent(seed: int) -> dict:
     # warmup drain compiles the slot chunk/decode steps off the clock
     warm = ServeEngine(cfg, params=params, ecfg=ecfg, seed=seed)
     warm.submit(np.arange(2, 20, dtype=np.int32), max_new_tokens=3)
-    t0 = time.time()  # repro: allow[wall-clock-in-serve]
+    t0 = time.time()  # repro: allow[wall-clock-in-serve] -- measured throughput/compile wall time IS the result
     warm.drain()
-    compile_s = time.time() - t0  # repro: allow[wall-clock-in-serve]
+    compile_s = time.time() - t0  # repro: allow[wall-clock-in-serve] -- measured throughput/compile wall time IS the result
     eng = ServeEngine(cfg, params=params, ecfg=ecfg, seed=seed)
     trace = synth_trace(TrafficConfig(
         n_requests=8, arrival_rate=1e6, prompt_len_min=4,
         prompt_len_max=32, gen_len_min=4, gen_len_max=16,
         vocab_size=cfg.vocab_size, seed=seed))
     eng.submit_trace(trace)
-    t0 = time.time()  # repro: allow[wall-clock-in-serve]
+    t0 = time.time()  # repro: allow[wall-clock-in-serve] -- measured throughput/compile wall time IS the result
     eng.drain()
-    wall = time.time() - t0  # repro: allow[wall-clock-in-serve]
+    wall = time.time() - t0  # repro: allow[wall-clock-in-serve] -- measured throughput/compile wall time IS the result
     m = eng.metrics()
     return {
         "trace": "recurrent_rwkv6",

@@ -1,22 +1,62 @@
 """`python -m repro.analysis [paths] [--format json]` — the CI gate.
 
 Exit codes: 0 = no new unsuppressed findings (baselined ones are
-reported but tolerated), 1 = new findings (or unparseable files),
+reported but tolerated), 1 = new findings (or unparseable files, or —
+under `--audit-suppressions` — a suppression without a rationale),
 2 = usage error.
 """
 from __future__ import annotations
 
 import argparse
 import json
+import subprocess
 import sys
 from pathlib import Path
 
 from repro.analysis.baseline import DEFAULT_BASELINE, Baseline
 from repro.analysis.core import all_rules, analyze_project
 from repro.analysis.findings import Finding
-from repro.analysis.project import Project
+from repro.analysis.project import Project, suppression_sites
+from repro.analysis.sarif import render_sarif
 
 DEFAULT_PATHS = ["src", "tests", "benchmarks"]
+
+
+def changed_files(root: Path | None = None) -> set[str] | None:
+    """Repo-relative paths changed vs `merge-base(HEAD, origin/main)`,
+    uncommitted and untracked files included. None when git (or the
+    origin/main ref) is unavailable — callers fall back to a full
+    run rather than silently analyzing nothing."""
+    def run(*cmd: str):
+        return subprocess.run(cmd, cwd=root, capture_output=True,
+                              text=True, timeout=30)
+    try:
+        base = run("git", "merge-base", "HEAD", "origin/main")
+        if base.returncode != 0:
+            return None
+        diff = run("git", "diff", "--name-only", base.stdout.strip())
+        untracked = run("git", "ls-files", "--others",
+                        "--exclude-standard")
+        if diff.returncode != 0 or untracked.returncode != 0:
+            return None
+    except (OSError, subprocess.SubprocessError):
+        return None
+    return {p for p in (diff.stdout + untracked.stdout).splitlines()
+            if p.strip()}
+
+
+def _audit_suppressions(project: Project) -> int:
+    sites = [(path, s) for path, f in sorted(project.files.items())
+             for s in suppression_sites(f.source)]
+    missing = 0
+    for path, s in sites:
+        why = s.rationale or "(no rationale)"
+        print(f"{path}:{s.line}  allow[{', '.join(s.rules)}]  {why}")
+        if not s.rationale:
+            missing += 1
+    print(f"{len(sites)} suppression site(s), {missing} without "
+          f"rationale")
+    return 1 if missing else 0
 
 
 def _render_json(result, new, baselined, stale, rules) -> str:
@@ -59,8 +99,18 @@ def main(argv: list[str] | None = None) -> int:
     parser.add_argument("paths", nargs="*", default=None,
                         help=f"files/dirs to analyze "
                              f"(default: {' '.join(DEFAULT_PATHS)})")
-    parser.add_argument("--format", choices=("text", "json"),
+    parser.add_argument("--format", choices=("text", "json", "sarif"),
                         default="text")
+    parser.add_argument("--changed-only", action="store_true",
+                        help="report findings only for files changed "
+                             "vs merge-base(HEAD, origin/main) — the "
+                             "pre-commit mode; the cross-file indexes "
+                             "still see the whole tree. Falls back to "
+                             "a full run outside a git checkout")
+    parser.add_argument("--audit-suppressions", action="store_true",
+                        help="list every `# repro: allow[...]` site "
+                             "with its rationale; exit 1 if any site "
+                             "lacks one")
     parser.add_argument("--baseline", default=DEFAULT_BASELINE,
                         help="baseline file of audited grandfathered "
                              "findings (missing file = empty baseline)")
@@ -83,7 +133,22 @@ def main(argv: list[str] | None = None) -> int:
         print("no paths to analyze", file=sys.stderr)
         return 2
     project = Project.from_paths(paths)
+
+    if args.audit_suppressions:
+        return _audit_suppressions(project)
+
     result = analyze_project(project, rules)
+
+    if args.changed_only:
+        changed = changed_files()
+        if changed is None:
+            print("--changed-only: no usable git checkout, running "
+                  "on the full tree", file=sys.stderr)
+        else:
+            result.findings = [f for f in result.findings
+                               if f.path in changed]
+            result.suppressed = [f for f in result.suppressed
+                                 if f.path in changed]
 
     if args.write_baseline:
         Baseline.save(args.baseline, result.findings)
@@ -94,9 +159,12 @@ def main(argv: list[str] | None = None) -> int:
     baseline = Baseline.load(args.baseline)
     new, baselined, stale = baseline.split(result.findings)
 
-    report = (_render_json(result, new, baselined, stale, rules)
-              if args.format == "json"
-              else _render_text(result, new, baselined, stale))
+    if args.format == "json":
+        report = _render_json(result, new, baselined, stale, rules)
+    elif args.format == "sarif":
+        report = render_sarif(new, baselined, rules)
+    else:
+        report = _render_text(result, new, baselined, stale)
     print(report)
     if args.out:
         Path(args.out).write_text(report + "\n")

@@ -1,0 +1,622 @@
+"""Forward dataflow over per-function CFGs, plus the shared
+cross-function indexes the dataflow rules plug into.
+
+Layers (bottom up):
+
+  * a generic worklist solver for MAY forward analyses: states are
+    frozensets of abstract facts, join is set union, each rule supplies
+    a `transfer(state, atom)` — `solve` returns per-block in-states and
+    `atom_states` replays them per atom so rules can attach findings to
+    exact lines;
+  * the taint lattice `TaintAnalysis`: which local names may hold
+    parameter-derived (traced) values, flow-sensitively — a rebind from
+    a static expression (`x = y.shape[0]`) KILLS the taint that the old
+    flow-insensitive fixpoint in host_sync kept forever;
+  * the function index + interprocedural call graph grown from the
+    project's jit surface (moved here from rules/host_sync.py so every
+    rule can ask "is this function jit-reachable, and via which root");
+  * the donation index: which callables donate which positional
+    arguments (`donate_argnums`), resolved through decorators, local
+    `jax.jit(...)` bindings, donating factories (functions returning
+    jitted steps — the serve idiom), and instance attributes bound from
+    factory results (`self._prefill_fn, self._decode_fn = self._steps(p)`).
+
+Everything here is stdlib-`ast` only, like the rest of the package.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+
+from repro.analysis.cfg import (CFG, SCOPE_BOUNDARY, atom_bindings,
+                                shallow_walk)
+from repro.analysis.project import FileInfo, Project
+
+FN_NODES = (ast.FunctionDef, ast.AsyncFunctionDef)
+
+
+def scope_walk(stmts):
+    """Walk statements (descending into compound statements and their
+    expressions) without ever crossing a function/class/lambda
+    boundary — the whole-body view of one scope."""
+    stack = list(stmts)
+    while stack:
+        n = stack.pop()
+        yield n
+        if isinstance(n, SCOPE_BOUNDARY):
+            continue
+        stack.extend(ast.iter_child_nodes(n))
+
+
+def chain_str(node: ast.AST) -> str | None:
+    """`self.cache.kv` -> "self.cache.kv"; None when the expression is
+    not a plain Name/Attribute chain. Unlike `FileInfo.dotted`, no
+    alias resolution: these strings name VALUES in a function body."""
+    parts: list[str] = []
+    while isinstance(node, ast.Attribute):
+        parts.append(node.attr)
+        node = node.value
+    if not isinstance(node, ast.Name):
+        return None
+    parts.append(node.id)
+    return ".".join(reversed(parts))
+
+
+def flat_names(target: ast.AST, acc: set[str]) -> None:
+    """Bare names bound by an assignment target (tuple/list/starred
+    unpacking included; attribute/subscript targets bind no name)."""
+    if isinstance(target, ast.Name):
+        acc.add(target.id)
+    elif isinstance(target, (ast.Tuple, ast.List)):
+        for e in target.elts:
+            flat_names(e, acc)
+    elif isinstance(target, ast.Starred):
+        flat_names(target.value, acc)
+
+
+# -- generic forward solver ---------------------------------------------------
+
+
+class ForwardAnalysis:
+    """A MAY forward analysis: state = frozenset of facts, join = union.
+    Subclasses override `entry_state` and `transfer`."""
+
+    def entry_state(self) -> frozenset:
+        return frozenset()
+
+    def transfer(self, state: frozenset, atom: ast.AST) -> frozenset:
+        return state
+
+
+def solve(cfg: CFG, analysis: ForwardAnalysis) -> dict[int, frozenset]:
+    """Fixpoint in-states per block. Terminates because in-states only
+    ever grow (union join) over a finite fact universe; blocks
+    unreachable from entry keep the empty state."""
+    in_states: dict[int, frozenset | None] = {b: None for b in cfg.blocks}
+    in_states[cfg.entry] = analysis.entry_state()
+    work = [cfg.entry]
+    while work:
+        bid = work.pop()
+        state = in_states[bid]
+        for atom in cfg.blocks[bid].atoms:
+            state = analysis.transfer(state, atom)
+        for s in cfg.blocks[bid].succs:
+            prev = in_states[s]
+            new = state if prev is None else prev | state
+            if new != prev:
+                in_states[s] = new
+                work.append(s)
+    return {b: (st if st is not None else frozenset())
+            for b, st in in_states.items()}
+
+
+def atom_states(cfg: CFG, analysis: ForwardAnalysis,
+                in_states: dict[int, frozenset]):
+    """Yield (atom, in-state-at-atom) for every atom in the CFG, in
+    block order — the finding-collection pass, replaying `transfer`
+    inside each block."""
+    for bid, block in cfg.blocks.items():
+        state = in_states[bid]
+        for atom in block.atoms:
+            yield atom, state
+            state = analysis.transfer(state, atom)
+
+
+def exit_states(cfg: CFG, analysis: ForwardAnalysis,
+                in_states: dict[int, frozenset]
+                ) -> tuple[frozenset, frozenset]:
+    """(state at normal exit, state at uncaught-exception exit)."""
+    return in_states[cfg.exit], in_states[cfg.raise_exit]
+
+
+# -- taint lattice ------------------------------------------------------------
+
+# attribute/call accesses that yield static Python values at trace time
+STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "weak_type"}
+
+
+def expr_is_static(e: ast.AST) -> bool:
+    """Expression is static at trace time despite touching traced
+    names: `.shape[0]`, `len(x)`, `x.ndim`, ..."""
+    for n in shallow_walk(e):
+        if isinstance(n, ast.Attribute) and n.attr in STATIC_ATTRS:
+            return True
+        if (isinstance(n, ast.Call) and isinstance(n.func, ast.Name)
+                and n.func.id == "len"):
+            return True
+    return False
+
+
+def expr_tainted(e: ast.AST, state: frozenset) -> bool:
+    return (not expr_is_static(e)
+            and any(isinstance(n, ast.Name) and n.id in state
+                    for n in shallow_walk(e)))
+
+
+class TaintAnalysis(ForwardAnalysis):
+    """Names that MAY hold parameter-derived (traced) values. Seeded
+    from the function's non-static parameters; propagated through
+    bindings; killed when a name is rebound from a static expression
+    (flow-sensitive laundering)."""
+
+    def __init__(self, params: set[str]):
+        self.params = frozenset(params)
+
+    def entry_state(self) -> frozenset:
+        return self.params
+
+    def transfer(self, state: frozenset, atom: ast.AST) -> frozenset:
+        bindings = list(atom_bindings(atom))
+        for n in shallow_walk(atom):
+            if isinstance(n, ast.NamedExpr) and n is not atom:
+                bindings.append(([n.target], n.value))
+        for targets, value in bindings:
+            names: set[str] = set()
+            for t in targets:
+                flat_names(t, names)
+            if value is not None and expr_tainted(value, state):
+                state = state | names
+            elif not isinstance(atom, ast.AugAssign):
+                # rebound from a static/untainted expression: laundered
+                # (augmented assigns read the old value, so never kill)
+                state = state - names
+        return state
+
+
+# -- function index + call graph ----------------------------------------------
+
+
+@dataclasses.dataclass
+class Func:
+    path: str
+    qual: str                      # e.g. "Class.method" / "factory.step"
+    name: str
+    node: ast.AST
+    cls: str | None                # enclosing class name, if a method
+    params: set[str]
+    jit_decorated: bool = False
+    donate_argnums: frozenset[int] | None = None
+    returned_inner: set[str] = dataclasses.field(default_factory=set)
+    reachable_via: str | None = None   # root qual once BFS marks it
+
+
+# parameter annotations that mean "static python value at trace time":
+# scalar builtins, and the repo's config/policy carrier types
+_STATIC_SCALAR_TYPES = {"int", "float", "bool", "str", "bytes", "None"}
+
+
+def annotation_is_static(ann: ast.AST | None) -> bool:
+    if ann is None:
+        return False
+    if isinstance(ann, ast.Constant):
+        # string annotations and bare None
+        if isinstance(ann.value, str):
+            return (ann.value in _STATIC_SCALAR_TYPES
+                    or ann.value.endswith(("Config", "Policy")))
+        return ann.value is None
+    if isinstance(ann, (ast.Name, ast.Attribute)):
+        name = ann.attr if isinstance(ann, ast.Attribute) else ann.id
+        return (name in _STATIC_SCALAR_TYPES
+                or name.endswith(("Config", "Policy")))
+    if isinstance(ann, ast.BinOp) and isinstance(ann.op, ast.BitOr):
+        return (annotation_is_static(ann.left)
+                and annotation_is_static(ann.right))
+    if isinstance(ann, ast.Subscript):
+        base = ann.value
+        name = (base.attr if isinstance(base, ast.Attribute)
+                else base.id if isinstance(base, ast.Name) else "")
+        if name in ("Optional", "Union"):
+            return annotation_is_static(ann.slice)
+    if isinstance(ann, ast.Tuple):
+        return all(annotation_is_static(e) for e in ann.elts)
+    return False
+
+
+def params_of(node) -> set[str]:
+    """Parameter names that may carry TRACED values — parameters whose
+    annotation pins them to a static python scalar or a config/policy
+    object are excluded from taint."""
+    a = node.args
+    params = [p for p in a.posonlyargs + a.args + a.kwonlyargs]
+    names = [p.arg for p in params
+             if not annotation_is_static(p.annotation)]
+    if a.vararg:
+        names.append(a.vararg.arg)
+    if a.kwarg:
+        names.append(a.kwarg.arg)
+    return set(names)
+
+
+def donate_argnums_of(call: ast.Call) -> frozenset[int] | None:
+    """Parse a `donate_argnums=` keyword off a jit call: a literal int
+    or tuple of ints. Anything dynamic (an IfExp, a name) returns None
+    — the call is conservatively treated as non-donating."""
+    for kw in call.keywords:
+        if kw.arg != "donate_argnums":
+            continue
+        v = kw.value
+        if isinstance(v, ast.Constant) and isinstance(v.value, int):
+            return frozenset({v.value})
+        if isinstance(v, (ast.Tuple, ast.List)) and all(
+                isinstance(e, ast.Constant) and isinstance(e.value, int)
+                for e in v.elts):
+            return frozenset(e.value for e in v.elts)
+        return None
+    return None
+
+
+def jit_decorator_argnums(f: FileInfo, dec: ast.AST
+                          ) -> tuple[bool, frozenset[int] | None]:
+    """(is a jit decorator, donated positions if any). Covers bare
+    `@jax.jit`, `@jax.jit(...)`, and `@functools.partial(jax.jit, ...)`."""
+    if f.dotted(dec) == "jax.jit":
+        return True, None
+    if isinstance(dec, ast.Call):
+        d = f.dotted(dec.func)
+        if d == "jax.jit":
+            return True, donate_argnums_of(dec)
+        if d == "functools.partial" and dec.args \
+                and f.dotted(dec.args[0]) == "jax.jit":
+            return True, donate_argnums_of(dec)
+    return False, None
+
+
+def collect_functions(f: FileInfo) -> dict[str, Func]:
+    funcs: dict[str, Func] = {}
+
+    def scope(stmts, prefix: str, cls: str | None):
+        for n in scope_walk(stmts):
+            if isinstance(n, FN_NODES):
+                qual = prefix + n.name
+                fn = Func(path=f.path, qual=qual, name=n.name, node=n,
+                          cls=cls, params=params_of(n))
+                for d in n.decorator_list:
+                    is_jit, donated = jit_decorator_argnums(f, d)
+                    if is_jit:
+                        fn.jit_decorated = True
+                        if donated:
+                            fn.donate_argnums = donated
+                # inner defs this function returns (factory pattern)
+                inner = {c.name for c in scope_walk(n.body)
+                         if isinstance(c, FN_NODES)}
+                for r in scope_walk(n.body):
+                    if (isinstance(r, ast.Return)
+                            and isinstance(r.value, ast.Name)
+                            and r.value.id in inner):
+                        fn.returned_inner.add(f"{qual}.{r.value.id}")
+                funcs[qual] = fn
+                scope(n.body, qual + ".", None)
+            elif isinstance(n, ast.ClassDef):
+                scope(n.body, prefix + n.name + ".", n.name)
+
+    scope(f.tree.body, "", None)
+    return funcs
+
+
+# jax transforms whose function-valued arguments are traced as part of
+# the caller: an edge to those functions keeps scan/vmap bodies inside
+# the reachable set
+TRANSFORMS = {
+    "jax.vmap", "jax.pmap", "jax.checkpoint", "jax.remat", "jax.grad",
+    "jax.value_and_grad", "functools.partial",
+    "jax.lax.scan", "jax.lax.map", "jax.lax.cond", "jax.lax.switch",
+    "jax.lax.while_loop", "jax.lax.fori_loop",
+    "jax.lax.associative_scan",
+}
+
+
+def resolve_callable(f: FileInfo, fn: Func, t: ast.AST, project: Project,
+                     index: dict[tuple[str, str], Func]
+                     ) -> tuple[str, str] | None:
+    """Resolve a Name/Attribute reference inside `fn`'s body to a
+    (path, qual) key of the project function index: nested functions of
+    enclosing scopes (innermost first), same-file module functions,
+    `self.method` within the class, imported names."""
+    if isinstance(t, ast.Name):
+        parts = fn.qual.split(".")
+        for i in range(len(parts), 0, -1):
+            cand = ".".join(parts[:i]) + "." + t.id
+            if (f.path, cand) in index:
+                return (f.path, cand)
+        if (f.path, t.id) in index:
+            return (f.path, t.id)
+        dotted = f.aliases.get(t.id)
+        if dotted and "." in dotted:
+            mod, name = dotted.rsplit(".", 1)
+            for path2, fi in project.files.items():
+                if fi.module == mod and (path2, name) in index:
+                    return (path2, name)
+    elif isinstance(t, ast.Attribute):
+        if (isinstance(t.value, ast.Name) and t.value.id == "self"
+                and fn.cls is not None):
+            cand = f"{fn.cls}.{t.attr}"
+            if (f.path, cand) in index:
+                return (f.path, cand)
+        dotted = f.dotted(t)
+        if dotted and "." in dotted:
+            mod, name = dotted.rsplit(".", 1)
+            for path2, fi in project.files.items():
+                if fi.module == mod and (path2, name) in index:
+                    return (path2, name)
+    return None
+
+
+def call_edges(f: FileInfo, fn: Func, project: Project,
+               index: dict[tuple[str, str], Func]
+               ) -> list[tuple[str, str]]:
+    """Resolved (path, qual) targets of plain-name calls in fn's own
+    body (nested defs excluded — they are graph nodes of their own),
+    plus function-valued arguments handed to jax transforms."""
+    out: list[tuple[str, str]] = []
+    for n in scope_walk(fn.node.body):
+        if not isinstance(n, ast.Call):
+            continue
+        tgt = resolve_callable(f, fn, n.func, project, index)
+        if tgt is not None:
+            out.append(tgt)
+        if f.dotted(n.func) in TRANSFORMS:
+            for arg in list(n.args) + [kw.value for kw in n.keywords]:
+                if isinstance(arg, (ast.Name, ast.Attribute)):
+                    tgt = resolve_callable(f, fn, arg, project, index)
+                    if tgt is not None:
+                        out.append(tgt)
+    return out
+
+
+class CallGraph:
+    """Project function index + jit reachability. `functions` maps
+    (path, qual) -> Func; a Func with `reachable_via` set is reachable
+    from the jit surface, and the value names the root it was reached
+    from (for finding messages)."""
+
+    def __init__(self, functions: dict[tuple[str, str], Func]):
+        self.functions = functions
+
+    @classmethod
+    def build(cls, project: Project) -> "CallGraph":
+        index: dict[tuple[str, str], Func] = {}
+        for f in project.files.values():
+            if f.tree is None:
+                continue
+            for qual, fn in collect_functions(f).items():
+                index[(f.path, qual)] = fn
+
+        surface = project.jit_surface
+        boundary = surface["wrapped"] | surface["kernels"]
+        roots: list[tuple[str, str]] = []
+        for key, fn in index.items():
+            module = project.files[fn.path].module
+            # wrapped/kernel matches are module-exact and module-level
+            # only; method refs (`jax.jit(self._m)` and partials over
+            # them) match by bare method name on classed functions — a
+            # documented over-approximation, since `self` at the jit
+            # site cannot be resolved to one class statically
+            if fn.jit_decorated or ("." not in fn.qual
+                                    and (module, fn.name) in boundary):
+                roots.append(key)
+            elif fn.cls is not None and fn.name in surface["methods"]:
+                roots.append(key)
+            elif fn.name in surface["factories"]:
+                for inner in fn.returned_inner:
+                    if (fn.path, inner) in index:
+                        roots.append((fn.path, inner))
+
+        edges = {key: call_edges(project.files[key[0]], fn, project,
+                                 index)
+                 for key, fn in index.items()}
+        todo = []
+        for key in roots:
+            if index[key].reachable_via is None:
+                index[key].reachable_via = index[key].qual
+                todo.append(key)
+        while todo:
+            key = todo.pop()
+            via = index[key].reachable_via
+            for tgt in edges[key]:
+                if index[tgt].reachable_via is None:
+                    index[tgt].reachable_via = via
+                    todo.append(tgt)
+        return cls(index)
+
+
+def call_graph(project: Project) -> CallGraph:
+    cached = getattr(project, "_call_graph", None)
+    if cached is None:
+        cached = CallGraph.build(project)
+        project._call_graph = cached
+    return cached
+
+
+# -- donation index -----------------------------------------------------------
+
+
+@dataclasses.dataclass
+class DonationIndex:
+    """Which callables donate which positional argument slots.
+
+    functions — dotted "module.name" of module-level jitted defs
+    attrs     — instance-attribute / method names (`self._prefill_fn`)
+                bound from donating factories or jit calls, matched by
+                bare attribute name project-wide (over-approximation)
+    locals    — (path, name) for `x = jax.jit(f, donate_argnums=...)`
+                or tuple-unpacks of factory calls into locals,
+                file-scoped by name
+    """
+
+    functions: dict[str, frozenset[int]]
+    attrs: dict[str, frozenset[int]]
+    locals: dict[tuple[str, str], frozenset[int]]
+
+
+def _is_jit_call(f: FileInfo, node: ast.AST) -> bool:
+    return (isinstance(node, ast.Call)
+            and f.dotted(node.func) == "jax.jit")
+
+
+def _factory_returns(project: Project, graph: CallGraph
+                     ) -> dict[tuple[str, str],
+                               tuple[frozenset[int] | None, ...]]:
+    """(path, qual) -> per-element donate_argnums for functions that
+    return jitted callables: `return jax.jit(...), jax.jit(...)`,
+    `return prefill, decode` over local jit bindings, or
+    `return other_factory(...)` (resolved by fixpoint)."""
+    direct: dict[tuple[str, str],
+                 tuple[frozenset[int] | None, ...]] = {}
+    deferred: dict[tuple[str, str], tuple[str, str]] = {}
+    for key, fn in graph.functions.items():
+        f = project.files[key[0]]
+        # local `name = jax.jit(...)` bindings inside this function
+        jit_locals: dict[str, frozenset[int] | None] = {}
+        for n in scope_walk(fn.node.body):
+            if isinstance(n, ast.Assign) and _is_jit_call(f, n.value):
+                for t in n.targets:
+                    if isinstance(t, ast.Name):
+                        jit_locals[t.id] = donate_argnums_of(n.value)
+        for r in scope_walk(fn.node.body):
+            if not isinstance(r, ast.Return) or r.value is None:
+                continue
+            elems = (list(r.value.elts)
+                     if isinstance(r.value, ast.Tuple) else [r.value])
+            per_elem: list[frozenset[int] | None] = []
+            known = False
+            for e in elems:
+                if _is_jit_call(f, e):
+                    per_elem.append(donate_argnums_of(e))
+                    known = True
+                elif isinstance(e, ast.Name) and e.id in jit_locals:
+                    per_elem.append(jit_locals[e.id])
+                    known = True
+                else:
+                    per_elem.append(None)
+            if known:
+                direct[key] = tuple(per_elem)
+            elif len(elems) == 1 and isinstance(elems[0], ast.Call):
+                tgt = resolve_callable(f, fn, elems[0].func, project,
+                                       graph.functions)
+                if tgt is not None:
+                    deferred[key] = tgt
+    # fixpoint: `return other_factory(...)` chains (e.g. a backend's
+    # `_steps` method delegating to the module-level step factory)
+    for _ in range(len(deferred) + 1):
+        changed = False
+        for key, tgt in deferred.items():
+            if key not in direct and tgt in direct:
+                direct[key] = direct[tgt]
+                changed = True
+        if not changed:
+            break
+    return direct
+
+
+def _build_donation_index(project: Project) -> DonationIndex:
+    graph = call_graph(project)
+    functions: dict[str, frozenset[int]] = {}
+    attrs: dict[str, frozenset[int]] = {}
+    locals_: dict[tuple[str, str], frozenset[int]] = {}
+
+    for key, fn in graph.functions.items():
+        if fn.donate_argnums:
+            module = project.files[fn.path].module
+            if fn.cls is not None:
+                attrs[fn.name] = fn.donate_argnums
+            else:
+                functions[f"{module}.{fn.qual}"] = fn.donate_argnums
+
+    factory = _factory_returns(project, graph)
+
+    for key, fn in graph.functions.items():
+        f = project.files[key[0]]
+        for n in scope_walk(fn.node.body):
+            if not isinstance(n, ast.Assign):
+                continue
+            # direct jit binding: x = jax.jit(f, donate_argnums=...)
+            if _is_jit_call(f, n.value):
+                donated = donate_argnums_of(n.value)
+                if donated:
+                    for t in n.targets:
+                        if isinstance(t, ast.Name):
+                            locals_[(f.path, t.id)] = donated
+                        elif (isinstance(t, ast.Attribute)
+                              and isinstance(t.value, ast.Name)
+                              and t.value.id == "self"):
+                            attrs[t.attr] = donated
+                continue
+            # factory-product binding: a, b = make_steps(...)  /
+            # self._p, self._d = self._steps(policy)
+            if not isinstance(n.value, ast.Call):
+                continue
+            tgt = resolve_callable(f, fn, n.value.func, project,
+                                   graph.functions)
+            per_elem = factory.get(tgt) if tgt is not None else None
+            if per_elem is None:
+                continue
+            for t in n.targets:
+                elts = (list(t.elts)
+                        if isinstance(t, (ast.Tuple, ast.List))
+                        else [t])
+                if len(elts) != len(per_elem):
+                    continue
+                for e, donated in zip(elts, per_elem):
+                    if not donated:
+                        continue
+                    if isinstance(e, ast.Name):
+                        locals_[(f.path, e.id)] = donated
+                    elif (isinstance(e, ast.Attribute)
+                          and isinstance(e.value, ast.Name)
+                          and e.value.id == "self"):
+                        attrs[e.attr] = donated
+    return DonationIndex(functions=functions, attrs=attrs,
+                         locals=locals_)
+
+
+def donation_index(project: Project) -> DonationIndex:
+    cached = getattr(project, "_donation_index", None)
+    if cached is None:
+        cached = _build_donation_index(project)
+        project._donation_index = cached
+    return cached
+
+
+def donated_positions(f: FileInfo, call: ast.Call, idx: DonationIndex
+                      ) -> frozenset[int] | None:
+    """Donated positional slots of a call site, or None when the
+    callee is not a known donating callable."""
+    func = call.func
+    if isinstance(func, ast.Name):
+        key = (f.path, func.id)
+        if key in idx.locals:
+            return idx.locals[key]
+        dotted = f.dotted(func)
+        if dotted is not None:
+            if "." not in dotted:
+                dotted = f"{f.module}.{dotted}"
+            if dotted in idx.functions:
+                return idx.functions[dotted]
+    elif isinstance(func, ast.Attribute):
+        if (isinstance(func.value, ast.Name) and func.value.id == "self"
+                and func.attr in idx.attrs):
+            return idx.attrs[func.attr]
+        dotted = f.dotted(func)
+        if dotted is not None and dotted in idx.functions:
+            return idx.functions[dotted]
+    return None

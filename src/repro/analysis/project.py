@@ -54,6 +54,50 @@ def parse_suppressions(source: str) -> dict[int, set[str]]:
     return eff
 
 
+@dataclasses.dataclass(frozen=True)
+class SuppressionSite:
+    """One `# repro: allow[...]` comment: where it sits, which line it
+    suppresses, which rules, and the human rationale next to it."""
+
+    line: int                 # line of the allow comment itself
+    target_line: int          # code line the suppression applies to
+    rules: tuple[str, ...]
+    rationale: str            # "" when the author gave no reason
+
+
+def suppression_sites(source: str) -> list[SuppressionSite]:
+    """Every allow comment in a file, with its rationale text: for a
+    same-line suppression, whatever follows the `]`; for a comment-
+    block suppression, the other comment lines of the contiguous block
+    (the shape `parse_suppressions` targets at the next code line)."""
+    lines = source.splitlines()
+    sites: list[SuppressionSite] = []
+    for i, text in enumerate(lines, 1):
+        m = ALLOW_RE.search(text)
+        if m is None:
+            continue
+        ids = tuple(sorted(s.strip() for s in m.group(1).split(",")
+                           if s.strip()))
+        trailing = text[m.end():].strip().lstrip("-: ").strip()
+        if not _COMMENT_ONLY_RE.match(text):
+            sites.append(SuppressionSite(line=i, target_line=i,
+                                         rules=ids, rationale=trailing))
+            continue
+        start = i
+        while start > 1 and _COMMENT_ONLY_RE.match(lines[start - 2]):
+            start -= 1
+        target = i + 1
+        while (target <= len(lines)
+               and _COMMENT_ONLY_RE.match(lines[target - 1])):
+            target += 1
+        parts = [lines[k - 1].strip().lstrip("#").strip()
+                 for k in range(start, target) if k != i]
+        rationale = " ".join(p for p in parts + [trailing] if p)
+        sites.append(SuppressionSite(line=i, target_line=target,
+                                     rules=ids, rationale=rationale))
+    return sites
+
+
 def module_for_path(path: str) -> str:
     """Best-effort dotted module name for a repo-relative path
     (`src/repro/serve/engine.py` -> `repro.serve.engine`)."""
@@ -256,10 +300,21 @@ class Project:
                     variable named `step` in one file cannot mark
                     unrelated `step` functions elsewhere)
         kernels   — (module, name) pairs for `pallas_call(f, ...)`
+        methods   — bare method names for `jax.jit(self._m)` and
+                    `jax.jit(functools.partial(self._m, ...))` — the
+                    receiver class cannot be resolved statically, so
+                    consumers match these by name against class
+                    methods only (documented over-approximation)
+
+        `functools.partial` chains are followed to the underlying
+        callable at any depth (`jax.jit(partial(partial(f, a), b))`
+        marks f, not "partial"), including through simple local
+        bindings (`step = functools.partial(f, cfg); jax.jit(step)`).
         """
         factories: set[str] = set()
         wrapped: set[tuple[str, str]] = set()
         kernels: set[tuple[str, str]] = set()
+        methods: set[str] = set()
 
         def exact(f: FileInfo, node: ast.AST) -> tuple[str, str] | None:
             dotted = f.dotted(node)
@@ -272,36 +327,45 @@ class Project:
         for f in self.files.values():
             if f.tree is None:
                 continue
-            # name -> callee for simple `x = f(...)` assignments: a
-            # jitted variable holding a factory product counts as a
-            # jitted factory call
-            assigned_from: dict[str, str] = {}
+            # name -> the Call it was assigned from, for simple
+            # `x = f(...)` bindings: a jitted variable holding a
+            # factory product counts as a jitted factory call, and a
+            # jitted variable holding a partial is followed through
+            assigned_call: dict[str, ast.Call] = {}
             for node in ast.walk(f.tree):
                 if (isinstance(node, ast.Assign)
                         and isinstance(node.value, ast.Call)):
-                    callee = f.dotted(node.value.func)
-                    if callee:
-                        for t in node.targets:
-                            if isinstance(t, ast.Name):
-                                assigned_from[t.id] = callee
+                    for t in node.targets:
+                        if isinstance(t, ast.Name):
+                            assigned_call[t.id] = node.value
+
+            def classify(arg: ast.AST, depth: int = 0) -> None:
+                """Record the callable expression handed to jax.jit."""
+                if depth > 8:
+                    return
+                if isinstance(arg, ast.Call):
+                    callee = f.dotted(arg.func)
+                    if callee == "functools.partial" and arg.args:
+                        classify(arg.args[0], depth + 1)
+                    elif callee:
+                        factories.add(callee.rsplit(".", 1)[-1])
+                elif isinstance(arg, ast.Name) and arg.id in assigned_call:
+                    classify(assigned_call[arg.id], depth + 1)
+                elif (isinstance(arg, ast.Attribute)
+                        and isinstance(arg.value, ast.Name)
+                        and arg.value.id == "self"):
+                    methods.add(arg.attr)
+                else:
+                    pair = exact(f, arg)
+                    if pair:
+                        wrapped.add(pair)
+
             for node in ast.walk(f.tree):
                 if not isinstance(node, ast.Call):
                     continue
                 dotted = f.dotted(node.func)
                 if dotted == "jax.jit" and node.args:
-                    arg = node.args[0]
-                    if isinstance(arg, ast.Call):
-                        inner = f.dotted(arg.func)
-                        if inner:
-                            factories.add(inner.rsplit(".", 1)[-1])
-                    elif (isinstance(arg, ast.Name)
-                            and arg.id in assigned_from):
-                        factories.add(
-                            assigned_from[arg.id].rsplit(".", 1)[-1])
-                    else:
-                        pair = exact(f, arg)
-                        if pair:
-                            wrapped.add(pair)
+                    classify(node.args[0])
                 elif (dotted is not None
                         and (dotted == "pallas_call"
                              or dotted.endswith(".pallas_call"))
@@ -310,4 +374,4 @@ class Project:
                     if pair:
                         kernels.add(pair)
         return {"wrapped": wrapped, "factories": factories,
-                "kernels": kernels}
+                "kernels": kernels, "methods": methods}

@@ -2,11 +2,14 @@
 rule with `repro.analysis.core.RULES` (that is its only job — see each
 module for the contract it enforces)."""
 from repro.analysis.rules import (  # noqa: F401
+    allocator_refcount,
+    donation,
     host_sync,
     mesh_discipline,
     protocol,
     registry_ns,
     retrace,
     rng_discipline,
+    shard_spec,
     wall_clock,
 )

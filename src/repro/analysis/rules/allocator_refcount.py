@@ -1,0 +1,207 @@
+"""allocator-refcount: every page handle minted by
+`PageAllocator.alloc` (and every refcount taken by `.share`) must be
+accounted for on ALL paths out of the function — freed, returned,
+stored into a field, or handed to a callee — including the paths an
+exception takes. A handle that can fall off the end of a function is a
+leaked physical page: `check_invariants` catches the imbalance at
+runtime only if the leaking path actually runs; this rule is its
+static twin over the CFG's exception edges too.
+
+Escape analysis over the shared forward solver: the abstract state is
+a set of (handle, carrier) pairs, where a handle is the (line, col) of
+the minting call and a carrier is a local name holding it. Sinks that
+discharge a handle (conservatively — this is a leak detector, not an
+ownership checker): passing a carrier to ANY call (`free(pages)`,
+`jnp.int32(slot)`, `list(spages)` — the callee may take ownership),
+returning it, raising with it, or storing it into an attribute or
+subscript. Rebinding a handle's last carrier marks the handle dead —
+it can no longer be freed, so it still reports at the exits. A minting
+call whose result is discarded outright (a bare expression statement)
+is flagged immediately.
+
+Allocator receivers are recognized syntactically: a dotted chain
+ending in `.allocator` (`self.cache.allocator.alloc(...)`), or a local
+alias bound from one (`alloc = self.cache.allocator`) or from a
+`PageAllocator(...)` construction. Nested minting calls consumed by an
+enclosing expression (`pages.extend(a.alloc(1, rid))`) are treated as
+immediately sunk by the consumer.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.cfg import atom_bindings, build_cfg, shallow_walk
+from repro.analysis.core import Rule, in_serve, register
+from repro.analysis.dataflow import (ForwardAnalysis, atom_states,
+                                     call_graph, chain_str, flat_names,
+                                     solve)
+from repro.analysis.findings import Finding
+from repro.analysis.project import FileInfo, Project
+
+DEAD = "<dead>"   # the handle's last carrier was rebound: unfreeable
+
+
+def _allocator_aliases(fn_node: ast.AST) -> set[str]:
+    """Local names bound to an allocator anywhere in the function
+    (scope-insensitive pre-pass): `alloc = self.cache.allocator` or
+    `alloc = PageAllocator(...)`."""
+    from repro.analysis.dataflow import scope_walk
+    out: set[str] = set()
+    for n in scope_walk(fn_node.body):
+        if not isinstance(n, ast.Assign):
+            continue
+        src = n.value
+        chain = chain_str(src)
+        is_alloc = (chain is not None
+                    and (chain == "allocator"
+                         or chain.endswith(".allocator")))
+        if (isinstance(src, ast.Call)
+                and isinstance(src.func, ast.Name)
+                and src.func.id == "PageAllocator"):
+            is_alloc = True
+        if is_alloc:
+            for t in n.targets:
+                if isinstance(t, ast.Name):
+                    out.add(t.id)
+    return out
+
+
+def _minting_call(call: ast.Call, aliases: set[str]) -> str | None:
+    """"alloc" / "share" when the call mints a tracked handle."""
+    func = call.func
+    if not isinstance(func, ast.Attribute) or func.attr not in (
+            "alloc", "share"):
+        return None
+    recv = chain_str(func.value)
+    if recv is None:
+        return None
+    if (recv == "allocator" or recv.endswith(".allocator")
+            or recv in aliases):
+        return func.attr
+    return None
+
+
+def _loaded_names(e: ast.AST) -> set[str]:
+    return {n.id for n in shallow_walk(e)
+            if isinstance(n, ast.Name) and isinstance(n.ctx, ast.Load)}
+
+
+class _EscapeAnalysis(ForwardAnalysis):
+    def __init__(self, aliases: set[str]):
+        self.aliases = aliases
+
+    def transfer(self, state: frozenset, atom: ast.AST) -> frozenset:
+        bindings = atom_bindings(atom)
+
+        # 1. sinks: carriers read by a call argument, a return/raise,
+        #    or the value stored into an attribute/subscript discharge
+        #    their whole handle (aliases included)
+        sunk_names: set[str] = set()
+        for n in shallow_walk(atom):
+            if isinstance(n, ast.Call):
+                for arg in list(n.args) + [kw.value for kw in n.keywords]:
+                    sunk_names |= _loaded_names(arg)
+        if isinstance(atom, ast.Return) and atom.value is not None:
+            sunk_names |= _loaded_names(atom.value)
+        if isinstance(atom, ast.Raise):
+            sunk_names |= _loaded_names(atom)
+        for targets, value in bindings:
+            stored = any(
+                isinstance(sub, (ast.Attribute, ast.Subscript))
+                for t in targets for sub in ast.walk(t))
+            if stored and value is not None:
+                sunk_names |= _loaded_names(value)
+        sunk_handles = {h for (h, c) in state if c in sunk_names}
+        state = frozenset(p for p in state if p[0] not in sunk_handles)
+
+        # 2. aliasing: `b = a` keeps the handle reachable through b
+        for targets, value in bindings:
+            if (isinstance(value, ast.Name)
+                    and len(targets) == 1
+                    and isinstance(targets[0], ast.Name)):
+                extra = {(h, targets[0].id) for (h, c) in state
+                         if c == value.id}
+                state = state | extra
+
+        # 3. rebinds: a bound name stops carrying; a handle whose last
+        #    carrier is rebound becomes dead (still a leak at exit)
+        bound: set[str] = set()
+        for targets, _ in bindings:
+            for t in targets:
+                flat_names(t, bound)
+        if bound:
+            dropped = {(h, c) for (h, c) in state if c in bound}
+            if dropped:
+                kept = state - dropped
+                live = {h for (h, _) in kept}
+                dead = {(h, DEAD) for (h, _) in dropped
+                        if h not in live}
+                state = kept | dead
+
+        # 4. gen: direct minting assignments and bare `share(...)`
+        #    statements create (handle, carrier) pairs
+        for targets, value in bindings:
+            if not isinstance(value, ast.Call):
+                continue
+            kind = _minting_call(value, self.aliases)
+            if kind is None:
+                continue
+            handle = (value.lineno, value.col_offset)
+            names: set[str] = set()
+            for t in targets:
+                flat_names(t, names)
+            state = state | {(handle, c) for c in names}
+        if isinstance(atom, ast.Expr) and isinstance(atom.value, ast.Call):
+            call = atom.value
+            if (_minting_call(call, self.aliases) == "share"
+                    and call.args and isinstance(call.args[0], ast.Name)):
+                handle = (call.lineno, call.col_offset)
+                state = state | {(handle, call.args[0].id)}
+        return state
+
+
+@register
+class AllocatorRefcount(Rule):
+    id = "allocator-refcount"
+    description = ("every PageAllocator.alloc/.share handle must reach "
+                   "free, a return, or a stored field on all paths out "
+                   "of the function, exception edges included")
+
+    def applies(self, f: FileInfo) -> bool:
+        return in_serve(f.path)
+
+    def check(self, f: FileInfo, project: Project) -> list[Finding]:
+        out: list[Finding] = []
+        for (path, _), fn in call_graph(project).functions.items():
+            if path != f.path:
+                continue
+            aliases = _allocator_aliases(fn.node)
+            analysis = _EscapeAnalysis(aliases)
+            cfg = build_cfg(fn.node)
+            in_states = solve(cfg, analysis)
+            # discarded results: a bare `....alloc(...)` statement
+            for atom, _ in atom_states(cfg, analysis, in_states):
+                if (isinstance(atom, ast.Expr)
+                        and isinstance(atom.value, ast.Call)
+                        and _minting_call(atom.value, aliases)
+                        == "alloc"):
+                    out.append(self.finding(
+                        f, atom.value,
+                        f"`alloc(...)` result discarded in "
+                        f"`{fn.qual}` — the pages can never be freed; "
+                        f"bind the handle and free or store it"))
+            # leaks: handles still live when some path leaves the
+            # function (normal exit or uncaught exception)
+            leaked: dict[tuple[int, int], str] = {}
+            for exit_bid, how in ((cfg.exit, "a normal exit"),
+                                  (cfg.raise_exit, "an exception edge")):
+                for (h, _c) in sorted(in_states[exit_bid]):
+                    leaked.setdefault(h, how)
+            for (line, col), how in sorted(leaked.items()):
+                node = ast.Expr(lineno=line, col_offset=col)
+                out.append(self.finding(
+                    f, node,
+                    f"allocator handle minted here may leak in "
+                    f"`{fn.qual}`: on {how} it reaches neither "
+                    f"`free(...)`, a return, nor a stored field"))
+        return out

@@ -1,0 +1,138 @@
+"""donation-discipline: a buffer passed at a `donate_argnums` position
+of a jitted step is INVALID after the call — jax may have aliased its
+memory into the result. The serve stack leans on donation for every
+hot buffer (the paged KV pool, the recurrent state-slot pool, COW page
+copies), so a read of a donated buffer on any path after the donating
+call is a use-after-free that only reproduces on backends that honor
+donation — exactly what CPU-only tier-1 runs miss.
+
+The rule runs the shared forward solver per function: the abstract
+state is the set of dotted value-chains (`self.cache.kv`, `pool`) that
+have been donated and not yet rebound. A donating call (resolved
+through the project-wide donation index: decorated steps, local
+`jax.jit(...)` bindings, donating factories, and instance attributes
+bound from factory results) GENS the chains it donates; any assignment
+to a chain (or to a prefix of it — rebinding `self.cache` refreshes
+`self.cache.kv` too) KILLS it; a read of a live donated chain on any
+path is the finding. The idiomatic
+`self.cache.kv = step(..., self.cache.kv, ...)` is clean: the read
+happens before the donation gen, and the rebind kills it in the same
+atom.
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.cfg import atom_bindings, build_cfg, shallow_walk
+from repro.analysis.core import Rule, register
+from repro.analysis.dataflow import (ForwardAnalysis, atom_states,
+                                     call_graph, chain_str,
+                                     donated_positions, donation_index,
+                                     solve)
+from repro.analysis.findings import Finding
+from repro.analysis.project import FileInfo, Project
+
+
+def _donated_chains(f: FileInfo, atom: ast.AST, idx) -> set[str]:
+    """Value chains donated by calls inside this atom."""
+    out: set[str] = set()
+    for n in shallow_walk(atom):
+        if not isinstance(n, ast.Call):
+            continue
+        positions = donated_positions(f, n, idx)
+        if not positions:
+            continue
+        for pos in positions:
+            if pos < len(n.args):
+                chain = chain_str(n.args[pos])
+                if chain is not None:
+                    out.add(chain)
+    return out
+
+
+def _killed(state: frozenset, target: ast.AST) -> frozenset:
+    """Remove chains rebound by an assignment target: the exact chain
+    and everything reached through it (`self.cache = ...` refreshes
+    `self.cache.kv`)."""
+    chain = chain_str(target)
+    if isinstance(target, (ast.Tuple, ast.List)):
+        for e in target.elts:
+            state = _killed(state, e)
+        return state
+    if isinstance(target, ast.Starred):
+        return _killed(state, target.value)
+    if isinstance(target, ast.Subscript):
+        # storing INTO the buffer does not revalidate it; but jax
+        # arrays are immutable, so this does not occur on real buffers
+        return state
+    if chain is None:
+        return state
+    return frozenset(k for k in state
+                     if k != chain and not k.startswith(chain + "."))
+
+
+class _DonationAnalysis(ForwardAnalysis):
+    def __init__(self, f: FileInfo, idx):
+        self.f = f
+        self.idx = idx
+
+    def transfer(self, state: frozenset, atom: ast.AST) -> frozenset:
+        state = state | _donated_chains(self.f, atom, self.idx)
+        for targets, _ in atom_bindings(atom):
+            for t in targets:
+                state = _killed(state, t)
+        return state
+
+
+def _reads_of(atom: ast.AST, state: frozenset) -> list[tuple[str, ast.AST]]:
+    """(chain, node) for every Load of a live donated chain in the
+    atom. Matching every sub-node means `self.cache.kv.shape` trips on
+    its inner `self.cache.kv` chain too."""
+    hits: list[tuple[str, ast.AST]] = []
+    for n in shallow_walk(atom):
+        if not isinstance(n, (ast.Name, ast.Attribute)):
+            continue
+        if not isinstance(getattr(n, "ctx", None), ast.Load):
+            continue
+        chain = chain_str(n)
+        if chain in state:
+            hits.append((chain, n))
+    return hits
+
+
+@register
+class DonationDiscipline(Rule):
+    id = "donation-discipline"
+    description = ("a buffer passed at a donate_argnums position of a "
+                   "jitted step must not be read again until rebound "
+                   "from the call's result")
+
+    def check(self, f: FileInfo, project: Project) -> list[Finding]:
+        out: list[Finding] = []
+        idx = donation_index(project)
+        if not (idx.functions or idx.attrs or idx.locals):
+            return out
+        analysis = _DonationAnalysis(f, idx)
+        for (path, _), fn in call_graph(project).functions.items():
+            if path != f.path:
+                continue
+            cfg = build_cfg(fn.node)
+            in_states = solve(cfg, analysis)
+            seen: set[tuple[str, int]] = set()
+            for atom, state in atom_states(cfg, analysis, in_states):
+                if not state:
+                    continue
+                for chain, node in _reads_of(atom, state):
+                    key = (chain, node.lineno)
+                    if key in seen:
+                        continue
+                    seen.add(key)
+                    out.append(self.finding(
+                        f, node,
+                        f"`{chain}` is read in `{fn.qual}` after being "
+                        f"passed at a donated position "
+                        f"(donate_argnums) of a jitted step — the "
+                        f"buffer may be aliased into the result; "
+                        f"rebind it from the call's return value "
+                        f"before reuse"))
+        return out

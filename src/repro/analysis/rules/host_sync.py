@@ -2,312 +2,32 @@
 boundary runs on TRACED values — `.item()`, `float()/int()/bool()` on
 a traced array, or `np.asarray` force a host sync (or a trace-time
 error on the first UNEXERCISED path to hit them, which is exactly what
-a runtime suite misses). The rule grows a lightweight intra-package
-call graph from every jit root and flags host-sync constructs applied
-to parameter-derived (i.e. traced) values inside reachable functions.
+a runtime suite misses).
 
-Jit roots, resolved project-wide (see `Project.jit_surface`):
-
-  * functions decorated `@jax.jit` / `@functools.partial(jax.jit, ...)`
-  * functions passed by name to `jax.jit(f)` or `pallas_call(f, ...)`
-  * inner functions RETURNED by a factory whose call is jitted
-    (`jax.jit(make_paged_decode(cfg, policy))` — the serve idiom)
-
-Reachability follows plain-name calls: locals/nested functions,
-same-file module functions, `self.method` within a class, and imported
-names that resolve to an analyzed module. Taint is the function's own
-parameters propagated through simple assignments; access to static
-metadata (`.shape`, `.ndim`, `.dtype`, `len()`) launders it, since
-those are Python values at trace time.
+The rule is a thin client of the shared dataflow layer
+(`analysis/dataflow.py`): the interprocedural call graph grown from
+`Project.jit_surface` decides which functions run under a trace, and
+the flow-sensitive `TaintAnalysis` over each function's CFG decides
+which names may hold traced values at each call site. Flow sensitivity
+means a rebind from static metadata (`n = x.shape[0]`) launders the
+name from that point on, and code on paths never reached from the
+function entry cannot flag — both strictly tighter than the old
+flow-insensitive fixpoint this rule carried privately.
 """
 from __future__ import annotations
 
 import ast
-import dataclasses
 
+from repro.analysis.cfg import build_cfg, shallow_walk
 from repro.analysis.core import Rule, register
+from repro.analysis.dataflow import (TaintAnalysis, atom_states,
+                                     call_graph, expr_is_static,
+                                     expr_tainted, solve)
 from repro.analysis.findings import Finding
 from repro.analysis.project import FileInfo, Project
 
-_FN = (ast.FunctionDef, ast.AsyncFunctionDef)
-_SCOPE_BOUNDARY = _FN + (ast.Lambda, ast.ClassDef)
-
-# attribute/call accesses that yield static Python values at trace time
-STATIC_ATTRS = {"shape", "ndim", "dtype", "size", "weak_type"}
 NUMPY_PULLS = {"numpy.asarray", "numpy.array", "numpy.copy"}
 CONVERSIONS = {"float", "int", "bool", "complex"}
-
-
-def _stmt_walk(stmts):
-    """Walk statements descending into compound statements but never
-    across a function/class/lambda boundary."""
-    stack = list(stmts)
-    while stack:
-        n = stack.pop()
-        yield n
-        if isinstance(n, _SCOPE_BOUNDARY):
-            continue
-        stack.extend(ast.iter_child_nodes(n))
-
-
-@dataclasses.dataclass
-class _Func:
-    path: str
-    qual: str                      # e.g. "Class.method" / "factory.step"
-    name: str
-    node: ast.AST
-    cls: str | None                # enclosing class name, if a method
-    params: set[str]
-    jit_decorated: bool = False
-    returned_inner: set[str] = dataclasses.field(default_factory=set)
-    reachable_via: str | None = None   # root qual once BFS marks it
-
-
-# parameter annotations that mean "static python value at trace time":
-# scalar builtins, and the repo's config/policy carrier types
-_STATIC_SCALAR_TYPES = {"int", "float", "bool", "str", "bytes", "None"}
-
-
-def _annotation_is_static(ann: ast.AST | None) -> bool:
-    if ann is None:
-        return False
-    if isinstance(ann, ast.Constant):
-        # string annotations and bare None
-        if isinstance(ann.value, str):
-            return (ann.value in _STATIC_SCALAR_TYPES
-                    or ann.value.endswith(("Config", "Policy")))
-        return ann.value is None
-    if isinstance(ann, (ast.Name, ast.Attribute)):
-        name = ann.attr if isinstance(ann, ast.Attribute) else ann.id
-        return (name in _STATIC_SCALAR_TYPES
-                or name.endswith(("Config", "Policy")))
-    if isinstance(ann, ast.BinOp) and isinstance(ann.op, ast.BitOr):
-        return (_annotation_is_static(ann.left)
-                and _annotation_is_static(ann.right))
-    if isinstance(ann, ast.Subscript):
-        base = ann.value
-        name = (base.attr if isinstance(base, ast.Attribute)
-                else base.id if isinstance(base, ast.Name) else "")
-        if name in ("Optional", "Union"):
-            return _annotation_is_static(ann.slice)
-    if isinstance(ann, ast.Tuple):
-        return all(_annotation_is_static(e) for e in ann.elts)
-    return False
-
-
-def _params_of(node) -> set[str]:
-    """Parameter names that may carry TRACED values — parameters whose
-    annotation pins them to a static python scalar or a config/policy
-    object are excluded from taint."""
-    a = node.args
-    params = [p for p in a.posonlyargs + a.args + a.kwonlyargs]
-    names = [p.arg for p in params
-             if not _annotation_is_static(p.annotation)]
-    if a.vararg:
-        names.append(a.vararg.arg)
-    if a.kwarg:
-        names.append(a.kwarg.arg)
-    return set(names)
-
-
-def _is_jit_decorator(f: FileInfo, dec: ast.AST) -> bool:
-    if f.dotted(dec) == "jax.jit":
-        return True
-    if isinstance(dec, ast.Call):
-        d = f.dotted(dec.func)
-        if d == "jax.jit":
-            return True
-        if d == "functools.partial" and dec.args:
-            return f.dotted(dec.args[0]) == "jax.jit"
-    return False
-
-
-def _collect_file(f: FileInfo) -> dict[str, _Func]:
-    funcs: dict[str, _Func] = {}
-
-    def scope(stmts, prefix: str, cls: str | None):
-        for n in _stmt_walk(stmts):
-            if isinstance(n, _FN):
-                qual = prefix + n.name
-                fn = _Func(path=f.path, qual=qual, name=n.name, node=n,
-                           cls=cls, params=_params_of(n))
-                fn.jit_decorated = any(_is_jit_decorator(f, d)
-                                       for d in n.decorator_list)
-                # inner defs this function returns (factory pattern)
-                inner = {c.name for c in _stmt_walk(n.body)
-                         if isinstance(c, _FN)}
-                for r in _stmt_walk(n.body):
-                    if (isinstance(r, ast.Return)
-                            and isinstance(r.value, ast.Name)
-                            and r.value.id in inner):
-                        fn.returned_inner.add(f"{qual}.{r.value.id}")
-                funcs[qual] = fn
-                scope(n.body, qual + ".", None)
-            elif isinstance(n, ast.ClassDef):
-                scope(n.body, prefix + n.name + ".", n.name)
-
-    scope(f.tree.body, "", None)
-    return funcs
-
-
-# jax transforms whose function-valued arguments are traced as part of
-# the caller: an edge to those functions keeps scan/vmap bodies inside
-# the reachable set
-TRANSFORMS = {
-    "jax.vmap", "jax.pmap", "jax.checkpoint", "jax.remat", "jax.grad",
-    "jax.value_and_grad", "functools.partial",
-    "jax.lax.scan", "jax.lax.map", "jax.lax.cond", "jax.lax.switch",
-    "jax.lax.while_loop", "jax.lax.fori_loop",
-    "jax.lax.associative_scan",
-}
-
-
-def _call_edges(f: FileInfo, fn: _Func, project: Project,
-                index: dict[tuple[str, str], _Func]
-                ) -> list[tuple[str, str]]:
-    """Resolved (path, qual) targets of plain-name calls in fn's own
-    body (nested defs excluded — they are graph nodes of their own),
-    plus function-valued arguments handed to jax transforms."""
-    out: list[tuple[str, str]] = []
-
-    def resolve(t: ast.AST):
-        if isinstance(t, ast.Name):
-            # nested function of an enclosing scope, innermost first
-            parts = fn.qual.split(".")
-            for i in range(len(parts), 0, -1):
-                cand = ".".join(parts[:i]) + "." + t.id
-                if (f.path, cand) in index:
-                    return (f.path, cand)
-            if (f.path, t.id) in index:
-                return (f.path, t.id)
-            dotted = f.aliases.get(t.id)
-            if dotted and "." in dotted:
-                mod, name = dotted.rsplit(".", 1)
-                for path2, fi in project.files.items():
-                    if fi.module == mod and (path2, name) in index:
-                        return (path2, name)
-        elif isinstance(t, ast.Attribute):
-            if (isinstance(t.value, ast.Name) and t.value.id == "self"
-                    and fn.cls is not None):
-                cand = f"{fn.cls}.{t.attr}"
-                if (f.path, cand) in index:
-                    return (f.path, cand)
-            dotted = f.dotted(t)
-            if dotted and "." in dotted:
-                mod, name = dotted.rsplit(".", 1)
-                for path2, fi in project.files.items():
-                    if fi.module == mod and (path2, name) in index:
-                        return (path2, name)
-        return None
-
-    for n in _stmt_walk(fn.node.body):
-        if not isinstance(n, ast.Call):
-            continue
-        tgt = resolve(n.func)
-        if tgt is not None:
-            out.append(tgt)
-        if f.dotted(n.func) in TRANSFORMS:
-            for arg in list(n.args) + [kw.value for kw in n.keywords]:
-                if isinstance(arg, (ast.Name, ast.Attribute)):
-                    tgt = resolve(arg)
-                    if tgt is not None:
-                        out.append(tgt)
-    return out
-
-
-def _build_graph(project: Project) -> dict[tuple[str, str], _Func]:
-    index: dict[tuple[str, str], _Func] = {}
-    for f in project.files.values():
-        if f.tree is None:
-            continue
-        for qual, fn in _collect_file(f).items():
-            index[(f.path, qual)] = fn
-
-    surface = project.jit_surface
-    boundary = surface["wrapped"] | surface["kernels"]
-    roots: list[tuple[str, str]] = []
-    for key, fn in index.items():
-        module = project.files[fn.path].module
-        # wrapped/kernel matches are module-exact and module-level only
-        if fn.jit_decorated or ("." not in fn.qual
-                                and (module, fn.name) in boundary):
-            roots.append(key)
-        elif fn.name in surface["factories"]:
-            for inner in fn.returned_inner:
-                if (fn.path, inner) in index:
-                    roots.append((fn.path, inner))
-
-    edges = {key: _call_edges(project.files[key[0]], fn, project, index)
-             for key, fn in index.items()}
-    todo = []
-    for key in roots:
-        if index[key].reachable_via is None:
-            index[key].reachable_via = index[key].qual
-            todo.append(key)
-    while todo:
-        key = todo.pop()
-        via = index[key].reachable_via
-        for tgt in edges[key]:
-            if index[tgt].reachable_via is None:
-                index[tgt].reachable_via = via
-                todo.append(tgt)
-    return index
-
-
-def _graph(project: Project) -> dict[tuple[str, str], _Func]:
-    cached = getattr(project, "_host_sync_graph", None)
-    if cached is None:
-        cached = _build_graph(project)
-        project._host_sync_graph = cached
-    return cached
-
-
-def _taint(fn: _Func) -> set[str]:
-    """Parameter names plus names assigned from tainted expressions
-    (small fixpoint — traced values flow through simple locals).
-    Assignments from static expressions (`tg = x.shape[1]`) launder:
-    the bound name is a Python value at trace time."""
-    tainted = set(fn.params)
-
-    def expr_tainted(e) -> bool:
-        return (not _is_static(e)
-                and any(isinstance(n, ast.Name) and n.id in tainted
-                        for n in ast.walk(e)))
-
-    def targets(t, acc):
-        if isinstance(t, ast.Name):
-            acc.add(t.id)
-        elif isinstance(t, (ast.Tuple, ast.List)):
-            for e in t.elts:
-                targets(e, acc)
-
-    for _ in range(8):
-        before = len(tainted)
-        for n in _stmt_walk(fn.node.body):
-            if isinstance(n, ast.Assign) and expr_tainted(n.value):
-                for t in n.targets:
-                    targets(t, tainted)
-            elif (isinstance(n, (ast.AugAssign, ast.AnnAssign))
-                    and n.value is not None and expr_tainted(n.value)):
-                targets(n.target, tainted)
-            elif isinstance(n, (ast.For, ast.AsyncFor)) \
-                    and expr_tainted(n.iter):
-                targets(n.target, tainted)
-        if len(tainted) == before:
-            break
-    return tainted
-
-
-def _is_static(e: ast.AST) -> bool:
-    """Expression is static at trace time despite touching traced
-    names: `.shape[0]`, `len(x)`, `x.ndim`, ..."""
-    for n in ast.walk(e):
-        if isinstance(n, ast.Attribute) and n.attr in STATIC_ATTRS:
-            return True
-        if (isinstance(n, ast.Call) and isinstance(n.func, ast.Name)
-                and n.func.id == "len"):
-            return True
-    return False
 
 
 @register
@@ -319,44 +39,47 @@ class HostSyncInJit(Rule):
 
     def check(self, f: FileInfo, project: Project) -> list[Finding]:
         out: list[Finding] = []
-        graph = _graph(project)
-        for (path, _), fn in graph.items():
+        graph = call_graph(project)
+        for (path, _), fn in graph.functions.items():
             if path != f.path or fn.reachable_via is None:
                 continue
-            tainted = _taint(fn)
-
-            def hit(e) -> bool:
-                return (any(isinstance(n, ast.Name) and n.id in tainted
-                            for n in ast.walk(e))
-                        and not _is_static(e))
-
+            analysis = TaintAnalysis(fn.params)
+            cfg = build_cfg(fn.node)
+            in_states = solve(cfg, analysis)
             where = (f"in `{fn.qual}` (jit-reachable via "
                      f"`{fn.reachable_via}`)")
-            for n in _stmt_walk(fn.node.body):
-                if not isinstance(n, ast.Call):
-                    continue
-                if (isinstance(n.func, ast.Attribute)
-                        and n.func.attr in ("item", "tolist")
-                        and not n.args and hit(n.func.value)):
-                    out.append(self.finding(
-                        f, n,
-                        f"`.{n.func.attr}()` on a traced value {where} "
-                        f"— forces a host sync / trace error"))
-                    continue
-                dotted = f.dotted(n.func)
-                if (isinstance(n.func, ast.Name)
-                        and n.func.id in CONVERSIONS
-                        and len(n.args) == 1 and hit(n.args[0])):
-                    out.append(self.finding(
-                        f, n,
-                        f"`{n.func.id}()` on a traced value {where} — "
-                        f"host conversion inside jit; use jnp casts or "
-                        f"keep it in the array program"))
-                elif (dotted in NUMPY_PULLS
-                        and n.args and hit(n.args[0])):
-                    out.append(self.finding(
-                        f, n,
-                        f"`{dotted.replace('numpy', 'np')}` on a traced "
-                        f"value {where} — device->host pull inside jit; "
-                        f"use jnp.asarray"))
+            for atom, state in atom_states(cfg, analysis, in_states):
+
+                def hit(e: ast.AST) -> bool:
+                    return (expr_tainted(e, state)
+                            and not expr_is_static(e))
+
+                for n in shallow_walk(atom):
+                    if not isinstance(n, ast.Call):
+                        continue
+                    if (isinstance(n.func, ast.Attribute)
+                            and n.func.attr in ("item", "tolist")
+                            and not n.args and hit(n.func.value)):
+                        out.append(self.finding(
+                            f, n,
+                            f"`.{n.func.attr}()` on a traced value "
+                            f"{where} — forces a host sync / trace "
+                            f"error"))
+                        continue
+                    dotted = f.dotted(n.func)
+                    if (isinstance(n.func, ast.Name)
+                            and n.func.id in CONVERSIONS
+                            and len(n.args) == 1 and hit(n.args[0])):
+                        out.append(self.finding(
+                            f, n,
+                            f"`{n.func.id}()` on a traced value {where} "
+                            f"— host conversion inside jit; use jnp "
+                            f"casts or keep it in the array program"))
+                    elif (dotted in NUMPY_PULLS
+                            and n.args and hit(n.args[0])):
+                        out.append(self.finding(
+                            f, n,
+                            f"`{dotted.replace('numpy', 'np')}` on a "
+                            f"traced value {where} — device->host pull "
+                            f"inside jit; use jnp.asarray"))
         return out

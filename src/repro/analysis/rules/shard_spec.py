@@ -1,0 +1,102 @@
+"""shard-spec-discipline: sharding LAYOUT is seam-owned. PR 8's mesh
+seam made topology flow as a `ServeMesh` value (`mesh-discipline`
+pins that); this rule hardens the other half — the placement
+vocabulary. `PartitionSpec` / `NamedSharding` constructions and
+string axis-name literals scattered through consumer modules are
+layout decisions the seam can no longer see or change: a renamed mesh
+axis or a new sharding strategy then means hunting call sites instead
+of editing `parallel/sharding.py` + `serve/mesh.py`, the two modules
+that own spec construction (and are exempt here, mirroring
+mesh-discipline's scoping).
+
+Flagged in governed `repro/` modules:
+
+  * any call resolving to `jax.sharding.PartitionSpec` or
+    `jax.sharding.NamedSharding` (import aliases followed — `P(...)`
+    counts);
+  * a string-literal `axis_name=` keyword in any call;
+  * a string-literal positional axis handed to the named `jax.lax`
+    collectives (`psum(x, "model")`, ...).
+"""
+from __future__ import annotations
+
+import ast
+
+from repro.analysis.core import Rule, register
+from repro.analysis.findings import Finding
+from repro.analysis.project import FileInfo, Project
+
+SPEC_TYPES = {
+    "jax.sharding.PartitionSpec",
+    "jax.sharding.NamedSharding",
+}
+
+# collectives whose second positional argument is the axis name
+COLLECTIVES = {
+    "jax.lax.psum", "jax.lax.pmax", "jax.lax.pmin", "jax.lax.pmean",
+    "jax.lax.all_gather", "jax.lax.ppermute", "jax.lax.axis_index",
+}
+
+# The two modules that own placement: the parallel collectives layer
+# and the serve mesh seam (same exemptions as mesh-discipline).
+EXEMPT_SUFFIX = ("repro/serve/mesh.py",)
+EXEMPT_DIR = "repro/parallel/"
+
+
+def _governed(path: str) -> bool:
+    if "repro/" not in path:
+        return False
+    sub = path.split("repro/", 1)[1]
+    return not (("repro/" + sub).startswith(EXEMPT_DIR)
+                or any(path.endswith(s) for s in EXEMPT_SUFFIX))
+
+
+def _is_axis_literal(node: ast.AST) -> bool:
+    if isinstance(node, ast.Constant) and isinstance(node.value, str):
+        return True
+    if isinstance(node, (ast.Tuple, ast.List)):
+        return any(_is_axis_literal(e) for e in node.elts)
+    return False
+
+
+@register
+class ShardSpecDiscipline(Rule):
+    id = "shard-spec-discipline"
+    description = ("no PartitionSpec/NamedSharding construction or "
+                   "axis-name string literals outside "
+                   "repro/parallel/ and repro/serve/mesh.py — specs "
+                   "come from the seam helpers")
+
+    def applies(self, f: FileInfo) -> bool:
+        return _governed(f.path)
+
+    def check(self, f: FileInfo, project: Project) -> list[Finding]:
+        out: list[Finding] = []
+        for node in ast.walk(f.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            dotted = f.dotted(node.func)
+            if dotted in SPEC_TYPES:
+                short = dotted.rsplit(".", 1)[-1]
+                out.append(self.finding(
+                    f, node,
+                    f"`{short}(...)` constructed outside the sharding "
+                    f"seam — obtain specs from repro/parallel/sharding "
+                    f"or repro/serve/mesh helpers so layout stays "
+                    f"seam-owned"))
+                continue
+            for kw in node.keywords:
+                if kw.arg == "axis_name" and _is_axis_literal(kw.value):
+                    out.append(self.finding(
+                        f, kw.value,
+                        f"string-literal `axis_name=` outside the "
+                        f"sharding seam — axis names are seam-owned; "
+                        f"take them from the mesh value"))
+            if (dotted in COLLECTIVES and len(node.args) >= 2
+                    and _is_axis_literal(node.args[1])):
+                out.append(self.finding(
+                    f, node.args[1],
+                    f"string-literal axis name passed to "
+                    f"`{dotted}` outside the sharding seam — take the "
+                    f"axis from the mesh value"))
+        return out

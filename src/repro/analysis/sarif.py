@@ -1,0 +1,61 @@
+"""SARIF 2.1.0 rendering — the interchange format GitHub code
+scanning ingests, so analyzer findings annotate PR diffs instead of
+living in a CI log. New findings are `error` (they fail the gate);
+baselined ones are `note` (grandfathered, visible but not failing).
+Stdlib-only like the rest of the package.
+"""
+from __future__ import annotations
+
+import json
+
+SARIF_SCHEMA = ("https://raw.githubusercontent.com/oasis-tcs/"
+                "sarif-spec/master/Schemata/sarif-schema-2.1.0.json")
+SARIF_VERSION = "2.1.0"
+TOOL_NAME = "repro.analysis"
+
+
+def _result(finding, rule_index: dict[str, int], level: str) -> dict:
+    return {
+        "ruleId": finding.rule,
+        "ruleIndex": rule_index[finding.rule],
+        "level": level,
+        "message": {"text": finding.message},
+        "locations": [{
+            "physicalLocation": {
+                "artifactLocation": {
+                    "uri": finding.path,
+                    "uriBaseId": "%SRCROOT%",
+                },
+                "region": {
+                    "startLine": finding.line,
+                    "startColumn": finding.col + 1,
+                },
+            },
+        }],
+    }
+
+
+def render_sarif(new, baselined, rules) -> str:
+    """One SARIF run over the analyzed tree. `rules` drives the
+    driver's rule table; results reference it by index."""
+    rule_index = {r.id: i for i, r in enumerate(rules)}
+    results = ([_result(f, rule_index, "error") for f in new]
+               + [_result(f, rule_index, "note") for f in baselined])
+    return json.dumps({
+        "$schema": SARIF_SCHEMA,
+        "version": SARIF_VERSION,
+        "runs": [{
+            "tool": {
+                "driver": {
+                    "name": TOOL_NAME,
+                    "rules": [{
+                        "id": r.id,
+                        "shortDescription": {"text": r.description},
+                        "defaultConfiguration": {"level": "error"},
+                    } for r in rules],
+                },
+            },
+            "columnKind": "utf16CodeUnits",
+            "results": results,
+        }],
+    }, indent=2)

@@ -69,12 +69,6 @@ def cost_analysis_dict(compiled) -> dict:
     return dict(ca)
 
 
-def _named(mesh, spec_tree):
-    return jax.tree.map(
-        lambda s: jax.sharding.NamedSharding(mesh, s), spec_tree,
-        is_leaf=lambda x: isinstance(x, jax.sharding.PartitionSpec))
-
-
 def lower_cell(cfg: ModelConfig, cell: configs.ShapeCell, mesh,
                rules: sh.ShardingRules = sh.ShardingRules(),
                policy: ArithmeticPolicy = ArithmeticPolicy(),
@@ -97,15 +91,14 @@ def lower_cell(cfg: ModelConfig, cell: configs.ShapeCell, mesh,
             rules = dataclasses.replace(rules, fsdp=False)
     ins = specslib.input_specs(cfg, cell)
     pspecs = sh.param_specs(cfg, ins["params"], mesh, rules)
-    psh = _named(mesh, pspecs)
+    psh = sh.named(mesh, pspecs)
 
     if cell.kind == "train":
         opt_specs = {"m": pspecs, "v": pspecs,
-                     "step": jax.sharding.PartitionSpec()}
-        osh = _named(mesh, opt_specs)
-        bsh = _named(mesh, sh.batch_specs(cfg, mesh, cell.global_batch))
-        metrics_sh = jax.sharding.NamedSharding(
-            mesh, jax.sharding.PartitionSpec())
+                     "step": sh.replicated_spec()}
+        osh = sh.named(mesh, opt_specs)
+        bsh = sh.named(mesh, sh.batch_specs(cfg, mesh, cell.global_batch))
+        metrics_sh = sh.named(mesh, sh.replicated_spec())
         step = stepslib.make_train_step(
             cfg, OptimizerConfig(), policy, mesh=mesh, rules=rules,
             unroll=unroll)
@@ -117,18 +110,17 @@ def lower_cell(cfg: ModelConfig, cell: configs.ShapeCell, mesh,
         lowered = jitted.lower(ins["params"], ins["opt_state"], ins["batch"])
 
     elif cell.kind == "prefill":
-        csh = _named(mesh, sh.cache_specs(cfg, mesh, cell.global_batch,
-                                          rules))
+        csh = sh.named(mesh, sh.cache_specs(cfg, mesh, cell.global_batch,
+                                            rules))
         bspecs = sh.batch_specs(cfg, mesh, cell.global_batch)
         bspecs.pop("labels", None)
-        bsh = _named(mesh, bspecs)
+        bsh = sh.named(mesh, bspecs)
         bax = sh.batch_axes(mesh)
         lead = (bax if cell.global_batch >= meshlib.mesh_chips(mesh) //
                 mesh.shape["model"] else None,)
         if cfg.modality == "audio":   # last-token logits: (B, C, V)
             lead = lead + (None,)
-        logits_sh = jax.sharding.NamedSharding(
-            mesh, jax.sharding.PartitionSpec(*lead, "model"))
+        logits_sh = sh.named(mesh, sh.logits_spec(lead))
         step = stepslib.make_prefill_step(cfg, policy, mesh=mesh,
                                           rules=rules, unroll=unroll)
         jitted = jax.jit(
@@ -139,16 +131,15 @@ def lower_cell(cfg: ModelConfig, cell: configs.ShapeCell, mesh,
         lowered = jitted.lower(ins["params"], ins["batch"], ins["cache"])
 
     else:  # decode
-        csh = _named(mesh, sh.cache_specs(cfg, mesh, cell.global_batch,
-                                          rules))
+        csh = sh.named(mesh, sh.cache_specs(cfg, mesh, cell.global_batch,
+                                            rules))
         bspecs = sh.batch_specs(cfg, mesh, cell.global_batch)
-        tok_sh = _named(mesh, bspecs["tokens"])
+        tok_sh = sh.named(mesh, bspecs["tokens"])
         bax = sh.batch_axes(mesh)
         lead = (bax if cell.global_batch > 1 else None,)
         if cfg.modality == "audio":   # last-token logits: (B, C, V)
             lead = lead + (None,)
-        logits_sh = jax.sharding.NamedSharding(
-            mesh, jax.sharding.PartitionSpec(*lead, "model"))
+        logits_sh = sh.named(mesh, sh.logits_spec(lead))
         step = stepslib.make_decode_step(cfg, policy, mesh=mesh,
                                          rules=rules, unroll=unroll)
         jitted = jax.jit(

@@ -21,6 +21,8 @@ def make_production_mesh(*, multi_pod: bool = False):
 
 def make_smoke_mesh(data: int = 2, model: int = 2):
     """Tiny mesh for CPU integration tests (requires forced host devices)."""
+    # why: test-only mesh factory, same ownership story as the
+    # production factory above
     # repro: allow[mesh-discipline]
     return jax.make_mesh((data, model), ("data", "model"))
 

@@ -71,14 +71,14 @@ def serve(arch: str = "qwen3_8b", smoke: bool = True,
         bt["prefix_embeds"] = frontend.synth_prefix_embeds(
             jax.random.PRNGKey(seed + 2), cfg, batch)
 
-    t0 = time.time()  # repro: allow[wall-clock-in-serve]
+    t0 = time.time()  # repro: allow[wall-clock-in-serve] -- real demo wall time, printed for the operator
     logits, cache = prefill(params, bt, cache)
     logits.block_until_ready()
-    t_prefill = time.time() - t0  # repro: allow[wall-clock-in-serve]
+    t_prefill = time.time() - t0  # repro: allow[wall-clock-in-serve] -- real demo wall time, printed for the operator
 
     out_tokens = []
     nxt = stepslib.greedy_sample(logits)
-    t0 = time.time()  # repro: allow[wall-clock-in-serve]
+    t0 = time.time()  # repro: allow[wall-clock-in-serve] -- real demo wall time, printed for the operator
     for _ in range(gen_len):
         # (B,) -> (B, 1); audio's (B, C) broadcasts to (B, 1, C) the
         # same way, so one expression covers both modalities
@@ -87,7 +87,7 @@ def serve(arch: str = "qwen3_8b", smoke: bool = True,
         nxt = stepslib.greedy_sample(logits)
         out_tokens.append(nxt)
     jax.block_until_ready(out_tokens[-1])
-    t_decode = time.time() - t0  # repro: allow[wall-clock-in-serve]
+    t_decode = time.time() - t0  # repro: allow[wall-clock-in-serve] -- real demo wall time, printed for the operator
 
     gen = jnp.stack(out_tokens, axis=1)
     return {
@@ -148,9 +148,9 @@ def serve_engine(arch: str = "qwen3_8b", smoke: bool = True,
         sampled_fraction=sampled_fraction, temperature=temperature,
         top_k=top_k, top_p=top_p, sample_seed=sample_seed))
     eng.submit_trace(trace)
-    t0 = time.time()  # repro: allow[wall-clock-in-serve]
+    t0 = time.time()  # repro: allow[wall-clock-in-serve] -- real demo wall time, printed for the operator
     eng.drain()
-    wall = time.time() - t0  # repro: allow[wall-clock-in-serve]
+    wall = time.time() - t0  # repro: allow[wall-clock-in-serve] -- real demo wall time, printed for the operator
     m = eng.metrics()
     m["wall_s"] = wall
     m["wall_tok_per_s"] = m["n_generated_tokens"] / max(wall, 1e-9)

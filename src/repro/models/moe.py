@@ -30,13 +30,12 @@ from __future__ import annotations
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.policy import ArithmeticPolicy
 from repro.models import layers as L
 from repro.models.config import ModelConfig
 from repro.parallel.context import sharding_ctx
-from repro.parallel.sharding import batch_axes
+from repro.parallel.sharding import batch_axes, moe_dispatch_specs, named
 
 
 def moe_init(key, cfg: ModelConfig, dtype=jnp.float32):
@@ -81,7 +80,7 @@ def _mesh_groups():
 def _constrain(x, mesh, spec):
     if mesh is None:
         return x
-    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+    return jax.lax.with_sharding_constraint(x, named(mesh, spec))
 
 
 def moe_ffn(p, x, cfg: ModelConfig, policy=ArithmeticPolicy()):
@@ -95,9 +94,10 @@ def moe_ffn(p, x, cfg: ModelConfig, policy=ArithmeticPolicy()):
     tg = t // g
     dp_spec = dp_axes if (dp_axes and len(dp_axes) > 1) else (
         dp_axes[0] if dp_axes else None)
+    specs = moe_dispatch_specs(dp_spec, ep_axis)
 
     xt = x.reshape(g, tg, d)
-    xt = _constrain(xt, mesh, P(dp_spec, None, None))
+    xt = _constrain(xt, mesh, specs["tokens"])
 
     # --- routing (exact fp32 unless the policy opts the router in) -------
     rpol = policy if policy.apply_to_router else ArithmeticPolicy(mode="exact")
@@ -135,22 +135,22 @@ def moe_ffn(p, x, cfg: ModelConfig, policy=ArithmeticPolicy()):
                                                         mode="drop"))(
         buf, dest, src_token, xt)
     buf = buf.reshape(g, e, cap, d)
-    buf = _constrain(buf, mesh, P(dp_spec, None, None, None))
+    buf = _constrain(buf, mesh, specs["buffers"])
 
     # --- THE all-to-all: (G, E, C, d) dp-sharded -> (E, G, C, d) EP ------
     # E flips dp->ep while G KEEPS its dp sharding: each device then holds
     # (E/ep, G/dp, C, d) — its own experts x its own token groups
     bufT = jnp.swapaxes(buf, 0, 1)                        # (E, G, C, d)
-    bufT = _constrain(bufT, mesh, P(ep_axis, dp_spec, None, None))
+    bufT = _constrain(bufT, mesh, specs["expert"])
 
     out_e = _expert_ffn(p["experts"], bufT.reshape(e, g * cap, d), cfg,
                         policy)
     out_e = _constrain(out_e.reshape(e, g, cap, d), mesh,
-                       P(ep_axis, dp_spec, None, None))
+                       specs["expert"])
 
     # --- inverse all-to-all + combine --------------------------------------
     out_g = jnp.swapaxes(out_e, 0, 1).reshape(g, e * cap, d)
-    out_g = _constrain(out_g, mesh, P(dp_spec, None, None))
+    out_g = _constrain(out_g, mesh, specs["tokens"])
     copy_out = jax.vmap(lambda oo, dd: oo.at[dd, :].get(
         mode="fill", fill_value=0))(out_g, dest)
     copy_out = jnp.where(keep[..., None], copy_out, 0)
@@ -158,7 +158,7 @@ def moe_ffn(p, x, cfg: ModelConfig, policy=ArithmeticPolicy()):
     combined = jax.vmap(lambda st, co, ww: jnp.zeros(
         (tg, d), x.dtype).at[st].add(co * ww[:, None].astype(x.dtype)))(
         src_token, copy_out, w)
-    combined = _constrain(combined, mesh, P(dp_spec, None, None))
+    combined = _constrain(combined, mesh, specs["tokens"])
 
     # --- shared experts (always active) ------------------------------------
     if cfg.n_shared_experts:

@@ -245,3 +245,39 @@ def named(mesh: Mesh, spec_tree):
     return jax.tree.map(
         lambda s: NamedSharding(mesh, s), spec_tree,
         is_leaf=lambda x: isinstance(x, P))
+
+
+# ---------------------------------------------------------------------------
+# seam-exported spec constructors — consumer modules are not allowed to
+# build PartitionSpecs themselves (the shard-spec-discipline analysis
+# rule), so every layout a consumer needs has a named helper here
+# ---------------------------------------------------------------------------
+
+
+def replicated_spec() -> P:
+    """The fully-replicated spec (scalars, metrics, optimizer step)."""
+    return P()
+
+
+def logits_spec(lead: tuple) -> P:
+    """Placement for a logits output: the given leading (batch-ish)
+    axes as-is, vocab over the TP axis — the launch-layer jit
+    out_shardings for prefill/decode steps."""
+    return P(*lead, "model")
+
+
+def moe_dispatch_specs(dp_spec, ep_axis) -> dict:
+    """The MoE hierarchical-dispatch placement set (models/moe.py):
+
+    tokens   (G, Tg, d)    token groups over dp
+    buffers  (G, E, C, d)  dispatch buffers, still over dp
+    expert   (E, G, C, d)  expert-major view, E over ep x G over dp
+
+    The buffers->expert spec flip IS the all-to-all (and its inverse on
+    the way back); keeping all three here keeps that contract visible
+    in one place."""
+    return {
+        "tokens": P(dp_spec, None, None),
+        "buffers": P(dp_spec, None, None, None),
+        "expert": P(ep_axis, dp_spec, None, None),
+    }

@@ -35,6 +35,8 @@ __all__ = [
     "param_shardings",
     "kv_pool_sharding",
     "replicated",
+    "replicated_spec",
+    "seq_sharded_spec",
 ]
 
 
@@ -120,3 +122,25 @@ def replicated(mesh: ServeMesh):
     import jax
     from jax.sharding import PartitionSpec
     return jax.sharding.NamedSharding(mesh.handle, PartitionSpec())
+
+
+def replicated_spec(mesh: ServeMesh):
+    """Bare replicated PartitionSpec for shard_map in/out specs (the
+    sharded backend's attention cores), or None on the single mesh.
+    Consumers take specs from here instead of constructing them — the
+    `shard-spec-discipline` analysis rule enforces it."""
+    if mesh.is_single:
+        return None
+    from jax.sharding import PartitionSpec
+    return PartitionSpec()
+
+
+def seq_sharded_spec(mesh: ServeMesh):
+    """PartitionSpec sharding axis 1 — the SEQUENCE axis of a gathered
+    (batch, seq, ...) KV view — over the mesh's TP axis, or None on
+    the single mesh. This is the token-dataflow layout the dataflow
+    attention cores (`ring_attention` / `split_kv_attention`) consume."""
+    if mesh.is_single:
+        return None
+    from jax.sharding import PartitionSpec
+    return PartitionSpec(None, mesh.axis)

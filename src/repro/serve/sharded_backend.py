@@ -46,15 +46,15 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
-from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core.policy import ArithmeticPolicy
 from repro.models.config import ModelConfig
-from repro.parallel import sharding as sh
 from repro.parallel.ring_attention import ring_attention
 from repro.parallel.split_kv import split_kv_attention
 from repro.serve.backend import EngineConfig, PagedKVBackend
-from repro.serve.mesh import ServeMesh, make_serve_mesh
+from repro.serve.mesh import (ServeMesh, kv_pool_sharding,
+                              make_serve_mesh, replicated,
+                              replicated_spec, seq_sharded_spec)
 from repro.serve.obs import ShardStepEvent, Tracer
 from repro.serve.paged_model import (
     make_paged_chunked_prefill,
@@ -78,7 +78,12 @@ def _dataflow_attn_core(smesh: ServeMesh):
     positions` masking — trash-page and padding slots all sit at
     t > position for every valid query.
     """
-    mesh, ax, n = smesh.handle, smesh.axis, smesh.n_shards
+    mesh, ax = smesh.handle, smesh.axis
+    # placement vocabulary comes from the mesh seam, not ad-hoc specs
+    # (shard-spec-discipline): rep = replicated, seq = the gathered
+    # view's sequence axis over the TP axis
+    rep = replicated_spec(smesh)
+    seq = seq_sharded_spec(smesh)
 
     def core(qg, kall, vall, positions, cfg: ModelConfig, policy):
         b, s, kvh, g, hd = qg.shape
@@ -99,9 +104,8 @@ def _dataflow_attn_core(smesh: ServeMesh):
                                       kv_positions=kp)
             ctx = shard_map(
                 ring, mesh=mesh,
-                in_specs=(P(None, ax), P(None, ax), P(None, ax),
-                          P(None, ax), P(None, ax)),
-                out_specs=P(None, ax))(q, kall, vall, positions, kv_pos)
+                in_specs=(seq, seq, seq, seq, seq),
+                out_specs=seq)(q, kall, vall, positions, kv_pos)
         else:
             # decode: one query per lane, replicated; each shard scores
             # its KV slice and one pmax + two psums merge the LSE stats
@@ -111,9 +115,8 @@ def _dataflow_attn_core(smesh: ServeMesh):
                                           kv_positions_local=kp)
             ctx = shard_map(
                 split, mesh=mesh,
-                in_specs=(P(), P(None, ax), P(None, ax),
-                          P(), P(None, ax)),
-                out_specs=P())(q, kall, vall, positions, kv_pos)
+                in_specs=(rep, seq, seq, rep, seq),
+                out_specs=rep)(q, kall, vall, positions, kv_pos)
         return ctx.reshape(b, s, kvh, g, hd)
 
     return core
@@ -128,14 +131,14 @@ def _sharded_paged_steps(cfg: ModelConfig, policy: ArithmeticPolicy,
     replicated, KV pool per `paged_pool_spec`) so donation reuses the
     committed pool buffers; inputs inherit placement from the
     committed params/pool and the host-side batch arrays."""
-    mesh, n = smesh.handle, smesh.n_shards
+    n = smesh.n_shards
     heads_tp = cfg.n_kv_heads % n == 0
     core = None
     if (not heads_tp and not cfg.attn_window
             and smax % n == 0 and chunk % n == 0):
         core = _dataflow_attn_core(smesh)
-    repl = NamedSharding(mesh, P())
-    kv_ns = NamedSharding(mesh, sh.paged_pool_spec(cfg, mesh))
+    repl = replicated(smesh)
+    kv_ns = kv_pool_sharding(smesh, cfg)
     kv_sh = {"k": kv_ns, "v": kv_ns}
     prefill = jax.jit(
         make_paged_chunked_prefill(cfg, policy, attn_core=core),

@@ -1,0 +1,48 @@
+# virtual-path: src/repro/serve/fixture_alloc_ok.py
+"""Clean: every handle freed, returned, stored into a field, or handed
+to a callee on all paths out — exception edges included."""
+
+
+def fund(tables, rid, pages):
+    tables[rid] = pages
+
+
+class Tables:
+    def __init__(self, allocator):
+        self.allocator = allocator
+        self.tables = {}
+
+    def alloc_and_store(self, rid, n):
+        pages = self.allocator.alloc(n, rid)
+        self.tables[rid] = pages
+
+    def alloc_and_return(self, rid, n):
+        return self.allocator.alloc(n, rid)
+
+    def alloc_guarded(self, rid, n, budget):
+        if n > budget:
+            raise ValueError("over budget")
+        pages = self.allocator.alloc(n, rid)
+        self.tables[rid] = pages
+
+    def alloc_try_finally(self, rid, n):
+        pages = self.allocator.alloc(n, rid)
+        try:
+            self.tables[rid] = pages
+        finally:
+            self.allocator.free(pages)
+
+    def alloc_handoff(self, rid, n):
+        pages = self.allocator.alloc(n, rid)
+        fund(self.tables, rid, pages)
+
+    def alloc_branchy(self, rid, n, cow):
+        alloc = self.allocator
+        pages = alloc.alloc(n, rid)
+        if cow:
+            shared = alloc.share(pages, rid)
+            self.tables[rid] = shared
+        else:
+            shared = pages
+            self.tables[rid] = shared
+        return pages

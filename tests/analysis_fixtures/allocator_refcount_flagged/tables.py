@@ -1,0 +1,35 @@
+# virtual-path: src/repro/serve/fixture_alloc.py
+"""Flagged: page handles that can fall off the end of a function —
+discarded outright, leaked on a normal exit, leaked only on the path
+an exception takes, or stranded by rebinding their last carrier."""
+
+
+class Tables:
+    def __init__(self, allocator):
+        self.allocator = allocator
+        self.tables = {}
+
+    def discard(self, rid):
+        self.allocator.alloc(1, rid)  # expect: allocator-refcount
+
+    def leak_on_exit(self, rid, n):
+        pages = self.allocator.alloc(n, rid)  # expect: allocator-refcount
+        return rid
+
+    def leak_on_raise(self, rid, n, budget):
+        pages = self.allocator.alloc(n, rid)  # expect: allocator-refcount
+        if n > budget:
+            raise ValueError("over budget")
+        self.tables[rid] = pages
+
+    def dead_rebind(self, rid, n):
+        pages = self.allocator.alloc(n, rid)  # expect: allocator-refcount
+        pages = []
+        self.tables[rid] = pages
+
+    def bare_share_leak(self, pages, rid, ok):
+        alloc = self.allocator
+        alloc.share(pages, rid)  # expect: allocator-refcount
+        if not ok:
+            raise RuntimeError("fork failed")
+        self.tables[rid] = pages

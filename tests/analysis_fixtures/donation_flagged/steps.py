@@ -1,0 +1,59 @@
+# virtual-path: src/repro/serve/fixture_donation.py
+"""Flagged: buffers read after being passed at a donated position.
+
+Covers every resolution path of the donation index: a decorated
+module-level step, a factory returning jit locals (tuple-unpacked into
+consumer locals), and an instance attribute bound from `jax.jit`.
+"""
+import functools
+
+import jax
+
+
+@functools.partial(jax.jit, donate_argnums=(1,))
+def fused_update(params, pool):
+    return pool
+
+
+def caller(params, pool):
+    out = fused_update(params, pool)
+    return out, pool  # expect: donation-discipline
+
+
+def make_steps(cfg):
+    def prefill(params, tokens, pool):
+        return tokens, pool
+
+    def decode(params, tokens, pool):
+        return tokens, pool
+
+    prefill_j = jax.jit(prefill, donate_argnums=(2,))
+    decode_j = jax.jit(decode, donate_argnums=(2,))
+    return prefill_j, decode_j
+
+
+def drain(params, tokens, pool):
+    prefill, decode = make_steps(None)
+    logits, new_pool = prefill(params, tokens, pool)
+    stale = pool.sum()  # expect: donation-discipline
+    return logits, new_pool, stale
+
+
+def branch_read(params, tokens, pool, debug: bool):
+    prefill, _ = make_steps(None)
+    logits, new_pool = prefill(params, tokens, pool)
+    if debug:
+        logits = logits + pool.mean()  # expect: donation-discipline
+    return logits, new_pool
+
+
+class Backend:
+    def __init__(self, step, pool):
+        self._decode = jax.jit(step, donate_argnums=(2,))
+        self._pool = pool
+
+    def step(self, params, tokens):
+        logits, pool = self._decode(params, tokens, self._pool)
+        peak = self._pool.nbytes  # expect: donation-discipline
+        self._pool = pool
+        return logits, peak

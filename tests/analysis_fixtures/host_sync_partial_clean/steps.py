@@ -1,0 +1,26 @@
+# virtual-path: src/repro/serve/fixture_partial_ok.py
+"""Clean: partial-wrapped steps whose host-side reads are static at
+trace time — and a partial that is never jitted must NOT become a jit
+root just because `functools.partial` wrapped it."""
+import functools
+
+import jax
+
+
+def step(params, tokens):
+    b = tokens.shape[0]
+    return params, float(b)
+
+
+def build():
+    bound = functools.partial(step, None)
+    return jax.jit(bound)
+
+
+def host_helper(batch):
+    return float(batch[0])
+
+
+def schedule(batch):
+    pick = functools.partial(host_helper)
+    return pick(batch)

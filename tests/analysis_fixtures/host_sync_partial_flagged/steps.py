@@ -1,0 +1,30 @@
+# virtual-path: src/repro/serve/fixture_partial.py
+"""Flagged: the jit surface follows `functools.partial` chains and
+instance-method references — host syncs inside are still caught."""
+import functools
+
+import jax
+
+
+def step(params, tokens):
+    n = float(tokens[0])  # expect: host-sync-in-jit
+    return params, n
+
+
+def build():
+    bound = functools.partial(step, None)
+    return jax.jit(bound)
+
+
+def build_nested():
+    inner = functools.partial(step, None)
+    outer = functools.partial(inner)
+    return jax.jit(outer)
+
+
+class Engine:
+    def _decode(self, params, tokens):
+        return tokens.item()  # expect: host-sync-in-jit
+
+    def compile(self):
+        return jax.jit(functools.partial(self._decode))

@@ -1,0 +1,19 @@
+# virtual-path: src/repro/serve/fixture_specs_ok.py
+"""Clean: placement comes from the seam helpers; axis names ride on
+the mesh value instead of string literals."""
+import jax
+from jax.experimental.shard_map import shard_map
+
+from repro.serve.mesh import replicated_spec, seq_sharded_spec
+
+
+def place(smesh):
+    return replicated_spec(smesh), seq_sharded_spec(smesh)
+
+
+def merge(smesh, x):
+    return jax.lax.psum(x, smesh.axis)
+
+
+def ring(smesh, f, x):
+    return shard_map(f, mesh=smesh.handle, axis_name=smesh.axis)(x)

@@ -1,0 +1,21 @@
+# virtual-path: src/repro/serve/fixture_specs.py
+"""Flagged: placement vocabulary constructed outside the seam —
+PartitionSpec/NamedSharding calls and string axis-name literals."""
+import jax
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+
+def place(mesh, x):
+    spec = P(None, "model")  # expect: shard-spec-discipline
+    return jax.device_put(x, NamedSharding(mesh, spec))  # expect: shard-spec-discipline
+
+
+def merge(x, y):
+    lo = jax.lax.psum(x, "model")  # expect: shard-spec-discipline
+    hi = jax.lax.pmax(y, ("data", "model"))  # expect: shard-spec-discipline
+    return lo, hi
+
+
+def ring(mesh, f, x, perm):
+    return shard_map(f, mesh=mesh, axis_name="model")(x, perm)  # expect: shard-spec-discipline

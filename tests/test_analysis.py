@@ -15,15 +15,18 @@ from __future__ import annotations
 
 import json
 import re
+import subprocess
+import sys
 from pathlib import Path
 
 import pytest
 
 from repro.analysis import (Baseline, Finding, Project, all_rules,
                             analyze_project)
-from repro.analysis.cli import main as cli_main
+from repro.analysis.cli import changed_files, main as cli_main
 from repro.analysis.core import PARSE_ERROR_RULE
-from repro.analysis.project import EXCLUDED_DIRS, parse_suppressions
+from repro.analysis.project import (EXCLUDED_DIRS, parse_suppressions,
+                                    suppression_sites)
 
 REPO = Path(__file__).resolve().parents[1]
 FIXTURES = Path(__file__).resolve().parent / "analysis_fixtures"
@@ -41,6 +44,9 @@ RULE_SLUGS = {
     "registry": "registry-namespace",
     "protocol": "backend-protocol",
     "mesh_discipline": "mesh-discipline",
+    "donation": "donation-discipline",
+    "allocator_refcount": "allocator-refcount",
+    "shard_spec": "shard-spec-discipline",
 }
 
 
@@ -209,3 +215,138 @@ def test_cli_list_rules(capsys):
     out = capsys.readouterr().out
     for rule in RULE_SLUGS.values():
         assert rule in out
+
+
+def test_readme_rule_table_matches_list_rules():
+    """The README 'Static analysis' table is the user-facing rule
+    list; it must not drift from the registered rule set."""
+    readme = (REPO / "README.md").read_text()
+    rows = re.findall(r"^\| `([a-z][a-z\-]*)` \|", readme, flags=re.M)
+    assert len(rows) == len(set(rows)), "duplicate rows in rule table"
+    assert set(rows) == {r.id for r in all_rules()}
+
+
+# -- suppression rationales ---------------------------------------------------
+
+
+def test_suppression_sites_extract_rationales():
+    src = ("t0 = t()  # repro: allow[wall-clock-in-serve] -- bench\n"
+           "# why: the harness measures real seconds\n"
+           "# repro: allow[wall-clock-in-serve]\n"
+           "t1 = t()\n"
+           "# repro: allow[rng-key-discipline]\n"
+           "k = 1\n")
+    sites = suppression_sites(src)
+    assert [(s.line, s.target_line) for s in sites] == \
+        [(1, 1), (3, 4), (5, 6)]
+    assert sites[0].rules == ("wall-clock-in-serve",)
+    assert sites[0].rationale == "bench"
+    assert sites[1].rationale == "why: the harness measures real seconds"
+    assert sites[2].rationale == ""
+
+
+def test_cli_audit_suppressions_real_tree_all_have_rationale(
+        monkeypatch, capsys):
+    monkeypatch.chdir(REPO)
+    rc = cli_main(["--audit-suppressions"])
+    out = capsys.readouterr().out
+    assert rc == 0, out
+    assert "0 without rationale" in out
+
+
+def test_cli_audit_suppressions_fails_without_rationale(tmp_path,
+                                                        capsys):
+    bad = tmp_path / "src" / "repro" / "serve" / "hot.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import time\n\n\ndef f():\n"
+                   "    return time.time()  "
+                   "# repro: allow[wall-clock-in-serve]\n")
+    rc = cli_main([str(bad), "--audit-suppressions"])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "(no rationale)" in out
+
+
+# -- sarif --------------------------------------------------------------------
+
+
+def test_cli_sarif_report(tmp_path, capsys):
+    bad = tmp_path / "src" / "repro" / "serve" / "hot.py"
+    bad.parent.mkdir(parents=True)
+    bad.write_text("import time\n\n\ndef f():\n    return time.time()\n")
+    out = tmp_path / "r.sarif"
+    rc = cli_main([str(bad), "--format", "sarif",
+                   "--baseline", str(tmp_path / "none.json"),
+                   "--out", str(out)])
+    assert rc == 1
+    doc = json.loads(out.read_text())
+    assert doc["version"] == "2.1.0"
+    run = doc["runs"][0]
+    driver = run["tool"]["driver"]
+    assert driver["name"] == "repro.analysis"
+    rule_ids = [r["id"] for r in driver["rules"]]
+    assert set(rule_ids) == {r.id for r in all_rules()}
+    res = run["results"]
+    assert len(res) == 1 and res[0]["ruleId"] == "wall-clock-in-serve"
+    assert res[0]["level"] == "error"
+    assert res[0]["ruleIndex"] == rule_ids.index("wall-clock-in-serve")
+    region = res[0]["locations"][0]["physicalLocation"]["region"]
+    assert region["startLine"] == 5
+
+
+def test_sarif_baselined_findings_are_notes(tmp_path):
+    from repro.analysis.sarif import render_sarif
+    doc = json.loads(render_sarif([], [_fd()], all_rules()))
+    res = doc["runs"][0]["results"]
+    assert len(res) == 1 and res[0]["level"] == "note"
+
+
+# -- changed-only -------------------------------------------------------------
+
+
+def test_changed_files_outside_git_is_none(tmp_path):
+    assert changed_files(tmp_path) is None
+
+
+def test_cli_changed_only_filters_to_changed_files(tmp_path, capsys,
+                                                   monkeypatch):
+    def git(*a):
+        subprocess.run(["git", *a], cwd=tmp_path, check=True,
+                       capture_output=True)
+    git("init", "-q")
+    git("config", "user.email", "ci@example.invalid")
+    git("config", "user.name", "ci")
+    old = tmp_path / "src" / "repro" / "serve" / "old.py"
+    old.parent.mkdir(parents=True)
+    old.write_text("import time\n\n\ndef f():\n    return time.time()\n")
+    git("add", ".")
+    git("commit", "-q", "-m", "base")
+    git("update-ref", "refs/remotes/origin/main", "HEAD")
+    hot = old.with_name("hot.py")
+    hot.write_text("import time\n\n\ndef g():\n    return time.time()\n")
+    monkeypatch.chdir(tmp_path)
+    rc = cli_main(["src", "--changed-only",
+                   "--baseline", str(tmp_path / "none.json")])
+    out = capsys.readouterr().out
+    assert rc == 1
+    assert "hot.py" in out and "old.py" not in out
+
+
+# -- stdlib-only guarantee ----------------------------------------------------
+
+
+def test_analysis_imports_and_runs_without_jax():
+    """The analyzer must work with jax/numpy unimportable — the CI
+    `analyze` job installs no ML deps."""
+    code = ("import sys\n"
+            "for mod in ('jax', 'jaxlib', 'numpy'):\n"
+            "    sys.modules[mod] = None\n"
+            "import repro.analysis\n"
+            "from repro.analysis.cli import main\n"
+            "raise SystemExit(main(['--list-rules']))\n")
+    import os
+    proc = subprocess.run(
+        [sys.executable, "-c", code], capture_output=True, text=True,
+        env={**os.environ, "PYTHONPATH": str(REPO / "src")})
+    assert proc.returncode == 0, proc.stderr
+    assert "host-sync-in-jit" in proc.stdout

@@ -1,0 +1,198 @@
+"""Unit tests for the dataflow framework under `repro.analysis` —
+the CFG builder and forward solver the donation / allocator / host-sync
+rules run on. Fixture-level behavior is pinned by
+tests/analysis_fixtures; these tests pin the framework semantics the
+rules assume: branch joins, loop fixpoints, exception edges (explicit
+`raise`/`assert` only), try/finally routing, and flow-sensitive taint
+laundering.
+"""
+from __future__ import annotations
+
+import ast
+import textwrap
+
+from repro.analysis.cfg import build_cfg, shallow_walk
+from repro.analysis.dataflow import (ForwardAnalysis, TaintAnalysis,
+                                     atom_states, chain_str,
+                                     exit_states, solve)
+
+
+def _fn(src: str):
+    return ast.parse(textwrap.dedent(src)).body[0]
+
+
+def _taint_at_returns(src: str, params: set[str]) -> list[frozenset]:
+    """In-state at every `return` atom, in source order."""
+    fn = _fn(src)
+    cfg = build_cfg(fn)
+    analysis = TaintAnalysis(params)
+    states = solve(cfg, analysis)
+    out = []
+    for atom, state in atom_states(cfg, analysis, states):
+        if isinstance(atom, ast.Return):
+            out.append((atom.lineno, state))
+    return [s for _, s in sorted(out)]
+
+
+class _GenNames(ForwardAnalysis):
+    """Toy analysis: every assigned name becomes a fact, never killed
+    — isolates edge structure from transfer subtleties."""
+
+    def transfer(self, state, atom):
+        if isinstance(atom, ast.Assign):
+            names = {t.id for t in atom.targets
+                     if isinstance(t, ast.Name)}
+            return state | names
+        return state
+
+
+def test_chain_str():
+    assert chain_str(ast.parse("self.cache.kv").body[0].value) \
+        == "self.cache.kv"
+    assert chain_str(ast.parse("pool").body[0].value) == "pool"
+    assert chain_str(ast.parse("f(x).y").body[0].value) is None
+
+
+def test_shallow_walk_stays_out_of_nested_scopes():
+    stmt = ast.parse("x = [lambda: hidden, visible]").body[0]
+    names = {n.id for n in shallow_walk(stmt)
+             if isinstance(n, ast.Name)}
+    assert "visible" in names and "hidden" not in names
+
+
+def test_branch_join_is_union():
+    states = _taint_at_returns("""
+        def f(x, flag: bool):
+            if flag:
+                y = x + 1
+            else:
+                y = 0
+            return y
+    """, {"x"})
+    # y MAY be tainted (then-branch): union join keeps it
+    assert "y" in states[0]
+
+
+def test_static_rebind_launders_taint():
+    states = _taint_at_returns("""
+        def f(x):
+            y = x * 2
+            y = x.shape[0]
+            return y
+    """, {"x"})
+    assert "y" not in states[0]
+    assert "x" in states[0]
+
+
+def test_augassign_never_launders():
+    states = _taint_at_returns("""
+        def f(x, n: int):
+            y = x * 2
+            y += 1
+            return y
+    """, {"x"})
+    assert "y" in states[0]
+
+
+def test_loop_fixpoint_carries_taint_around_back_edge():
+    states = _taint_at_returns("""
+        def f(x, n: int):
+            acc = 0
+            for _ in range(n):
+                acc = acc + x
+            return acc
+    """, {"x"})
+    # taint acquired in iteration k is live at iteration k+1's header
+    # and at the loop exit — requires the back-edge fixpoint
+    assert "acc" in states[0]
+
+
+def test_unreachable_code_keeps_empty_state():
+    fn = _fn("""
+        def f(x):
+            return x
+            y = x
+    """)
+    cfg = build_cfg(fn)
+    analysis = TaintAnalysis({"x"})
+    states = solve(cfg, analysis)
+    dead = [state for atom, state in atom_states(cfg, analysis, states)
+            if isinstance(atom, ast.Assign)]
+    assert dead == [frozenset()]
+
+
+def test_raise_reaches_raise_exit_not_exit():
+    fn = _fn("""
+        def f(cond):
+            a = 1
+            if cond:
+                raise ValueError("boom")
+            b = 2
+            return b
+    """)
+    cfg = build_cfg(fn)
+    analysis = _GenNames()
+    states = solve(cfg, analysis)
+    normal, exc = exit_states(cfg, analysis, states)
+    assert "b" in normal
+    assert "b" not in exc and "a" in exc
+
+
+def test_except_handler_joins_state_from_every_try_point():
+    fn = _fn("""
+        def f():
+            try:
+                a = 1
+                b = 2
+            except RuntimeError:
+                c = 3
+            return c
+    """)
+    cfg = build_cfg(fn)
+    analysis = _GenNames()
+    states = solve(cfg, analysis)
+    for atom, state in atom_states(cfg, analysis, states):
+        if isinstance(atom, ast.Assign) and atom.targets[0].id == "c":
+            # the exception may fire after `a` alone OR after both:
+            # the handler's in-state is the union over all points
+            assert "a" in state
+    normal, _ = exit_states(cfg, analysis, states)
+    assert {"a", "c"} <= normal or {"a", "b"} <= normal
+
+
+def test_try_finally_without_except_routes_exception_through_finally():
+    fn = _fn("""
+        def f():
+            a = 1
+            try:
+                raise ValueError("boom")
+            finally:
+                fin = 2
+    """)
+    cfg = build_cfg(fn)
+    analysis = _GenNames()
+    states = solve(cfg, analysis)
+    fin_states = [state
+                  for atom, state in atom_states(cfg, analysis, states)
+                  if isinstance(atom, ast.Assign)
+                  and atom.targets[0].id == "fin"]
+    assert fin_states and all("a" in s for s in fin_states)
+    _, exc = exit_states(cfg, analysis, states)
+    # the uncaught exception still leaves the function, after finally
+    assert "fin" in exc
+
+
+def test_assert_creates_exception_edge():
+    fn = _fn("""
+        def f(n):
+            a = 1
+            assert n > 0
+            b = 2
+            return b
+    """)
+    cfg = build_cfg(fn)
+    analysis = _GenNames()
+    states = solve(cfg, analysis)
+    normal, exc = exit_states(cfg, analysis, states)
+    assert "a" in exc and "b" not in exc
+    assert "b" in normal
