@@ -2,11 +2,22 @@
 
 sc_matmul         the stochastic-analog MAC pipeline (paper SIII.A)
 flash_attention   LSE online-softmax attention (paper Eq. 5 + SIII.D.3)
+paged_attention   fused block-table-walking attention for the paged
+                  serving stack (no gathered KV view; SIII.C.2)
 
 Kernels target TPU (pl.pallas_call + BlockSpec VMEM tiling) and are
 validated on CPU with interpret=True against pure-jnp oracles (ref.py).
 """
 from repro.kernels.flash_attention import attention_ref, flash_attention
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_attention_ref)
 from repro.kernels.sc_matmul import sc_matmul, sc_matmul_ref
 
-__all__ = ["sc_matmul", "sc_matmul_ref", "flash_attention", "attention_ref"]
+__all__ = [
+    "sc_matmul",
+    "sc_matmul_ref",
+    "flash_attention",
+    "attention_ref",
+    "paged_attention",
+    "paged_attention_ref",
+]

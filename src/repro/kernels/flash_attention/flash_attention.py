@@ -6,15 +6,25 @@ the QK^T MatMul streams out of the subarrays, overlapping softmax with the
 S*V MatMul.  On TPU the idiomatic realization of exactly that dataflow is a
 fused attention kernel with an online-softmax K/V stream — this kernel.
 
-Features: causal masking, GQA/MQA (q-head -> kv-head folding via the
-BlockSpec index map), and an LSE output per query — the LSE is what makes
-the token-dataflow distributed merges (ring attention, split-KV decode)
-exact, because Eq. 5 is associative across shards.
+Features: causal masking, sliding-window masking (a query at row r keeps
+keys in (r - window, r], matching `serve.paged_model._attn_core`), an
+explicit key-length mask so the wrapper can pad Sk to a block multiple
+without changing non-causal results, GQA/MQA (q-head -> kv-head folding
+via the BlockSpec index map), and an LSE output per query — the LSE is
+what makes the token-dataflow distributed merges (ring attention,
+split-KV decode) exact, because Eq. 5 is associative across shards.
 
 Grid: (batch, q_heads, Sq/bq, Sk/bk), K innermost; the output and the
 (m, l) running statistics are revisited blocks accumulated across the K
 axis.  m/l are carried in f32 output refs of shape (..., bq) — lane-dim
 aligned.  Finalization (o /= l, lse = m + log l) happens at the last K step.
+
+Block skipping: under a causal mask, K blocks strictly above the
+diagonal are skipped; with a sliding window, K blocks that fall entirely
+below every query row's window are skipped too, and blocks entirely past
+the key-length mask never run.  The `nvis` output counts the K blocks
+that actually executed per (batch, head, q-row) — the interpret-mode
+tests read it to assert skipped blocks issue no FLOPs.
 """
 from __future__ import annotations
 
@@ -27,8 +37,18 @@ from jax.experimental import pallas as pl
 NEG_INF = -1e30
 
 
-def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, *,
-                  scale: float, causal: bool, nk: int, bq: int, bk: int):
+def _interpret_default() -> bool:
+    """Single source of truth for Pallas interpret-mode resolution:
+    compiled Mosaic on TPU, the interpreter everywhere else.  Shared by
+    `flash_attention_kernel`, `ops.flash_attention`, and the paged
+    kernel (`kernels.paged_attention`)."""
+    return jax.default_backend() != "tpu"
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref,
+                  nvis_ref, *, scale: float, causal: bool,
+                  window: int | None, kv_len: int | None,
+                  nk: int, bq: int, bk: int):
     qi = pl.program_id(2)
     ki = pl.program_id(3)
 
@@ -37,6 +57,7 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, *,
         o_ref[...] = jnp.zeros_like(o_ref)
         m_ref[...] = jnp.full_like(m_ref, NEG_INF)
         l_ref[...] = jnp.zeros_like(l_ref)
+        nvis_ref[...] = jnp.zeros_like(nvis_ref)
 
     def _update():
         q = q_ref[0, 0].astype(jnp.float32)          # (bq, d)
@@ -46,10 +67,17 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, *,
             q, k, (((1,), (1,)), ((), ())),
             preferred_element_type=jnp.float32,
         ) * scale                                     # (bq, bk)
-        if causal:
+        if causal or kv_len is not None:
             rows = qi * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
             cols = ki * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
-            s = jnp.where(rows >= cols, s, NEG_INF)
+            keep = jnp.full((bq, bk), True)
+            if causal:
+                keep &= rows >= cols
+                if window is not None:
+                    keep &= cols > rows - window
+            if kv_len is not None:
+                keep &= cols < kv_len
+            s = jnp.where(keep, s, NEG_INF)
 
         m_prev = m_ref[0, 0]                          # (bq,)
         l_prev = l_ref[0, 0]
@@ -58,17 +86,31 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, *,
         p = jnp.exp(s - m_new[:, None])
         l_ref[0, 0] = l_prev * alpha + jnp.sum(p, axis=-1)
         m_ref[0, 0] = m_new
+        nvis_ref[0, 0] = nvis_ref[0, 0] + 1.0
         o_ref[0, 0] = (o_ref[0, 0] * alpha[:, None]
                        + jax.lax.dot_general(
                            p, v, (((1,), (0,)), ((), ())),
                            preferred_element_type=jnp.float32))
 
+    # two-sided block skip: drop K blocks that are fully masked for the
+    # whole q block — strictly above the diagonal (causal), entirely
+    # below every row's sliding window (a block is below row r's window
+    # iff its last col <= r - window; fully below ALL rows iff that
+    # holds for the block's FIRST row qi*bq), or entirely past the
+    # valid key length.  The TPU grid still visits them, but no FLOPs
+    # issue — the nvis counter output is the proof the tests pin.
+    visit = None
     if causal:
-        # skip fully-masked K blocks (the block is strictly above the
-        # diagonal) — the TPU grid still visits them, but no FLOPs issue
-        pl.when(ki * bk <= qi * bq + bq - 1)(_update)
-    else:
+        visit = ki * bk <= qi * bq + bq - 1
+        if window is not None:
+            visit &= ki * bk + bk - 1 > qi * bq - window
+    if kv_len is not None and kv_len < nk * bk:
+        below_len = ki * bk < kv_len
+        visit = below_len if visit is None else visit & below_len
+    if visit is None:
         _update()
+    else:
+        pl.when(visit)(_update)
 
     @pl.when(ki == nk - 1)
     def _finalize():
@@ -79,37 +121,45 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, lse_ref, m_ref, l_ref, *,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "scale", "bq", "bk", "interpret"),
+    static_argnames=("causal", "window", "kv_len", "scale", "bq", "bk",
+                     "interpret"),
 )
-def flash_attention_kernel(
+def _flash_attention_all(
     q: jax.Array,
     k: jax.Array,
     v: jax.Array,
     *,
     causal: bool = True,
+    window: int | None = None,
+    kv_len: int | None = None,
     scale: float | None = None,
     bq: int = 128,
     bk: int = 128,
-    interpret: bool = True,
-) -> tuple[jax.Array, jax.Array]:
-    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D), Hq % Hkv == 0.
-
-    Returns (o: (B, Hq, Sq, D) f32, lse: (B, Hq, Sq) f32).
-    Sq/Sk must be multiples of bq/bk (ops.py pads).
-    """
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Kernel entry returning every output: (o, lse, nvis) where nvis
+    counts the K blocks that executed per (b, h, q-row) — see
+    `flash_attention_block_counts`."""
+    if interpret is None:
+        interpret = _interpret_default()
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     assert hq % hkv == 0, (hq, hkv)
     group = hq // hkv
     assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
     nq, nk = sq // bq, sk // bk
+    if window is not None and not causal:
+        raise ValueError("window masking requires causal=True")
+    if window is not None and window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
     if scale is None:
         scale = 1.0 / (d**0.5)
 
     kernel = functools.partial(
-        _flash_kernel, scale=scale, causal=causal, nk=nk, bq=bq, bk=bk,
+        _flash_kernel, scale=scale, causal=causal, window=window,
+        kv_len=kv_len, nk=nk, bq=bq, bk=bk,
     )
-    o, lse, _, _ = pl.pallas_call(
+    o, lse, _, _, nvis = pl.pallas_call(
         kernel,
         grid=(b, hq, nq, nk),
         in_specs=[
@@ -124,13 +174,66 @@ def flash_attention_kernel(
             pl.BlockSpec((1, 1, bq), lambda bi, hi, qi, ki: (bi, hi, qi)),
             pl.BlockSpec((1, 1, bq), lambda bi, hi, qi, ki: (bi, hi, qi)),
             pl.BlockSpec((1, 1, bq), lambda bi, hi, qi, ki: (bi, hi, qi)),
+            pl.BlockSpec((1, 1, bq), lambda bi, hi, qi, ki: (bi, hi, qi)),
         ],
         out_shape=[
             jax.ShapeDtypeStruct((b, hq, sq, d), jnp.float32),
             jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),
             jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),  # m (scratch-ish)
             jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),  # l (scratch-ish)
+            jax.ShapeDtypeStruct((b, hq, sq), jnp.float32),  # visited K blocks
         ],
         interpret=interpret,
     )(q, k, v)
+    return o, lse, nvis
+
+
+def flash_attention_kernel(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    kv_len: int | None = None,
+    scale: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool | None = None,
+) -> tuple[jax.Array, jax.Array]:
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D), Hq % Hkv == 0.
+
+    Returns (o: (B, Hq, Sq, D) f32, lse: (B, Hq, Sq) f32).
+    Sq/Sk must be multiples of bq/bk (ops.py pads; `kv_len` masks keys
+    at positions >= kv_len so padded Sk stays exact for non-causal).
+    `window` keeps keys in (row - window, row] per query row (causal
+    only).  `interpret=None` resolves via `_interpret_default()`:
+    compiled on TPU, interpreted elsewhere.
+    """
+    o, lse, _ = _flash_attention_all(
+        q, k, v, causal=causal, window=window, kv_len=kv_len,
+        scale=scale, bq=bq, bk=bk, interpret=interpret)
     return o, lse
+
+
+def flash_attention_block_counts(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    kv_len: int | None = None,
+    scale: float | None = None,
+    bq: int = 128,
+    bk: int = 128,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Number of K blocks that actually executed per (B, Hq, Sq) row —
+    every row of a q block shares one count.  The block-skip tests pin
+    this against the analytic visit set to prove fully-masked blocks
+    issue no FLOPs."""
+    _, _, nvis = _flash_attention_all(
+        q, k, v, causal=causal, window=window, kv_len=kv_len,
+        scale=scale, bq=bq, bk=bk, interpret=interpret)
+    return nvis

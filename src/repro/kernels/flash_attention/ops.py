@@ -1,8 +1,11 @@
 """jit'd public wrapper for the flash-attention kernel.
 
-Pads sequence lengths to block multiples (padding keys are masked off via
-the causal structure or an explicit -inf length mask), restores shapes, and
-picks interpret mode off the backend.
+Pads sequence lengths to block multiples, restores shapes, and picks
+interpret mode off the backend (`_interpret_default`, shared with the
+kernel module and the paged kernel).  Padded keys sit at the END of the
+sequence and are masked exactly: under a causal mask real queries never
+see them, and otherwise the kernel's explicit `kv_len` mask pins their
+scores to -inf — so neither Sq nor Sk needs to be a block multiple.
 """
 from __future__ import annotations
 
@@ -10,12 +13,9 @@ import jax
 import jax.numpy as jnp
 
 from repro.kernels.flash_attention.flash_attention import (
+    _interpret_default,
     flash_attention_kernel,
 )
-
-
-def _interpret_default() -> bool:
-    return jax.default_backend() != "tpu"
 
 
 def flash_attention(
@@ -24,6 +24,7 @@ def flash_attention(
     v: jax.Array,
     *,
     causal: bool = True,
+    window: int | None = None,
     scale: float | None = None,
     bq: int = 128,
     bk: int = 128,
@@ -33,6 +34,9 @@ def flash_attention(
     """Fused LSE attention. q: (B, Hq, Sq, D); k/v: (B, Hkv, Sk, D)."""
     if interpret is None:
         interpret = _interpret_default()
+    # validate BEFORE any padding mutates the operands
+    if window is not None and not causal:
+        raise ValueError("window masking requires causal=True")
     b, hq, sq, d = q.shape
     sk = k.shape[2]
     bq_eff = min(bq, max(8, sq)) if sq < bq else bq
@@ -42,20 +46,12 @@ def flash_attention(
     if pad_q:
         q = jnp.pad(q, ((0, 0), (0, 0), (0, pad_q), (0, 0)))
     if pad_k:
-        # padded keys sit at the END of the sequence; with causal attention
-        # real queries never see them. For non-causal, push them to -inf by
-        # padding k with a huge negative magnitude on one channel instead —
-        # simpler and exact: pad v with zeros and k with zeros, then rely on
-        # an explicit mask baked into the scores via a length-mask pass.
         k = jnp.pad(k, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
         v = jnp.pad(v, ((0, 0), (0, 0), (0, pad_k), (0, 0)))
-    if pad_k and not causal:
-        raise NotImplementedError(
-            "non-causal flash path requires Sk % bk == 0 (got "
-            f"Sk={sk}, bk={bk_eff}) — pass a smaller bk")
     o, lse = flash_attention_kernel(
-        q, k, v, causal=causal, scale=scale, bq=bq_eff, bk=bk_eff,
-        interpret=interpret,
+        q, k, v, causal=causal, window=window,
+        kv_len=sk if pad_k else None, scale=scale,
+        bq=bq_eff, bk=bk_eff, interpret=interpret,
     )
     o = o[:, :, :sq]
     lse = lse[:, :, :sq]

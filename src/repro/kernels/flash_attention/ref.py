@@ -4,11 +4,17 @@ from __future__ import annotations
 import jax.numpy as jnp
 
 
-def attention_ref(q, k, v, *, causal=True, scale=None):
-    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D). Returns (o, lse)."""
+def attention_ref(q, k, v, *, causal=True, window=None, scale=None):
+    """q: (B, Hq, Sq, D); k, v: (B, Hkv, Sk, D). Returns (o, lse).
+
+    `window` (causal only) keeps keys in (pos - window, pos] per query,
+    where query row r sits at absolute position r + (Sk - Sq) — the
+    same sliding-window semantics as the kernel and `_attn_core`."""
     b, hq, sq, d = q.shape
     _, hkv, sk, _ = k.shape
     group = hq // hkv
+    if window is not None and not causal:
+        raise ValueError("window masking requires causal=True")
     if scale is None:
         scale = 1.0 / (d**0.5)
     kf = jnp.repeat(k, group, axis=1).astype(jnp.float32)
@@ -16,6 +22,9 @@ def attention_ref(q, k, v, *, causal=True, scale=None):
     s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kf) * scale
     if causal:
         mask = jnp.tril(jnp.ones((sq, sk), bool), k=sk - sq)
+        if window is not None:
+            pos = jnp.arange(sq)[:, None] + (sk - sq)
+            mask &= jnp.arange(sk)[None, :] > pos - window
         s = jnp.where(mask, s, -1e30)
     m = jnp.max(s, axis=-1, keepdims=True)
     p = jnp.exp(s - m)

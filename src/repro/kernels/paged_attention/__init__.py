@@ -1,0 +1,5 @@
+"""Fused Pallas paged-attention kernel (see paged_attention.py)."""
+from repro.kernels.paged_attention.paged_attention import paged_attention
+from repro.kernels.paged_attention.ref import paged_attention_ref
+
+__all__ = ["paged_attention", "paged_attention_ref"]

@@ -1,0 +1,208 @@
+"""Fused Pallas paged-attention kernel — block-table walk in-kernel.
+
+The serving stack's gather path (`serve.paged_model._paged_attn_block`)
+materializes every request's block table into a contiguous
+(B, Smax, KV, Dh) view before attending — the data-movement cost paged
+kernels exist to eliminate.  This kernel walks the per-request block
+table INSIDE the kernel instead: the K/V operands are the raw page
+pools (P, page, KV, Dh), and their `BlockSpec` index maps read the
+scalar-prefetched block-table operand to fetch page
+`block_tables[b, pi]` at grid step (b, h, pi) — a block-sparse gather
+the compiler pipelines against compute, with nothing contiguous ever
+built (paper §III.C.2/§III.D.3: attention streamed bank-by-bank out of
+the arrays with the online LSE softmax).
+
+Softmax is the same online (m, l) running-statistics scheme as
+`kernels.flash_attention`: m/l live in f32 revisited output blocks
+accumulated across the page axis (innermost grid dim), finalized
+(o /= l) at the last page.  GQA folds q head h onto kv head h // group
+in the index map, exactly like the flash kernel.
+
+Masking reproduces `serve.paged_model._attn_core` bit-for-bit in
+semantics: table slot pi covers absolute kv positions
+[pi*page, (pi+1)*page), so the kv position of slot s in grid step pi IS
+pi*page + s; a query at absolute position p keeps kv positions t with
+t <= p (causal over the whole written prefix) and, under a sliding
+window, t > p - window.  Trash-page and padding slots all sit at
+t > p for every valid query, so per-lane length masking falls out of
+`positions` alone — no separate length operand.
+
+Page skipping: pages whose first kv position exceeds the row's maximum
+query position carry only trash/unwritten slots and are skipped (no
+FLOPs — the grid visits them, `pl.when` gates the body); with a window,
+pages entirely below every query's window are skipped from the other
+side.  Query positions within a row must be monotone non-decreasing
+(the serve builders emit start_pos + arange), which makes row position
+0 the min and row position S-1 the max.
+
+Grid: (B, H, Pmax), pages innermost.  The whole (S, Dh) query block
+rides along every page step; S is the prefill chunk (or 1 for decode),
+so one kernel covers both step shapes — the serve layer selects it per
+`EngineConfig.attn_impl` with zero engine/scheduler branches.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.kernels.flash_attention.flash_attention import (
+    NEG_INF,
+    _interpret_default,
+)
+
+
+def _paged_kernel(bt_ref, posq_ref, q_ref, pos_ref, k_ref, v_ref,
+                  o_ref, m_ref, l_ref, *, scale: float,
+                  window: int | None, page: int, pmax: int, s: int):
+    bi = pl.program_id(0)
+    pi = pl.program_id(2)
+
+    @pl.when(pi == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    # page skip off the scalar-prefetched positions: row positions are
+    # monotone, so [bi, 0] / [bi, s-1] bound the row's query window.
+    # A page whose first kv position is past the max query position
+    # holds only trash/unwritten slots; with a sliding window, a page
+    # whose last kv position is at or below (min position - window) is
+    # invisible to every query.
+    q_hi = posq_ref[bi, s - 1]
+    visit = pi * page <= q_hi
+    if window is not None:
+        q_lo = posq_ref[bi, 0]
+        visit &= (pi + 1) * page - 1 > q_lo - window
+
+    @pl.when(visit)
+    def _update():
+        q = q_ref[0, :, 0].astype(jnp.float32)        # (S, Dh)
+        k = k_ref[0, :, 0].astype(jnp.float32)        # (page, Dh)
+        v = v_ref[0, :, 0].astype(jnp.float32)        # (page, Dh)
+        sc = jax.lax.dot_general(
+            q, k, (((1,), (1,)), ((), ())),
+            preferred_element_type=jnp.float32,
+        ) * scale                                      # (S, page)
+        qpos = pos_ref[0]                              # (S,) i32
+        kvpos = pi * page + jax.lax.broadcasted_iota(
+            jnp.int32, (s, page), 1)
+        keep = kvpos <= qpos[:, None]
+        if window is not None:
+            keep &= kvpos > qpos[:, None] - window
+        sc = jnp.where(keep, sc, NEG_INF)
+
+        m_prev = m_ref[0, 0]                           # (S,)
+        l_prev = l_ref[0, 0]
+        m_new = jnp.maximum(m_prev, jnp.max(sc, axis=-1))
+        alpha = jnp.exp(m_prev - m_new)
+        p = jnp.exp(sc - m_new[:, None])
+        l_ref[0, 0] = l_prev * alpha + jnp.sum(p, axis=-1)
+        m_ref[0, 0] = m_new
+        o_ref[0, :, 0] = (o_ref[0, :, 0] * alpha[:, None]
+                          + jax.lax.dot_general(
+                              p, v, (((1,), (0,)), ((), ())),
+                              preferred_element_type=jnp.float32))
+
+    @pl.when(pi == pmax - 1)
+    def _finalize():
+        l = jnp.maximum(l_ref[0, 0], 1e-30)
+        o_ref[0, :, 0] = o_ref[0, :, 0] / l[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("window", "scale", "interpret"),
+)
+def paged_attention(
+    q: jax.Array,
+    k_pages: jax.Array,
+    v_pages: jax.Array,
+    block_tables: jax.Array,
+    positions: jax.Array,
+    *,
+    window: int | None = None,
+    scale: float | None = None,
+    interpret: bool | None = None,
+) -> jax.Array:
+    """Fused paged attention over one layer's page pool.
+
+    q:            (B, S, H, Dh) queries (S = chunk, or 1 for decode)
+    k/v_pages:    (P, page, KV, Dh) the layer's page pool, H % KV == 0
+    block_tables: (B, Pmax) i32 page ids per row, trash page 0 in
+                  unused slots
+    positions:    (B, S) i32 absolute query positions, monotone
+                  non-decreasing within a row
+
+    Returns the context tensor (B, S, H, Dh) f32.  A query at position
+    p attends to kv positions t <= p (and t > p - window when set) of
+    its own row's table — `_attn_core` semantics, computed without ever
+    materializing the gathered view.  `interpret=None` resolves via the
+    shared `_interpret_default()` platform probe.
+    """
+    if interpret is None:
+        interpret = _interpret_default()
+    b, s, h, hd = q.shape
+    npages, page, kvh, hd_k = k_pages.shape
+    if hd_k != hd or v_pages.shape != k_pages.shape:
+        raise ValueError(
+            f"pool/query shape mismatch: q {q.shape}, k_pages "
+            f"{k_pages.shape}, v_pages {v_pages.shape}")
+    if h % kvh:
+        raise ValueError(f"H={h} not a multiple of KV={kvh}")
+    group = h // kvh
+    pmax = block_tables.shape[1]
+    if block_tables.shape[0] != b or positions.shape != (b, s):
+        raise ValueError(
+            f"batch mismatch: q {q.shape}, block_tables "
+            f"{block_tables.shape}, positions {positions.shape}")
+    if window is not None and window < 1:
+        raise ValueError(f"window must be >= 1, got {window}")
+    if scale is None:
+        scale = 1.0 / (hd**0.5)
+
+    kernel = functools.partial(
+        _paged_kernel, scale=scale, window=window, page=page,
+        pmax=pmax, s=s,
+    )
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        # block_tables drives the K/V index maps; positions backs the
+        # scalar page-skip predicate (its vector copy rides in VMEM)
+        num_scalar_prefetch=2,
+        grid=(b, h, pmax),
+        in_specs=[
+            pl.BlockSpec((1, s, 1, hd),
+                         lambda bi, hi, pi, bt, pq: (bi, 0, hi, 0)),
+            pl.BlockSpec((1, s),
+                         lambda bi, hi, pi, bt, pq: (bi, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda bi, hi, pi, bt, pq:
+                         (bt[bi, pi], 0, hi // group, 0)),
+            pl.BlockSpec((1, page, 1, hd),
+                         lambda bi, hi, pi, bt, pq:
+                         (bt[bi, pi], 0, hi // group, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, s, 1, hd),
+                         lambda bi, hi, pi, bt, pq: (bi, 0, hi, 0)),
+            pl.BlockSpec((1, 1, s),
+                         lambda bi, hi, pi, bt, pq: (bi, hi, 0)),
+            pl.BlockSpec((1, 1, s),
+                         lambda bi, hi, pi, bt, pq: (bi, hi, 0)),
+        ],
+    )
+    o, _, _ = pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=[
+            jax.ShapeDtypeStruct((b, s, h, hd), jnp.float32),
+            jax.ShapeDtypeStruct((b, h, s), jnp.float32),  # m (scratch-ish)
+            jax.ShapeDtypeStruct((b, h, s), jnp.float32),  # l (scratch-ish)
+        ],
+        interpret=interpret,
+    )(block_tables.astype(jnp.int32), positions.astype(jnp.int32),
+      q, positions.astype(jnp.int32), k_pages, v_pages)
+    return o

@@ -1,0 +1,36 @@
+"""Pure-jnp oracle for the paged-attention kernel.
+
+Materializes the gathered view and applies exactly the masked softmax
+of `serve.paged_model._attn_core` — the kernel-level parity tests pin
+the fused kernel against this, and the serve-level tests pin the whole
+fused forward against the gather path itself.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def paged_attention_ref(q, k_pages, v_pages, block_tables, positions,
+                        *, window=None, scale=None):
+    """Same signature/semantics as `paged_attention` (q: (B, S, H, Dh),
+    pools (P, page, KV, Dh), block_tables (B, Pmax), positions (B, S));
+    returns (B, S, H, Dh) f32 via the explicit gather."""
+    b, s, h, hd = q.shape
+    _, page, kvh, _ = k_pages.shape
+    group = h // kvh
+    if scale is None:
+        scale = 1.0 / (hd**0.5)
+    smax = block_tables.shape[1] * page
+    kall = k_pages[block_tables].reshape(b, smax, kvh, hd)
+    vall = v_pages[block_tables].reshape(b, smax, kvh, hd)
+    kf = jnp.repeat(kall, group, axis=2).astype(jnp.float32)  # (B,Smax,H,Dh)
+    vf = jnp.repeat(vall, group, axis=2).astype(jnp.float32)
+    sc = jnp.einsum("bshd,bthd->bhst", q.astype(jnp.float32), kf) * scale
+    t = jnp.arange(smax, dtype=jnp.int32)[None, None, :]      # (1, 1, Smax)
+    keep = t <= positions[:, :, None]                         # (B, S, Smax)
+    if window is not None:
+        keep = keep & (t > positions[:, :, None] - window)
+    sc = jnp.where(keep[:, None], sc, -1e30)
+    probs = jnp.exp(sc - jnp.max(sc, axis=-1, keepdims=True))
+    probs = probs / jnp.sum(probs, axis=-1, keepdims=True)
+    return jnp.einsum("bhst,bthd->bshd", probs, vf)

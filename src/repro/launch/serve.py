@@ -112,7 +112,7 @@ def serve_engine(arch: str = "qwen3_8b", smoke: bool = True,
                  top_p: float = 1.0, sample_seed: int = -1,
                  observability: str = "metrics",
                  trace_json: str | None = None,
-                 mesh_shards: int = 1,
+                 mesh_shards: int = 1, attn_impl: str = "gather",
                  params=None) -> dict:
     """Continuous-batching serving over a synthetic Poisson trace (any
     family — the engine routes to the right sequence backend). With
@@ -136,7 +136,7 @@ def serve_engine(arch: str = "qwen3_8b", smoke: bool = True,
         prefill_chunk=prefill_chunk, scheduler=scheduler,
         prefix_sharing=prefix_sharing, n_slots=n_slots,
         max_seq_len=max(max_len + 1, 2), observability=observability,
-        mesh_shards=mesh_shards)
+        mesh_shards=mesh_shards, attn_impl=attn_impl)
     eng = ServeEngine(cfg, params=params, policy=policy, ecfg=ecfg,
                       seed=seed)
     trace = synth_trace(TrafficConfig(
@@ -228,6 +228,12 @@ def main() -> None:
                          "backend (on CPU, simulate devices with "
                          "XLA_FLAGS="
                          "--xla_force_host_platform_device_count=N)")
+    ap.add_argument("--attn-impl", default="gather",
+                    choices=["gather", "fused"],
+                    help="engine: paged attention core — 'fused' walks "
+                         "the block table inside the Pallas kernel "
+                         "(exact policy, mesh_shards=1; interpreted "
+                         "off-TPU)")
     args = ap.parse_args()
     sampled_fraction = args.sampled_fraction
     if sampled_fraction is None:
@@ -257,7 +263,7 @@ def main() -> None:
         temperature=args.temperature, top_k=args.top_k,
         top_p=args.top_p, sample_seed=args.sample_seed,
         observability=args.observability, trace_json=args.trace_json,
-        mesh_shards=args.mesh_shards)
+        mesh_shards=args.mesh_shards, attn_impl=args.attn_impl)
     m = out["metrics"]
     line = (f"engine: {m['n_done']} requests, "
             f"{m['n_generated_tokens']} tokens "

@@ -170,6 +170,7 @@ from repro.serve.paged_cache import (
     init_paged_cache,
 )
 from repro.serve.paged_model import (
+    make_fused_paged_core,
     make_paged_chunked_prefill,
     make_paged_decode,
 )
@@ -213,6 +214,13 @@ class EngineConfig:
     #                                  routes paged families through
     #                                  ShardedPagedBackend on a
     #                                  serve-mesh (serve/mesh.py)
+    attn_impl: str = "gather"        # paged attention core: "gather"
+    #                                  materializes the block table into
+    #                                  a contiguous KV view (reference
+    #                                  path); "fused" walks the block
+    #                                  table inside the Pallas paged-
+    #                                  attention kernel (exact-policy,
+    #                                  single-device; interpreted off-TPU)
 
     def __post_init__(self):
         if self.page_size < 1:
@@ -246,6 +254,10 @@ class EngineConfig:
         if self.mesh_shards < 1:
             raise ValueError(
                 f"mesh_shards must be >= 1, got {self.mesh_shards}")
+        if self.attn_impl not in ("gather", "fused"):
+            raise ValueError(
+                f"attn_impl must be 'gather' or 'fused', got "
+                f"{self.attn_impl!r}")
         jnp.dtype(self.cache_dtype)   # raises on nonsense dtypes
 
 
@@ -329,17 +341,25 @@ class SequenceBackend(abc.ABC):
 
 
 @functools.lru_cache(maxsize=None)
-def _paged_steps(cfg: ModelConfig, policy: ArithmeticPolicy):
+def _paged_steps(cfg: ModelConfig, policy: ArithmeticPolicy,
+                 attn_impl: str = "gather"):
     """Jitted paged steps shared across backends with the same
-    (cfg, policy): a fresh jax.jit wrapper per engine would recompile
-    per instance, which both slows tests and lets compile time leak
-    into benchmark drains (the warmup engine would warm nothing)."""
+    (cfg, policy, attn_impl): a fresh jax.jit wrapper per engine would
+    recompile per instance, which both slows tests and lets compile
+    time leak into benchmark drains (the warmup engine would warm
+    nothing).  attn_impl="fused" swaps the step builders' `paged_core`
+    seam for the Pallas block-table-walking kernel; the engine and
+    scheduler never see the difference."""
+    paged_core = (make_fused_paged_core(cfg, policy)
+                  if attn_impl == "fused" else None)
     # donate the KV pool (arg 2): both steps return the updated pool
     # and the backend overwrites self.cache.kv with it, so XLA can
     # update pages in place instead of copying the whole pool
-    return (jax.jit(make_paged_chunked_prefill(cfg, policy),
+    return (jax.jit(make_paged_chunked_prefill(cfg, policy,
+                                               paged_core=paged_core),
                     donate_argnums=(2,)),
-            jax.jit(make_paged_decode(cfg, policy),
+            jax.jit(make_paged_decode(cfg, policy,
+                                      paged_core=paged_core),
                     donate_argnums=(2,)))
 
 
@@ -455,9 +475,10 @@ class PagedKVBackend(SequenceBackend):
 
     def _steps(self, policy: ArithmeticPolicy):
         """Jitted (prefill, decode) step pair. The single-device base
-        uses the shared `_paged_steps` cache; `ShardedPagedBackend`
-        overrides this with mesh-sharded steps."""
-        return _paged_steps(self.cfg, policy)
+        uses the shared `_paged_steps` cache (routing the engine
+        config's `attn_impl` to the gather or fused attention core);
+        `ShardedPagedBackend` overrides this with mesh-sharded steps."""
+        return _paged_steps(self.cfg, policy, self.ecfg.attn_impl)
 
     # -- admission ----------------------------------------------------------
 

@@ -50,6 +50,7 @@ import jax
 import jax.numpy as jnp
 
 from repro.core.policy import ArithmeticPolicy
+from repro.kernels.paged_attention import paged_attention
 from repro.models import layers as L
 from repro.models import moe as M
 from repro.models import model, transformer
@@ -131,15 +132,52 @@ def _attn_core(qg, kall, vall, positions, cfg: ModelConfig, policy):
     return L.qeinsum("bkgst,btkd->bskgd", probs, vall, policy)
 
 
+def make_fused_paged_core(cfg: ModelConfig, policy: ArithmeticPolicy):
+    """Build the fused-kernel occupant of the `paged_core` seam: a
+    core(qg, ckl, cvl, block_tables, positions) -> (B, S, KV, G, Dh)
+    that hands the RAW page pool to the Pallas paged-attention kernel
+    (`repro.kernels.paged_attention`), which walks the block table
+    in-kernel — no gathered (B, Smax, KV, Dh) view is ever built.
+
+    The kernel computes exact fp32 masked softmax-attention, so it can
+    only stand in for the default core under an exact arithmetic
+    policy; quantized score/context einsums must keep the gather path.
+    Interpret-mode resolution (compiled on TPU, interpreted on CPU)
+    happens inside the kernel wrapper via the shared platform probe.
+    """
+    if policy.is_quantized():
+        raise ValueError(
+            f"attn_impl='fused' computes exact fp32 attention and "
+            f"cannot reproduce quantized policy mode "
+            f"{policy.mode!r}; use attn_impl='gather'")
+    window = cfg.attn_window or None
+
+    def core(qg, ckl, cvl, block_tables, positions):
+        b, s, kvh, g, hd = qg.shape
+        o = paged_attention(
+            qg.reshape(b, s, kvh * g, hd), ckl, cvl, block_tables,
+            positions, window=window, scale=hd ** -0.5)
+        return o.astype(qg.dtype).reshape(b, s, kvh, g, hd)
+
+    return core
+
+
 def _paged_attn_block(lp, x, cfg: ModelConfig, policy, positions,
                       ckl, cvl, block_tables, page_idx, offset,
-                      attn_core=None):
+                      attn_core=None, paged_core=None):
     """One layer's attention with paged K/V. x: (B, S, d).
 
     ckl/cvl: this layer's page pool (P, page, KV, Dh); positions,
     page_idx, offset: (B, S) — the absolute position of every query
     token and its scatter coordinates in the pool (trash page for
     inactive / padding tokens). Returns (attn_out, new ckl, new cvl).
+
+    Two occupants share the attention seam at this call site:
+    `attn_core` consumes the GATHERED (B, Smax, KV, Dh) view (default
+    `_attn_core`; the sharded backend's mesh cores), while
+    `paged_core(qg, ckl, cvl, block_tables, positions)` consumes the
+    raw pool + block tables so the fused kernel can walk pages
+    in-kernel — when it is set, the gather below never happens.
     """
     b, s, _ = x.shape
     h, kvh, hd = cfg.n_heads, cfg.n_kv_heads, cfg.resolved_head_dim
@@ -157,26 +195,30 @@ def _paged_attn_block(lp, x, cfg: ModelConfig, policy, positions,
     ckl = ckl.at[page_idx, offset].set(kh.astype(ckl.dtype))
     cvl = cvl.at[page_idx, offset].set(vh.astype(cvl.dtype))
 
-    # gather each row's block table back to a contiguous KV view:
-    # (B, Pmax, page, KV, Dh) -> (B, Smax, KV, Dh), position order —
-    # this view already contains the K/V scattered just above, so
-    # chunk tokens attend to earlier tokens of the same chunk
-    pmax, page = block_tables.shape[1], ckl.shape[1]
-    smax = pmax * page
-    kall = ckl[block_tables].reshape(b, smax, kvh, hd).astype(x.dtype)
-    vall = cvl[block_tables].reshape(b, smax, kvh, hd).astype(x.dtype)
-
     g = h // kvh
     qg = qh.reshape(b, s, kvh, g, hd)
-    core = attn_core if attn_core is not None else _attn_core
-    ctx = core(qg, kall, vall, positions, cfg, policy)
+    if paged_core is not None:
+        # fused path: the kernel reads the pool just written above, so
+        # chunk tokens still attend to earlier tokens of the same chunk
+        ctx = paged_core(qg, ckl, cvl, block_tables, positions)
+    else:
+        # gather each row's block table back to a contiguous KV view:
+        # (B, Pmax, page, KV, Dh) -> (B, Smax, KV, Dh), position order —
+        # this view already contains the K/V scattered just above, so
+        # chunk tokens attend to earlier tokens of the same chunk
+        pmax, page = block_tables.shape[1], ckl.shape[1]
+        smax = pmax * page
+        kall = ckl[block_tables].reshape(b, smax, kvh, hd).astype(x.dtype)
+        vall = cvl[block_tables].reshape(b, smax, kvh, hd).astype(x.dtype)
+        core = attn_core if attn_core is not None else _attn_core
+        ctx = core(qg, kall, vall, positions, cfg, policy)
     ctx = ctx.reshape(b, s, h * hd)
     return L.mm(ctx, p["wo"], policy), ckl, cvl
 
 
 def _paged_forward(params, cfg: ModelConfig, policy, tokens, kv,
                    block_tables, positions, page_idx, offset,
-                   attn_core=None):
+                   attn_core=None, paged_core=None):
     """Full-model paged step: embed -> layers -> logits (B, S, V)."""
     dtype = jnp.dtype(cfg.compute_dtype)
     x = transformer._embed_tokens(params, cfg, tokens, dtype)   # (B, S, d)
@@ -191,7 +233,7 @@ def _paged_forward(params, cfg: ModelConfig, policy, tokens, kv,
         h, ckl, cvl = _paged_attn_block(
             lp, ln(lp["ln1"], x), cfg, policy, positions,
             ckl, cvl, block_tables, page_idx, offset,
-            attn_core=attn_core)
+            attn_core=attn_core, paged_core=paged_core)
         x = x + h
         if cfg.family == "moe":
             f, _ = M.moe_ffn(lp["moe"], ln(lp["ln2"], x), cfg, policy)
@@ -218,7 +260,7 @@ def _paged_forward(params, cfg: ModelConfig, policy, tokens, kv,
 
 def make_paged_chunked_prefill(cfg: ModelConfig,
                                policy: ArithmeticPolicy = ArithmeticPolicy(),
-                               attn_core=None):
+                               attn_core=None, paged_core=None):
     """Returns chunked_prefill(params, tokens, kv, block_tables,
     start_pos, chunk_lens, active, write_from) -> (logits (B, C, V), kv).
 
@@ -250,7 +292,7 @@ def make_paged_chunked_prefill(cfg: ModelConfig,
         offset = jnp.where(do_write, positions % page, 0)
         return _paged_forward(params, cfg, policy, tokens, kv,
                               block_tables, positions, page_idx, offset,
-                              attn_core=attn_core)
+                              attn_core=attn_core, paged_core=paged_core)
 
     return chunked_prefill
 
@@ -262,7 +304,7 @@ def make_paged_chunked_prefill(cfg: ModelConfig,
 
 def make_paged_decode(cfg: ModelConfig,
                       policy: ArithmeticPolicy = ArithmeticPolicy(),
-                      attn_core=None):
+                      attn_core=None, paged_core=None):
     """Returns decode(params, tokens, kv, block_tables, seq_lens, active)
     -> (logits (B, V), kv). One token per lane at a fixed batch shape."""
     _check_family(cfg)
@@ -278,7 +320,8 @@ def make_paged_decode(cfg: ModelConfig,
         offset = jnp.where(active, seq_lens % page, 0)[:, None]
         logits, kv = _paged_forward(params, cfg, policy, tokens, kv,
                                     block_tables, positions, page_idx,
-                                    offset, attn_core=attn_core)
+                                    offset, attn_core=attn_core,
+                                    paged_core=paged_core)
         return logits[:, 0], kv
 
     return decode

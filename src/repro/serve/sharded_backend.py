@@ -172,6 +172,12 @@ class ShardedPagedBackend(PagedKVBackend):
                 "ShardedPagedBackend needs a multi-shard ServeMesh; "
                 "single-device serving uses PagedKVBackend "
                 "(mesh_shards=1)")
+        if ecfg.attn_impl != "gather":
+            raise ValueError(
+                f"attn_impl={ecfg.attn_impl!r} has no multi-device "
+                f"path (the fused paged kernel is single-device; the "
+                f"mesh cores own the sharded gather view) — set "
+                f"attn_impl='gather' or mesh_shards=1")
         super().__init__(cfg, ecfg, policy, params, obs, clock,
                          mesh=mesh)
         reg = obs.registry

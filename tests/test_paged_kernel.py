@@ -1,0 +1,301 @@
+"""Fused paged-attention parity suite.
+
+Three altitudes, matching the seams the fused kernel crosses:
+
+  kernel    `kernels.paged_attention` vs the explicit-gather oracle
+            (`paged_attention_ref` — `_attn_core` semantics) across
+            page sizes, GQA group counts, window on/off, chunk
+            boundaries that straddle pages, and trash-page lanes.
+  step      `make_paged_chunked_prefill` / `make_paged_decode` with
+            the fused `paged_core` vs the default gather core —
+            full-model logits at fp32 tolerance, multi-chunk prompts.
+  engine    a full mixed greedy/sampled drain with a forced mid-flight
+            preemption at `attn_impl="fused"` is TOKEN-IDENTICAL to
+            the gather engine — the tentpole's acceptance pin.
+
+Plus the `attn_impl` knob's validation/rejection surfaces (EngineConfig,
+quantized policies, the sharded backend's make_backend-style error).
+"""
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import configs
+from repro.core.policy import ArithmeticPolicy
+from repro.kernels.paged_attention import (paged_attention,
+                                           paged_attention_ref)
+from repro.models import model
+from repro.serve import (EngineConfig, ServeEngine, TrafficConfig,
+                         synth_trace)
+from repro.serve.paged_model import (make_fused_paged_core,
+                                     make_paged_chunked_prefill,
+                                     make_paged_decode)
+from repro.serve.request import RequestState
+
+TOL = dict(rtol=2e-5, atol=2e-5)
+
+
+def _rand(key, shape):
+    return jax.random.normal(key, shape, jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# kernel-level parity vs the gather oracle
+# ---------------------------------------------------------------------------
+
+
+class TestPagedKernelParity:
+    def _operands(self, seed, *, b, s, h, kvh, hd, npages, page, pmax,
+                  starts):
+        ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+        q = _rand(ks[0], (b, s, h, hd))
+        kp = _rand(ks[1], (npages, page, kvh, hd))
+        vp = _rand(ks[2], (npages, page, kvh, hd))
+        bt = jax.random.randint(ks[3], (b, pmax), 0, npages, jnp.int32)
+        pos = (jnp.asarray(starts, jnp.int32)[:, None]
+               + jnp.arange(s, dtype=jnp.int32)[None])
+        return q, kp, vp, bt, pos
+
+    @pytest.mark.parametrize("page", [4, 8])
+    @pytest.mark.parametrize("h,kvh", [(4, 4), (8, 2), (4, 1)])
+    @pytest.mark.parametrize("window", [None, 3])
+    def test_matches_gather_oracle(self, page, h, kvh, window):
+        # starts straddle page boundaries (none page-aligned), rows at
+        # different depths of their tables
+        q, kp, vp, bt, pos = self._operands(
+            page * 31 + h, b=3, s=7, h=h, kvh=kvh, hd=16, npages=12,
+            page=page, pmax=5, starts=[0, page - 1, 2 * page + 1])
+        o = paged_attention(q, kp, vp, bt, pos, window=window)
+        r = paged_attention_ref(q, kp, vp, bt, pos, window=window)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), **TOL)
+
+    def test_decode_shape(self):
+        # S == 1 (the decode step) with per-lane depths incl. lane 0
+        q, kp, vp, bt, pos = self._operands(
+            5, b=3, s=1, h=8, kvh=2, hd=16, npages=10, page=4, pmax=5,
+            starts=[5, 0, 19])
+        o = paged_attention(q, kp, vp, bt, pos)
+        r = paged_attention_ref(q, kp, vp, bt, pos)
+        np.testing.assert_allclose(np.asarray(o), np.asarray(r), **TOL)
+
+    def test_chunk_straddles_page_boundary(self):
+        # a 6-token chunk crossing from page j to page j+1 mid-chunk
+        page = 4
+        q, kp, vp, bt, pos = self._operands(
+            7, b=2, s=6, h=4, kvh=2, hd=8, npages=8, page=page, pmax=4,
+            starts=[page - 2, 2 * page - 3])
+        for window in (None, 2):
+            o = paged_attention(q, kp, vp, bt, pos, window=window)
+            r = paged_attention_ref(q, kp, vp, bt, pos, window=window)
+            np.testing.assert_allclose(np.asarray(o), np.asarray(r),
+                                       **TOL)
+
+    def test_trash_page_lanes_never_contribute(self):
+        """Unused table slots hold the trash page (0); whatever sits
+        there must not leak into valid queries.  Two pools differing
+        ONLY in trash-page contents must agree on every valid row."""
+        b, s, h, kvh, hd, page, pmax = 2, 4, 4, 2, 8, 4, 4
+        ks = jax.random.split(jax.random.PRNGKey(11), 4)
+        q = _rand(ks[0], (b, s, h, hd))
+        kp = _rand(ks[1], (6, page, kvh, hd))
+        vp = _rand(ks[2], (6, page, kvh, hd))
+        # row 0: 2 real pages + 2 trash slots; row 1: idle lane (all
+        # trash, positions parked at 0 — the engine's inactive shape)
+        bt = jnp.asarray([[1, 2, 0, 0], [0, 0, 0, 0]], jnp.int32)
+        pos = jnp.asarray([[4, 5, 6, 7], [0, 0, 0, 0]], jnp.int32)
+        poisoned_k = kp.at[0].set(1e3)
+        poisoned_v = vp.at[0].set(1e3)
+        o = paged_attention(q, kp, vp, bt, pos)
+        op = paged_attention(q, poisoned_k, poisoned_v, bt, pos)
+        # valid row unaffected by trash contents
+        np.testing.assert_allclose(np.asarray(o[0]), np.asarray(op[0]),
+                                   rtol=0, atol=0)
+        # and it matches the oracle
+        r = paged_attention_ref(q, kp, vp, bt, pos)
+        np.testing.assert_allclose(np.asarray(o[0]), np.asarray(r[0]),
+                                   **TOL)
+        # idle lane output is finite garbage, never NaN/inf
+        assert np.isfinite(np.asarray(o[1])).all()
+
+    def test_shape_validation(self):
+        q, kp, vp, bt, pos = self._operands(
+            3, b=2, s=4, h=4, kvh=2, hd=8, npages=6, page=4, pmax=3,
+            starts=[0, 1])
+        with pytest.raises(ValueError, match="multiple"):
+            paged_attention(q[:, :, :3], kp, vp, bt, pos)
+        with pytest.raises(ValueError, match="batch mismatch"):
+            paged_attention(q, kp, vp, bt[:1], pos)
+        with pytest.raises(ValueError, match="window"):
+            paged_attention(q, kp, vp, bt, pos, window=0)
+
+
+# ---------------------------------------------------------------------------
+# step-level parity: fused paged_core vs the default gather core
+# ---------------------------------------------------------------------------
+
+
+@functools.lru_cache(maxsize=None)
+def _smoke(attn_window: int = 0):
+    cfg = dataclasses.replace(configs.get_config("qwen3_8b", smoke=True),
+                              compute_dtype="float32",
+                              attn_window=attn_window)
+    params = model.init(jax.random.PRNGKey(0), cfg)
+    return cfg, params
+
+
+def _fresh_kv(cfg, n_pages, page):
+    shape = (cfg.n_layers, n_pages, page, cfg.n_kv_heads,
+             cfg.resolved_head_dim)
+    return {"k": jnp.zeros(shape, jnp.float32),
+            "v": jnp.zeros(shape, jnp.float32)}
+
+
+@pytest.mark.parametrize("attn_window", [0, 6])
+def test_fused_steps_match_gather_logits(attn_window):
+    """Two prefill chunks + one decode round, fused vs gather, same
+    pool/tables — full-model logits agree at fp32 tolerance on every
+    valid row (the engine only ever reads valid rows)."""
+    cfg, params = _smoke(attn_window)
+    policy = ArithmeticPolicy()
+    page, n_pages, pmax, b, chunk = 4, 16, 4, 2, 6
+    fused = make_fused_paged_core(cfg, policy)
+    builders = {
+        "gather": (make_paged_chunked_prefill(cfg, policy),
+                   make_paged_decode(cfg, policy)),
+        "fused": (make_paged_chunked_prefill(cfg, policy,
+                                             paged_core=fused),
+                  make_paged_decode(cfg, policy, paged_core=fused)),
+    }
+    rng = np.random.default_rng(0)
+    # row 0: 9-token prompt split 6+3 across two chunks (pages 1-3);
+    # row 1: 5-token prompt in one chunk (pages 4-5), idle in chunk 2
+    toks1 = jnp.asarray(rng.integers(2, cfg.vocab_size, (b, chunk)),
+                        jnp.int32)
+    toks2 = jnp.asarray(rng.integers(2, cfg.vocab_size, (b, chunk)),
+                        jnp.int32)
+    dtok = jnp.asarray(rng.integers(2, cfg.vocab_size, (b, 1)), jnp.int32)
+    bt = jnp.asarray([[1, 2, 3, 0], [4, 5, 0, 0]], jnp.int32)
+    zeros = jnp.zeros((b,), jnp.int32)
+    out = {}
+    for name, (prefill, decode) in builders.items():
+        kv = _fresh_kv(cfg, n_pages, page)
+        l1, kv = prefill(params, toks1, kv, bt,
+                         zeros, jnp.asarray([6, 5], jnp.int32),
+                         jnp.asarray([True, True]), zeros)
+        l2, kv = prefill(params, toks2, kv, bt,
+                         jnp.asarray([6, 0], jnp.int32),
+                         jnp.asarray([3, 0], jnp.int32),
+                         jnp.asarray([True, False]), zeros)
+        l3, kv = decode(params, dtok, kv, bt,
+                        jnp.asarray([9, 5], jnp.int32),
+                        jnp.asarray([True, True]))
+        out[name] = (np.asarray(l1[0, :6]), np.asarray(l1[1, :5]),
+                     np.asarray(l2[0, :3]), np.asarray(l3))
+    for got, want in zip(out["fused"], out["gather"]):
+        np.testing.assert_allclose(got, want, rtol=2e-4, atol=2e-4)
+
+
+def test_fused_greedy_tokens_match_gather():
+    """Argmax over the step logits (what greedy decode consumes) is
+    bit-identical fused vs gather on the same inputs."""
+    cfg, params = _smoke()
+    policy = ArithmeticPolicy()
+    fused = make_fused_paged_core(cfg, policy)
+    page, n_pages = 4, 16
+    rng = np.random.default_rng(3)
+    toks = jnp.asarray(rng.integers(2, cfg.vocab_size, (2, 1)), jnp.int32)
+    bt = jnp.asarray([[1, 2, 0], [3, 0, 0]], jnp.int32)
+    lens = jnp.asarray([7, 2], jnp.int32)
+    active = jnp.asarray([True, True])
+    kv = _fresh_kv(cfg, n_pages, page)
+    kv["k"] = kv["k"].at[:, 1:4].set(
+        _rand(jax.random.PRNGKey(8),
+              kv["k"][:, 1:4].shape))
+    kv["v"] = kv["v"].at[:, 1:4].set(
+        _rand(jax.random.PRNGKey(9),
+              kv["v"][:, 1:4].shape))
+    lg, _ = make_paged_decode(cfg, policy)(
+        params, toks, {k: v.copy() for k, v in kv.items()}, bt, lens,
+        active)
+    lf, _ = make_paged_decode(cfg, policy, paged_core=fused)(
+        params, toks, {k: v.copy() for k, v in kv.items()}, bt, lens,
+        active)
+    assert jnp.array_equal(jnp.argmax(lg, -1), jnp.argmax(lf, -1))
+
+
+# ---------------------------------------------------------------------------
+# engine-level conformance: attn_impl="fused" drain token identity
+# ---------------------------------------------------------------------------
+
+
+def _engine(attn_impl, **overrides):
+    cfg, params = _smoke()
+    kw = dict(page_size=8, n_pages=64, max_batch=3, max_pages_per_seq=8,
+              prefill_chunk=8, cache_dtype="float32",
+              attn_impl=attn_impl)
+    kw.update(overrides)
+    return ServeEngine(cfg, params=params, ecfg=EngineConfig(**kw))
+
+
+def test_fused_drain_matches_gather_token_identically():
+    """The tentpole's acceptance pin: draining the SAME mixed
+    greedy/sampled trace — with a forced mid-flight preemption — at
+    attn_impl="fused" produces byte-identical token streams to the
+    gather-path engine."""
+    cfg, _ = _smoke()
+    trace = synth_trace(TrafficConfig(
+        n_requests=5, arrival_rate=1e8, prompt_len_min=3,
+        prompt_len_max=18, gen_len_min=2, gen_len_max=8,
+        vocab_size=cfg.vocab_size, seed=61, sampled_fraction=0.5,
+        temperature=0.9, top_k=24, top_p=0.95))
+
+    def drain(attn_impl):
+        eng = _engine(attn_impl)
+        eng.submit_trace(trace)
+        preempted = False
+        for _ in range(600):
+            if not preempted:
+                decoding = [r for r in eng.requests.values()
+                            if r.state is RequestState.DECODE]
+                if decoding:
+                    eng._preempt(decoding[0])
+                    preempted = True
+            if eng.step() is None:
+                break
+        eng.drain()
+        assert preempted, "trace never reached a preemptable decode"
+        eng.backend.check_invariants()
+        return {i: eng.results()[i].tolist() for i in range(len(trace))}
+
+    assert drain("fused") == drain("gather"), (
+        "fused drain diverged from the gather-path reference")
+
+
+# ---------------------------------------------------------------------------
+# knob validation / rejection surfaces
+# ---------------------------------------------------------------------------
+
+
+def test_engine_config_rejects_unknown_attn_impl():
+    with pytest.raises(ValueError, match="attn_impl"):
+        EngineConfig(attn_impl="bogus")
+
+
+def test_fused_core_rejects_quantized_policy():
+    cfg, _ = _smoke()
+    with pytest.raises(ValueError, match="quantized"):
+        make_fused_paged_core(cfg, ArithmeticPolicy(mode="int8"))
+
+
+def test_sharded_backend_rejects_fused():
+    """Fused + TP is rejected with the make_backend-style error, not a
+    silent fallback."""
+    if jax.device_count() < 8:
+        pytest.skip(f"needs 8 devices, have {jax.device_count()}")
+    with pytest.raises(ValueError, match="attn_impl='gather' or "
+                                         "mesh_shards=1"):
+        _engine("fused", mesh_shards=8)
